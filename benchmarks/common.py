@@ -1,0 +1,77 @@
+"""Shared benchmark harness: KB setup, method evaluation, CSV output."""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CenterNorm, CompressionPipeline, build_method
+from repro.data import make_dpr_like_kb
+from repro.data.synthetic import KBData
+from repro.retrieval import r_precision
+from repro.retrieval.rprecision import make_dim_drop_scorer
+
+
+def default_kb(dataset: str = "hotpot-like", n_docs: int = 20_000,
+               n_queries: int = 400) -> KBData:
+    """HotpotQA-like (harder, 2-hop) or NQ-like (easier: less query noise,
+    smaller pool — reproduces the paper's higher NQ numbers)."""
+    if dataset == "nq-like":
+        return make_dpr_like_kb(n_queries=n_queries,
+                                n_docs=int(n_docs * 0.75),
+                                query_noise=0.35, beta_sigma=0.55, seed=13)
+    return make_dpr_like_kb(n_queries=n_queries, n_docs=n_docs)
+
+
+def evaluate_method(kb: KBData, method: str, dim: int = 128, *,
+                    pre: bool = True, post: bool = True,
+                    sims=("ip",), ae_epochs: int = 5,
+                    seed: int = 0) -> dict[str, float]:
+    """Fit + transform + R-Precision for each similarity. Returns metrics."""
+    import jax
+
+    greedy_scorer = None
+    if method == "greedy_dim_drop":
+        greedy_scorer = make_dim_drop_scorer(kb.relevant, n_queries=256,
+                                             n_docs=8192)
+    t0 = time.time()
+    pipe = build_method(method, dim, pre=pre, post=post,
+                        greedy_scorer=greedy_scorer, ae_epochs=ae_epochs)
+    docs, queries = pipe.fit_transform(kb.docs, kb.queries,
+                                       rng=jax.random.PRNGKey(seed))
+    fit_s = time.time() - t0
+    out = {"fit_s": fit_s,
+           "ratio": pipe.compression_ratio(kb.dim)}
+    for sim in sims:
+        out[f"rprec_{sim}"] = r_precision(queries, docs, kb.relevant,
+                                          sim=sim)
+    return out
+
+
+def print_csv(rows: list[dict], columns: list[str]) -> None:
+    print(",".join(columns))
+    for r in rows:
+        print(",".join(_fmt(r.get(c)) for c in columns))
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return ""
+    if isinstance(v, float):
+        return f"{v:.4f}"
+    return str(v)
+
+
+def base_parser(desc: str) -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=desc)
+    ap.add_argument("--dataset", default="hotpot-like",
+                    choices=("hotpot-like", "nq-like"))
+    ap.add_argument("--n-docs", type=int, default=20_000)
+    ap.add_argument("--n-queries", type=int, default=400)
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller grids for CI")
+    return ap

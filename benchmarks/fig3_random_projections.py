@@ -1,0 +1,38 @@
+"""Paper Figure 3: random-projection methods across target dimensions."""
+
+from __future__ import annotations
+
+from benchmarks.common import (base_parser, default_kb, evaluate_method,
+                               print_csv)
+
+METHODS = ("gaussian_projection", "sparse_projection", "dim_drop",
+           "greedy_dim_drop")
+DIMS = (32, 64, 128, 256, 512)
+
+
+def main(argv=None) -> list[dict]:
+    ap = base_parser("Paper Fig. 3: random projections")
+    ap.add_argument("--runs", type=int, default=3,
+                    help="max over N runs (paper reports max of 3)")
+    args = ap.parse_args(argv)
+    kb = default_kb(args.dataset, args.n_docs, args.n_queries)
+    dims = DIMS[:3] if args.fast else DIMS
+
+    rows = []
+    for method in METHODS:
+        runs = 1 if method == "greedy_dim_drop" else args.runs
+        for dim in dims:
+            best = None
+            for seed in range(runs):
+                r = evaluate_method(kb, method, dim, sims=("ip",),
+                                    seed=seed)["rprec_ip"]
+                best = r if best is None else max(best, r)
+            rows.append({"method": method, "dim": dim, "rprec_ip": best})
+            print(f"  {method:22s} d'={dim:4d} rprec={best:.3f}", flush=True)
+    print()
+    print_csv(rows, ["method", "dim", "rprec_ip"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper Figure 4: PCA / autoencoder × fit-set (docs/queries/both) ×
+pre-processing (4 combinations of centering and normalizing)."""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import base_parser, default_kb, print_csv
+from repro.core import (Autoencoder, AutoencoderConfig, Center,
+                        CompressionPipeline, Normalize, PCA)
+from repro.retrieval import r_precision
+
+PREPROC = {
+    "raw": [],
+    "center": [Center()],
+    "norm": [Normalize()],
+    "center_norm": [Center(), Normalize()],
+}
+
+
+def main(argv=None) -> list[dict]:
+    ap = base_parser("Paper Fig. 4: PCA/AE fit-set × preprocessing")
+    ap.add_argument("--dim", type=int, default=128)
+    ap.add_argument("--ae-epochs", type=int, default=5)
+    args = ap.parse_args(argv)
+    kb = default_kb(args.dataset, args.n_docs, args.n_queries)
+
+    rows = []
+    models = ["pca"] if args.fast else ["pca", "ae_linear"]
+    for model in models:
+        for prep_name, prep in PREPROC.items():
+            for fit_on in ("docs", "queries", "both"):
+                stages = [type(t)() for t in prep]
+                if model == "pca":
+                    core = PCA(args.dim, fit_on=fit_on)
+                else:
+                    core = Autoencoder(AutoencoderConfig(
+                        variant="linear", bottleneck=args.dim,
+                        fit_on=fit_on, epochs=args.ae_epochs))
+                pipe = CompressionPipeline(stages + [core])
+                d, q = pipe.fit_transform(kb.docs, kb.queries,
+                                          rng=jax.random.PRNGKey(0))
+                row = {"model": model, "preproc": prep_name,
+                       "fit_on": fit_on,
+                       "rprec_ip": r_precision(q, d, kb.relevant, "ip")}
+                rows.append(row)
+                print(f"  {model:10s} prep={prep_name:12s} "
+                      f"fit={fit_on:8s} rprec={row['rprec_ip']:.3f}",
+                      flush=True)
+    print()
+    print_csv(rows, ["model", "preproc", "fit_on", "rprec_ip"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Figure 5: PCA dimension × precision-reduction combinations."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import base_parser, default_kb, print_csv
+from repro.core import (CenterNorm, CompressionPipeline, FloatCast,
+                        Int8Quantizer, OneBitQuantizer, PCA)
+from repro.retrieval import r_precision
+
+PRECISIONS = {
+    "fp32": None,
+    "fp16": lambda: FloatCast(jnp.float16),
+    "int8": Int8Quantizer,
+    "1bit": lambda: OneBitQuantizer(0.5),
+}
+DIMS = (32, 64, 128, 245, 512, 768)
+
+
+def main(argv=None) -> list[dict]:
+    ap = base_parser("Paper Fig. 5: PCA × precision reduction")
+    args = ap.parse_args(argv)
+    kb = default_kb(args.dataset, args.n_docs, args.n_queries)
+    dims = (64, 128, 245) if args.fast else DIMS
+
+    rows = []
+    for dim in dims:
+        for prec_name, prec in PRECISIONS.items():
+            stages = [CenterNorm()]
+            if dim < kb.dim:
+                stages.append(PCA(dim))
+                stages.append(CenterNorm())
+            if prec is not None:
+                stages.append(prec())
+            pipe = CompressionPipeline(stages)
+            d, q = pipe.fit_transform(kb.docs, kb.queries,
+                                      rng=jax.random.PRNGKey(0))
+            row = {"dim": dim, "precision": prec_name,
+                   "compression": round(pipe.compression_ratio(kb.dim), 1),
+                   "rprec_ip": r_precision(q, d, kb.relevant, "ip")}
+            rows.append(row)
+            print(f"  d'={dim:4d} {prec_name:5s} "
+                  f"{row['compression']:6.1f}x rprec={row['rprec_ip']:.3f}",
+                  flush=True)
+    print()
+    print_csv(rows, ["dim", "precision", "compression", "rprec_ip"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

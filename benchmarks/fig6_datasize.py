@@ -1,0 +1,83 @@
+"""Paper Figure 6: fit-set size dependence (solid lines) and irrelevant-
+document scaling (dashed lines) for PCA and the linear autoencoder."""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import base_parser, default_kb, print_csv
+from repro.core import (Autoencoder, AutoencoderConfig, CenterNorm,
+                        CompressionPipeline, PCA)
+from repro.data.synthetic import add_distractors
+from repro.retrieval import r_precision
+
+FIT_SIZES = (128, 256, 1024, 4096, 16384)
+DISTRACTORS = (0, 10_000, 40_000)
+
+
+def _eval(kb, core) -> float:
+    pipe = CompressionPipeline([CenterNorm(), core, CenterNorm()])
+    d, q = pipe.fit_transform(kb.docs, kb.queries,
+                              rng=jax.random.PRNGKey(0))
+    return r_precision(q, d, kb.relevant, "ip")
+
+
+def main(argv=None) -> list[dict]:
+    ap = base_parser("Paper Fig. 6: data-size dependence")
+    ap.add_argument("--dim", type=int, default=128)
+    ap.add_argument("--ae-epochs", type=int, default=5)
+    args = ap.parse_args(argv)
+    kb = default_kb(args.dataset, args.n_docs, args.n_queries)
+    sizes = FIT_SIZES[:3] if args.fast else FIT_SIZES
+
+    rows = []
+    for n_fit in sizes:
+        if n_fit < args.dim:
+            continue
+        r_pca = _eval(kb, PCA(args.dim, max_fit_samples=n_fit))
+        rows.append({"model": "pca", "axis": "fit_size", "x": n_fit,
+                     "rprec_ip": r_pca})
+        print(f"  pca fit_size={n_fit:6d} rprec={r_pca:.3f}", flush=True)
+        if not args.fast:
+            ae = Autoencoder(AutoencoderConfig(
+                variant="linear", bottleneck=args.dim,
+                epochs=args.ae_epochs))
+            pipe = CompressionPipeline([CenterNorm()])
+            pipe.fit(kb.docs, kb.queries)
+            docs_n = pipe.transform(kb.docs, "docs")
+            queries_n = pipe.transform(kb.queries, "queries")
+            ae.fit(docs_n[:n_fit])
+            post = CenterNorm().fit(ae(docs_n), ae(queries_n, "queries"))
+            d = post(ae(docs_n), "docs")
+            q = post(ae(queries_n, "queries"), "queries")
+            r_ae = r_precision(q, d, kb.relevant, "ip")
+            rows.append({"model": "ae_linear", "axis": "fit_size",
+                         "x": n_fit, "rprec_ip": r_ae})
+            print(f"  ae  fit_size={n_fit:6d} rprec={r_ae:.3f}", flush=True)
+
+    # irrelevant-document scaling (fit set fixed at the original corpus)
+    for extra in (DISTRACTORS[:2] if args.fast else DISTRACTORS):
+        big = add_distractors(kb, extra) if extra else kb
+        pipe = CompressionPipeline([CenterNorm(),
+                                    PCA(args.dim,
+                                        max_fit_samples=len(kb.docs)),
+                                    CenterNorm()])
+        pipe.fit(kb.docs, kb.queries)       # fit on ORIGINAL docs only
+        d = pipe.transform(big.docs, "docs")
+        q = pipe.transform(big.queries, "queries")
+        r = r_precision(q, d, big.relevant, "ip")
+        base = r_precision(
+            CenterNorm().fit(big.docs, big.queries)(big.queries, "queries"),
+            CenterNorm().fit(big.docs, big.queries)(big.docs, "docs"),
+            big.relevant, "ip")
+        rows.append({"model": "pca", "axis": "distractors", "x": extra,
+                     "rprec_ip": r, "uncompressed": base})
+        print(f"  pca distractors={extra:6d} rprec={r:.3f} "
+              f"(uncompressed {base:.3f})", flush=True)
+    print()
+    print_csv(rows, ["model", "axis", "x", "rprec_ip", "uncompressed"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Kernel micro-benchmarks: compressed-index scoring throughput.
+
+Wall-times on this host are CPU numbers (the Pallas TPU path is validated
+for correctness in interpret mode; its performance story is the §Roofline
+analysis).  What IS meaningful here: the *bytes-scanned* reduction of each
+storage format, which is hardware-independent and determines the
+memory-bound roofline on TPU.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import base_parser, print_csv
+from repro.core.quantization import Int8Quantizer, OneBitQuantizer, pack_bits
+from repro.kernels.binary_ip import ops as bops
+from repro.kernels.int8_ip import ops as iops
+
+
+def _bench(fn, reps=5):
+    out = fn()
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps
+
+
+def main(argv=None) -> list[dict]:
+    ap = base_parser("kernel micro-benchmarks")
+    args = ap.parse_args(argv)
+    n_docs = 20_000 if args.fast else 100_000
+    n_q, d = 64, 768
+    rng = np.random.default_rng(0)
+    queries = jnp.asarray(rng.standard_normal((n_q, d)), jnp.float32)
+    docs = jnp.asarray(rng.standard_normal((n_docs, d)), jnp.float32)
+
+    rows = []
+
+    t = _bench(lambda: queries @ docs.T)
+    rows.append({"kernel": "fp32_gemm", "bytes_per_doc": d * 4,
+                 "us_per_call": t * 1e6,
+                 "gdocs_per_s": n_q * n_docs / t / 1e9})
+
+    quant = Int8Quantizer().fit(docs)
+    codes = quant.encode(docs)
+    t = _bench(lambda: iops.int8_scores(
+        queries, codes, quant.state["scale"], quant.state["zero"]))
+    rows.append({"kernel": "int8_scores(jnp)", "bytes_per_doc": d,
+                 "us_per_call": t * 1e6,
+                 "gdocs_per_s": n_q * n_docs / t / 1e9})
+
+    packed = pack_bits(docs)
+    t = _bench(lambda: bops.binary_ip_scores(queries, packed, d))
+    rows.append({"kernel": "binary_ip(jnp)", "bytes_per_doc": d // 8,
+                 "us_per_call": t * 1e6,
+                 "gdocs_per_s": n_q * n_docs / t / 1e9})
+
+    for r in rows:
+        print(f"  {r['kernel']:18s} {r['bytes_per_doc']:5d} B/doc "
+              f"{r['us_per_call']:12.0f} us "
+              f"{r['gdocs_per_s']:.3f} Gdoc-score/s", flush=True)
+    print()
+    print_csv(rows, ["kernel", "bytes_per_doc", "us_per_call",
+                     "gdocs_per_s"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

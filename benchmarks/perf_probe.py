@@ -1,0 +1,126 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402
+"""Perf-iteration probe: one (arch × shape) cell with config overrides.
+
+    PYTHONPATH=src python -m benchmarks.perf_probe --arch dbrx-132b \
+        --shape train_4k --set train_microbatches=16 --set attn_q_chunk=512
+
+Prints the deployment-pass memory and the cost-pass roofline terms, so a
+hypothesis → change → measure cycle is one command.  Overrides apply to the
+model config (dataclasses.replace); ``--rules k=v`` overrides logical-axis
+rules (e.g. --rules kv_seq=model).
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from repro.configs.registry import get_arch
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh, rules_for_mesh
+from repro.launch.steps import build_step
+from repro.utils import human_bytes
+
+
+def _parse_val(v: str):
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    if v in ("True", "False"):
+        return v == "True"
+    if v == "None":
+        return None
+    return v
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="model-config override k=v (repeatable)")
+    ap.add_argument("--rules", action="append", default=[],
+                    help="logical-axis rule override k=v; v may be a "
+                         "+-separated axis tuple, e.g. kv_seq=data+model")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--skip-cost", action="store_true",
+                    help="memory pass only (fast)")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    rules = rules_for_mesh(mesh)
+    for kv in args.rules:
+        k, v = kv.split("=", 1)
+        axes = tuple(v.split("+")) if v != "None" else None
+        if axes is not None and len(axes) == 1:
+            axes = axes[0]
+        rules = rules.replace(**{k: axes})
+
+    arch = get_arch(args.arch)
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = _parse_val(v)
+    if overrides:
+        arch = dataclasses.replace(
+            arch, model=dataclasses.replace(arch.model, **overrides))
+    shape = arch.shape(args.shape)
+    chips = mesh.devices.size
+
+    out = {"arch": args.arch, "shape": args.shape, "overrides": overrides,
+           "rules": args.rules}
+
+    t0 = time.time()
+    bundle = build_step(arch, shape, mesh, rules)
+    with mesh:
+        compiled = bundle.lower(mesh).compile()
+    ma = compiled.memory_analysis()
+    mem = int(ma.temp_size_in_bytes + ma.argument_size_in_bytes
+              + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    out["mem_per_dev"] = mem
+    out["mem_h"] = human_bytes(mem)
+    out["compile_s"] = round(time.time() - t0, 1)
+
+    if not args.skip_cost and shape.kind.startswith("lm"):
+        t0 = time.time()
+        cb = build_step(arch, shape, mesh, rules, unroll=True)
+        with mesh:
+            cost_compiled = cb.lower(mesh).compile()
+        out["cost_compile_s"] = round(time.time() - t0, 1)
+    else:
+        cost_compiled = compiled
+
+    mf = bundle.model_flops_fn() if bundle.model_flops_fn else None
+    rep = roofline.analyze(f"{args.arch}:{args.shape}", "16x16", chips,
+                           cost_compiled, mf)
+    rep.hlo_gflops *= chips
+    rep.hlo_gbytes *= chips
+    rep.coll_gbytes *= chips
+    rep.peak_memory_bytes = mem
+    out.update({k: v for k, v in rep.to_dict().items()
+                if k not in ("name", "mesh")})
+
+    if args.json:
+        print(json.dumps(out))
+    else:
+        print(f"\n=== {args.arch}:{args.shape} {overrides} {args.rules}")
+        print(f"  mem/dev       {out['mem_h']}  (compile {out['compile_s']}s)")
+        print(f"  t_compute     {rep.t_compute:.3e} s")
+        print(f"  t_memory      {rep.t_memory:.3e} s")
+        print(f"  t_collective  {rep.t_collective:.3e} s")
+        print(f"  bottleneck    {rep.bottleneck}")
+        print(f"  MODEL/HLO     {rep.flops_efficiency:.3f}")
+        print(f"  roofline frac {rep.roofline_fraction:.4f}")
+        print(f"  collectives   {rep.per_collective}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Render the dry-run results (results/dryrun/results.jsonl) as the
+EXPERIMENTS.md §Roofline table."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from collections import OrderedDict
+
+from repro.utils import human_bytes
+
+DEFAULT = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun",
+                       "results.jsonl")
+
+
+def load(path: str) -> list[dict]:
+    rows = []
+    with open(path) as f:
+        for line in f:
+            rows.append(json.loads(line))
+    # last row per (arch, shape, multi_pod) wins
+    dedup: "OrderedDict[tuple, dict]" = OrderedDict()
+    for r in rows:
+        dedup[(r["arch"], r["shape"], r.get("multi_pod", False))] = r
+    return list(dedup.values())
+
+
+def fmt_row(r: dict) -> str:
+    if r.get("status") != "ok":
+        return (f"| {r['arch']} | {r['shape']} | "
+                f"{'2x16x16' if r.get('multi_pod') else '16x16'} "
+                f"| FAILED: {r.get('status')} |||||||")
+    mem = human_bytes(r.get("peak_memory_bytes") or 0)
+    return ("| {arch} | {shape} | {mesh} | {tc:.2e} | {tm:.2e} | {tl:.2e} "
+            "| {bn} | {mf} | {eff} | {rf} | {mem} {fits} |").format(
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+        tc=r["t_compute_s"], tm=r["t_memory_s"], tl=r["t_collective_s"],
+        bn=r["bottleneck"],
+        mf=(f"{r['model_gflops']:.0f}" if r.get("model_gflops") else "—"),
+        eff=(f"{r['flops_efficiency']:.2f}"
+             if r.get("flops_efficiency") else "—"),
+        rf=(f"{r['roofline_fraction']:.3f}"
+            if r.get("roofline_fraction") is not None else "—"),
+        mem=mem, fits="✓" if r.get("fits_hbm") else "✗")
+
+
+HEADER = ("| arch | shape | mesh | t_compute (s) | t_memory (s) | "
+          "t_collective (s) | bottleneck | MODEL_GFLOPs | MODEL/HLO | "
+          "roofline frac | mem/dev |\n"
+          "|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default=DEFAULT)
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="show multi-pod rows instead of single-pod")
+    args = ap.parse_args(argv)
+    rows = load(args.path)
+    print(HEADER)
+    for r in rows:
+        if bool(r.get("multi_pod", False)) == args.multi_pod:
+            print(fmt_row(r))
+
+
+if __name__ == "__main__":
+    main()

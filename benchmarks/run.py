@@ -1,0 +1,56 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run             # fast CI subset
+    PYTHONPATH=src python -m benchmarks.run --full      # the full grids
+
+Per-table modules are independently runnable with finer flags, e.g.
+``python -m benchmarks.table2_compression --dataset nq-like``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. table2,fig5")
+    args = ap.parse_args()
+    fast = [] if args.full else ["--fast"]
+
+    from benchmarks import (fig3_random_projections, fig4_pca_autoencoder,
+                            fig5_pca_precision, fig6_datasize,
+                            fig7_retrieval_errors, kernel_bench,
+                            speed_appendix_b, table2_compression,
+                            table5_preprocessing)
+
+    suites = {
+        "table2": lambda: table2_compression.main(fast),
+        "table2_nq": lambda: table2_compression.main(
+            fast + ["--dataset", "nq-like"]),
+        "table5": lambda: table5_preprocessing.main([]),
+        "fig3": lambda: fig3_random_projections.main(
+            fast + ["--runs", "1" if not args.full else "3"]),
+        "fig4": lambda: fig4_pca_autoencoder.main(fast),
+        "fig5": lambda: fig5_pca_precision.main(fast),
+        "fig6": lambda: fig6_datasize.main(fast),
+        "fig7": lambda: fig7_retrieval_errors.main([]),
+        "speed": lambda: speed_appendix_b.main(fast),
+        "kernels": lambda: kernel_bench.main(fast),
+    }
+    chosen = (args.only.split(",") if args.only else list(suites))
+    t_all = time.time()
+    for name in chosen:
+        print(f"\n=== {name} " + "=" * (70 - len(name)), flush=True)
+        t0 = time.time()
+        suites[name]()
+        print(f"=== {name} done in {time.time() - t0:.0f}s", flush=True)
+    print(f"\nall benchmarks done in {time.time() - t_all:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

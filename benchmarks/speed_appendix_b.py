@@ -1,0 +1,62 @@
+"""Paper Appendix B: training + encoding speed of PCA vs autoencoder.
+
+The paper compares PyTorch/Scikit CPU/GPU; we compare our JAX
+implementations (jit-compiled) on the host platform, split into train and
+encode phases, across target dimensionality.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import base_parser, default_kb, print_csv
+from repro.core import (Autoencoder, AutoencoderConfig, PCA)
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                      # warm-up / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") \
+            else out
+    return (time.perf_counter() - t0) / reps
+
+
+def main(argv=None) -> list[dict]:
+    ap = base_parser("Paper Appendix B: PCA vs AE speed")
+    ap.add_argument("--ae-epochs", type=int, default=2)
+    args = ap.parse_args(argv)
+    kb = default_kb(args.dataset, min(args.n_docs, 10_000), args.n_queries)
+    dims = (32, 128) if args.fast else (32, 64, 128, 256)
+
+    rows = []
+    for dim in dims:
+        t0 = time.perf_counter()
+        pca = PCA(dim).fit(kb.docs)
+        pca_train = time.perf_counter() - t0
+        pca_encode = _time(lambda: jax.block_until_ready(pca(kb.docs)))
+
+        t0 = time.perf_counter()
+        ae = Autoencoder(AutoencoderConfig(variant="shallow_decoder",
+                                           bottleneck=dim,
+                                           epochs=args.ae_epochs))
+        ae.fit(kb.docs)
+        ae_train = time.perf_counter() - t0
+        ae_encode = _time(lambda: jax.block_until_ready(ae(kb.docs)))
+
+        for model, tr, enc in (("pca", pca_train, pca_encode),
+                               ("autoencoder", ae_train, ae_encode)):
+            rows.append({"model": model, "dim": dim, "train_s": tr,
+                         "encode_s": enc})
+            print(f"  {model:12s} d'={dim:4d} train={tr:7.2f}s "
+                  f"encode={enc * 1e3:8.2f}ms", flush=True)
+    print()
+    print_csv(rows, ["model", "dim", "train_s", "encode_s"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

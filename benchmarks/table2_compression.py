@@ -1,0 +1,78 @@
+"""Paper Table 2 (and Table 7 with --dataset nq-like): the full method grid.
+
+Columns mirror the paper: method, compression ratio, R-Precision with raw
+IP / raw L2 (no pre/post-processing), and with center+norm pre+post.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import (base_parser, default_kb, evaluate_method,
+                               print_csv)
+
+ROWS = [
+    # (label, method, dim)
+    ("Original", "original", 768),
+    ("Gaussian Projection (128)", "gaussian_projection", 128),
+    ("Sparse Projection (128)", "sparse_projection", 128),
+    ("Dimension Dropping (128)", "dim_drop", 128),
+    ("Greedy Dimension Dropping (128)", "greedy_dim_drop", 128),
+    ("PCA (128)", "pca", 128),
+    ("PCA (128, scaled top 5)", "pca_scaled", 128),
+    ("Autoencoder (128, single layer)", "ae_linear", 128),
+    ("Autoencoder (128, full)", "ae_full", 128),
+    ("Autoencoder (128, shallow decoder)", "ae_shallow", 128),
+    ("Autoencoder (128, single layer) + L1", "ae_linear_l1", 128),
+    ("Autoencoder (128, full) + L1", "ae_full_l1", 128),
+    ("Autoencoder (128, shallow decoder) + L1", "ae_shallow_l1", 128),
+    ("Precision 16-bit", "fp16", 768),
+    ("Precision 8-bit", "int8", 768),
+    ("Precision 1-bit (offset 0.5)", "onebit", 768),
+    ("Precision 1-bit (offset 0)", "onebit_offset0", 768),
+    ("PCA (245) + Precision 1-bit", "pca_onebit", 245),
+    ("PCA (128) + Precision 8-bit", "pca_int8", 128),
+]
+
+EXTRAS = [
+    ("Distance learning (128)", "distance_learning", 128),
+    ("Contrastive (128)", "contrastive", 128),
+]
+
+
+def main(argv=None) -> list[dict]:
+    ap = base_parser("Paper Table 2: compression method grid")
+    ap.add_argument("--extras", action="store_true",
+                    help="include the §5.4 distance-learning baselines")
+    ap.add_argument("--ae-epochs", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    kb = default_kb(args.dataset, args.n_docs, args.n_queries)
+    rows = []
+    grid = list(ROWS) + (list(EXTRAS) if args.extras else [])
+    if args.fast:
+        grid = [g for g in grid if not g[1].startswith(("ae_", "greedy"))]
+    baseline = None
+    for label, method, dim in grid:
+        raw = evaluate_method(kb, method, dim, pre=False, post=False,
+                              sims=("ip", "l2"), ae_epochs=args.ae_epochs)
+        cn = evaluate_method(kb, method, dim, pre=True, post=True,
+                             sims=("ip",), ae_epochs=args.ae_epochs)
+        row = {"method": label, "compression": round(raw["ratio"], 1),
+               "raw_ip": raw["rprec_ip"], "raw_l2": raw["rprec_l2"],
+               "center_norm": cn["rprec_ip"]}
+        if method == "original":
+            baseline = cn["rprec_ip"]
+        row["pct_of_original"] = (100.0 * row["center_norm"] / baseline
+                                  if baseline else None)
+        rows.append(row)
+        print(f"  {label:44s} {row['compression']:6.1f}x "
+              f"raw_ip={row['raw_ip']:.3f} raw_l2={row['raw_l2']:.3f} "
+              f"c+n={row['center_norm']:.3f} "
+              f"({row['pct_of_original'] or 0:.0f}%)", flush=True)
+    print()
+    print_csv(rows, ["method", "compression", "raw_ip", "raw_l2",
+                     "center_norm", "pct_of_original"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Paper Table 5 / Figure 2: pre-processing transformations on raw DPR-like
+embeddings (no dimension reduction)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import base_parser, default_kb, print_csv
+from repro.core.preprocess import PreprocessSpec, fit_apply
+from repro.retrieval import r_precision
+
+MODES = ("none", "center", "zscore", "norm", "center_norm", "zscore_norm")
+
+
+def main(argv=None) -> list[dict]:
+    ap = base_parser("Paper Table 5: preprocessing effects")
+    args = ap.parse_args(argv)
+    kb = default_kb(args.dataset, args.n_docs, args.n_queries)
+
+    rows = []
+    for mode in MODES:
+        ts = PreprocessSpec(mode).build()
+        d, q = fit_apply(ts, kb.docs, kb.queries)
+        row = {"mode": mode,
+               "ip": r_precision(q, d, kb.relevant, sim="ip"),
+               "l2": r_precision(q, d, kb.relevant, sim="l2")}
+        rows.append(row)
+        print(f"  {mode:12s} ip={row['ip']:.3f} l2={row['l2']:.3f}",
+              flush=True)
+    print()
+    print_csv(rows, ["mode", "ip", "l2"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

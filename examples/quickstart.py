@@ -1,0 +1,61 @@
+"""Quickstart: compress a KB index 24× and serve queries from it.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a DPR-like synthetic KB, fits the paper's best practical pipeline
+(center+norm → PCA-128 → center+norm → int8), and compares retrieval
+quality + storage against the uncompressed index.
+"""
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core import (CenterNorm, CompressionPipeline, Int8Quantizer, PCA)
+from repro.data import make_dpr_like_kb
+from repro.retrieval import CompressedIndex, DenseIndex, r_precision
+from repro.utils import human_bytes
+
+
+def main() -> None:
+    print("1) synthesizing DPR-like KB (50k docs × 768 dims) ...")
+    kb = make_dpr_like_kb(n_queries=1000, n_docs=50_000)
+    print(f"   doc L2 norm  {kb.meta['doc_l2']:.1f} "
+          f"(paper: 12.3)   query L2 {kb.meta['query_l2']:.1f} (paper: 9.3)")
+
+    print("2) uncompressed baseline ...")
+    pre = CenterNorm().fit(kb.docs, kb.queries)
+    docs_n, queries_n = pre(kb.docs, "docs"), pre(kb.queries, "queries")
+    exact = DenseIndex(docs_n)
+    base_rp = r_precision(queries_n, docs_n, kb.relevant, "ip")
+    print(f"   R-Precision {base_rp:.3f}   index size "
+          f"{human_bytes(exact.nbytes)}")
+
+    print("3) fitting the 24x pipeline (center+norm → PCA-128 → "
+          "center+norm → int8) ...")
+    pipe = CompressionPipeline([CenterNorm(), PCA(128), CenterNorm(),
+                                Int8Quantizer()])
+    t0 = time.time()
+    idx = CompressedIndex.build(kb.docs, kb.queries, pipe)
+    print(f"   fitted + encoded in {time.time() - t0:.1f}s; "
+          f"index size {human_bytes(idx.nbytes)} "
+          f"({exact.nbytes / idx.nbytes:.0f}x smaller)")
+
+    print("4) serving queries from the compressed index ...")
+    t0 = time.time()
+    _, ids = idx.search(kb.queries, k=2)
+    dt = time.time() - t0
+    hits = np.mean([len(set(ids_i.tolist()) & set(rel_i.tolist())) / 2
+                    for ids_i, rel_i in zip(np.asarray(ids), kb.relevant)])
+    print(f"   R-Precision {hits:.3f} "
+          f"({100 * hits / base_rp:.0f}% of uncompressed) "
+          f"at {1000 * dt / len(kb.queries):.2f} ms/query (CPU)")
+
+    print("\npaper's claim: 24x compression retains ~92% retrieval "
+          "performance — reproduced." if hits / base_rp > 0.85 else
+          "\nWARNING: ratio below expectation")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,20 @@
+"""repro — production-grade JAX framework reproducing and extending
+
+    "Knowledge Base Index Compression via Dimensionality and Precision
+     Reduction" (Zouhar, Mosbach, Zhang, Klakow; 2022, cs.IR).
+
+Layers
+------
+- ``repro.core``      : the paper's contribution — post-hoc unsupervised index
+                        compression (PCA, random projections, autoencoders,
+                        precision reduction) with composable pipelines.
+- ``repro.retrieval`` : dense retrieval substrate — exact/IVF top-k search,
+                        sharded multi-pod search, R-Precision evaluation.
+- ``repro.kernels``   : Pallas TPU kernels for the compressed-index hot paths.
+- ``repro.models``    : transformer LM (dense + MoE), SchNet GNN, recsys archs.
+- ``repro.train``     : optimizer, trainer, checkpointing, fault tolerance.
+- ``repro.data``      : deterministic synthetic corpora + sharded loaders.
+- ``repro.launch``    : production mesh, multi-pod dry-run, roofline, CLIs.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,12 @@
+"""Architecture configs: one module per assigned architecture + the paper's
+own DPR-768 retrieval setup.  ``repro.configs.registry`` resolves ``--arch``
+names to :class:`~repro.configs.base.ArchConfig` objects."""
+
+from repro.configs.base import (ArchConfig, DCNConfig, DINConfig, FMConfig,
+                                LMConfig, MoEConfig, SchNetConfig, ShapeSpec,
+                                TwoTowerConfig)
+from repro.configs.registry import ARCH_NAMES, get_arch
+
+__all__ = ["ArchConfig", "DCNConfig", "DINConfig", "FMConfig", "LMConfig",
+           "MoEConfig", "SchNetConfig", "ShapeSpec", "TwoTowerConfig",
+           "ARCH_NAMES", "get_arch"]

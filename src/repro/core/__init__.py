@@ -1,0 +1,37 @@
+"""The paper's primary contribution: unsupervised post-hoc KB index compression.
+
+Public API::
+
+    from repro.core import (CompressionPipeline, PCA, Autoencoder,
+                            Int8Quantizer, OneBitQuantizer, CenterNorm,
+                            build_method)
+"""
+
+from repro.core.autoencoder import (Autoencoder, AutoencoderConfig, PAPER_L1)
+from repro.core.distance_learning import (ContrastiveProjection,
+                                          SimilarityPreservingProjection)
+from repro.core.pca import PCA, fit_pca_distributed, moments
+from repro.core.pipeline import CompressionPipeline
+from repro.core.preprocess import (Center, CenterNorm, Normalize,
+                                   PreprocessSpec, Transform, ZScore)
+from repro.core.quantization import (FloatCast, Int8Quantizer,
+                                     OneBitQuantizer, compression_ratio,
+                                     pack_bits, unpack_bits)
+from repro.core.random_projection import (DimensionDrop, GaussianProjection,
+                                          GreedyDimensionDrop,
+                                          SparseProjection)
+from repro.core.registry import METHODS, build_method, method_compression_ratio
+
+__all__ = [
+    "Autoencoder", "AutoencoderConfig", "PAPER_L1",
+    "ContrastiveProjection", "SimilarityPreservingProjection",
+    "PCA", "fit_pca_distributed", "moments",
+    "CompressionPipeline",
+    "Center", "CenterNorm", "Normalize", "PreprocessSpec", "Transform",
+    "ZScore",
+    "FloatCast", "Int8Quantizer", "OneBitQuantizer", "compression_ratio",
+    "pack_bits", "unpack_bits",
+    "DimensionDrop", "GaussianProjection", "GreedyDimensionDrop",
+    "SparseProjection",
+    "METHODS", "build_method", "method_compression_ratio",
+]

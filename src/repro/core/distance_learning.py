@@ -1,0 +1,177 @@
+"""Distance-preserving and contrastive dimension reduction (paper §5.4).
+
+The paper's negative results, implemented for completeness and ablation:
+
+* **Similarity learning** — fit f minimizing
+  ``MSE(sim(f(tᵢ), f(tⱼ)), sim(tᵢ, tⱼ))`` over sampled pairs, where f is a
+  linear projection (or small MLP).  The optimization goal matches retrieval
+  better than reconstruction loss, but the paper found it slow and
+  under-performing (between sparse projection and PCA) — which our
+  reproduction confirms (benchmarks/table2_compression.py --extras).
+
+* **Contrastive learning** — InfoNCE with nearest neighbours in the original
+  space as positives and distant points as negatives.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.preprocess import Transform
+from repro.train import optimizer as opt_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class DistanceLearnerConfig:
+    dim: int = 128
+    sim: str = "ip"           # ip | l2
+    lr: float = 1e-3
+    batch_size: int = 256
+    steps: int = 2000
+    hidden: int = 0           # 0 → linear projection; else 1 hidden layer
+    seed: int = 0
+
+
+class SimilarityPreservingProjection(Transform):
+    """Learn f with MSE(sim(f(x), f(y)), sim(x, y)) on random pairs."""
+
+    name = "distance_learning"
+
+    def __init__(self, config: DistanceLearnerConfig | None = None, **kw):
+        super().__init__()
+        self.config = config or DistanceLearnerConfig(**kw)
+
+    def _apply(self, params, x):
+        if "w2" in params:
+            h = jnp.tanh(x @ params["w1"] + params["b1"])
+            return h @ params["w2"] + params["b2"]
+        return x @ params["w1"] + params["b1"]
+
+    def _sim(self, a, b):
+        if self.config.sim == "ip":
+            return jnp.einsum("id,jd->ij", a, b)
+        d2 = (jnp.sum(a * a, -1)[:, None] + jnp.sum(b * b, -1)[None, :]
+              - 2 * jnp.einsum("id,jd->ij", a, b))
+        return -d2
+
+    def fit(self, docs, queries=None, rng=None):
+        cfg = self.config
+        x = jnp.asarray(docs, jnp.float32)
+        d_in = x.shape[-1]
+        rng = rng if rng is not None else jax.random.PRNGKey(cfg.seed)
+        k1, k2, k_loop = jax.random.split(rng, 3)
+        if cfg.hidden:
+            params = {
+                "w1": jax.random.normal(k1, (d_in, cfg.hidden)) / np.sqrt(d_in),
+                "b1": jnp.zeros((cfg.hidden,)),
+                "w2": jax.random.normal(k2, (cfg.hidden, cfg.dim))
+                      / np.sqrt(cfg.hidden),
+                "b2": jnp.zeros((cfg.dim,)),
+            }
+        else:
+            params = {"w1": jax.random.normal(k1, (d_in, cfg.dim))
+                            / np.sqrt(d_in),
+                      "b1": jnp.zeros((cfg.dim,))}
+
+        tx = opt_lib.adamw(cfg.lr)
+        opt_state = tx.init(params)
+
+        def loss_fn(params, xa, xb):
+            target = self._sim(xa, xb)
+            pred = self._sim(self._apply(params, xa), self._apply(params, xb))
+            return jnp.mean(jnp.square(pred - target))
+
+        @jax.jit
+        def step(params, opt_state, key):
+            ka, kb = jax.random.split(key)
+            ia = jax.random.randint(ka, (cfg.batch_size,), 0, x.shape[0])
+            ib = jax.random.randint(kb, (cfg.batch_size,), 0, x.shape[0])
+            loss, grads = jax.value_and_grad(loss_fn)(params, x[ia], x[ib])
+            updates, opt_state = tx.update(grads, opt_state, params)
+            return opt_lib.apply_updates(params, updates), opt_state, loss
+
+        keys = jax.random.split(k_loop, cfg.steps)
+        for k in keys:
+            params, opt_state, _ = step(params, opt_state, k)
+        self.params = params
+        for name, v in params.items():
+            self.state[name] = v
+        self.fitted = True
+        return self
+
+    def __call__(self, x, kind="docs"):
+        return self._apply(self.params, x)
+
+    def output_dim(self, input_dim):
+        return self.config.dim
+
+
+class ContrastiveProjection(Transform):
+    """InfoNCE over original-space nearest neighbours (paper §5.4, ¶2)."""
+
+    name = "contrastive"
+
+    def __init__(self, dim: int = 128, lr: float = 1e-3, steps: int = 1000,
+                 batch_size: int = 128, n_neighbors: int = 4,
+                 temperature: float = 0.1, seed: int = 0):
+        super().__init__()
+        self.dim, self.lr, self.steps = dim, lr, steps
+        self.batch_size, self.n_neighbors = batch_size, n_neighbors
+        self.temperature, self.seed = temperature, seed
+
+    def fit(self, docs, queries=None, rng=None):
+        x = jnp.asarray(docs, jnp.float32)
+        n, d_in = x.shape
+        rng = rng if rng is not None else jax.random.PRNGKey(self.seed)
+        k_init, k_loop = jax.random.split(rng)
+        params = {"w": jax.random.normal(k_init, (d_in, self.dim))
+                       / np.sqrt(d_in)}
+
+        # Precompute positives: nearest neighbour (excluding self) on a
+        # subsample — O(n²) is fine at fit-set scale (≤ ~50k).
+        sub = min(n, 20000)
+        xs = x[:sub]
+        sims = xs @ xs.T
+        sims = sims - 1e9 * jnp.eye(sub)
+        positives = jnp.argmax(sims, axis=1)
+
+        tx = opt_lib.adamw(self.lr)
+        opt_state = tx.init(params)
+        temp = self.temperature
+
+        def loss_fn(params, anchors, pos):
+            za = anchors @ params["w"]
+            zp = pos @ params["w"]
+            za = za / (jnp.linalg.norm(za, axis=-1, keepdims=True) + 1e-9)
+            zp = zp / (jnp.linalg.norm(zp, axis=-1, keepdims=True) + 1e-9)
+            logits = za @ zp.T / temp
+            labels = jnp.arange(za.shape[0])
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            return -jnp.mean(logp[labels, labels])
+
+        @jax.jit
+        def step(params, opt_state, key):
+            idx = jax.random.randint(key, (self.batch_size,), 0, sub)
+            anchors = xs[idx]
+            pos = xs[positives[idx]]
+            loss, grads = jax.value_and_grad(loss_fn)(params, anchors, pos)
+            updates, opt_state = tx.update(grads, opt_state, params)
+            return opt_lib.apply_updates(params, updates), opt_state, loss
+
+        for k in jax.random.split(k_loop, self.steps):
+            params, opt_state, _ = step(params, opt_state, k)
+        self.params = params
+        self.state["w"] = params["w"]
+        self.fitted = True
+        return self
+
+    def __call__(self, x, kind="docs"):
+        return x @ self.params["w"]
+
+    def output_dim(self, input_dim):
+        return self.dim

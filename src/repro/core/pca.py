@@ -1,0 +1,179 @@
+"""Principal component analysis for index compression (paper §4.2).
+
+The paper's key findings, all implemented here:
+
+* PCA to 128 dims retains ~94–96% retrieval performance (6× compression).
+* What PCA is *fitted on* (docs / queries / both) only matters when the data is
+  not centered (queries happen to be closer to the origin, Table 1).
+* The covariance can be estimated from very few samples (~1k, §5.1) — so we
+  also expose a streaming/distributed moment accumulator that psum-reduces
+  per-shard moments across a mesh: fitting PCA on a 1.8B-document index costs
+  one pass and one (d², ) all-reduce.
+* *Component scaling* (§4.2): down-scaling the top-5 eigenvector projections by
+  (0.5, 0.8, 0.8, 0.9, 0.8) systematically beats vanilla PCA.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.preprocess import Transform
+
+# Paper §4.2: grid-searched scaling of the top-5 principal components.
+PAPER_COMPONENT_SCALES: tuple[float, ...] = (0.5, 0.8, 0.8, 0.9, 0.8)
+
+
+def moments(x: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-batch (count, sum, sum-of-outer-products) in float32.
+
+    These are sufficient statistics for the covariance; they add across
+    batches/shards, so the distributed fit is a ``psum`` of this triple.
+    """
+    x = x.astype(jnp.float32)
+    n = jnp.asarray(x.shape[0], jnp.float32)
+    s = jnp.sum(x, axis=0)
+    ss = x.T @ x
+    return n, s, ss
+
+
+def covariance_from_moments(n: jax.Array, s: jax.Array,
+                            ss: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(mean, covariance) from accumulated moments."""
+    mean = s / n
+    cov = ss / n - jnp.outer(mean, mean)
+    return mean, cov
+
+
+def fit_pca_from_cov(mean: jax.Array, cov: jax.Array, dim: int,
+                     ) -> dict[str, jax.Array]:
+    """Eigendecompose a (d, d) covariance; keep top-``dim`` components.
+
+    Returns state dict {mean, components (d, dim), eigenvalues (dim,)} with
+    components ordered by descending eigenvalue.
+    """
+    # eigh returns ascending eigenvalues; flip. Covariance is symmetric PSD.
+    evals, evecs = jnp.linalg.eigh(cov)
+    order = jnp.argsort(evals)[::-1][:dim]
+    return {
+        "mean": mean,
+        "components": evecs[:, order],          # (d, dim), orthonormal cols
+        "eigenvalues": jnp.maximum(evals[order], 0.0),
+    }
+
+
+class PCA(Transform):
+    """PCA projection ``x ↦ (x − μ) @ W`` with optional component scaling.
+
+    Parameters
+    ----------
+    dim: target dimensionality d'.
+    fit_on: "docs" | "queries" | "both" — which population estimates the
+        covariance (paper Fig. 4).
+    scale_components: optional per-component multipliers for the leading
+        components (paper §4.2 "Component Scaling"); ``None`` disables,
+        ``"paper"`` uses the paper's grid-searched (0.5, 0.8, 0.8, 0.9, 0.8).
+    max_fit_samples: subsample cap for the fit set (paper §5.1 shows ≥ d'
+        samples suffice).
+    """
+
+    name = "pca"
+
+    def __init__(self, dim: int, fit_on: str = "docs",
+                 scale_components=None, max_fit_samples: Optional[int] = None):
+        super().__init__()
+        if fit_on not in ("docs", "queries", "both"):
+            raise ValueError(f"fit_on must be docs|queries|both, got {fit_on}")
+        self.dim = int(dim)
+        self.fit_on = fit_on
+        if scale_components == "paper":
+            scale_components = PAPER_COMPONENT_SCALES
+        self.scale_components = (
+            tuple(float(s) for s in scale_components)
+            if scale_components is not None else None)
+        self.max_fit_samples = max_fit_samples
+
+    # -- fitting -----------------------------------------------------------
+    def _fit_set(self, docs, queries):
+        if self.fit_on == "docs" or queries is None:
+            return docs
+        if self.fit_on == "queries":
+            return queries
+        return jnp.concatenate([docs, queries], axis=0)
+
+    def fit(self, docs, queries=None, rng=None):
+        x = self._fit_set(docs, queries)
+        if self.max_fit_samples is not None and x.shape[0] > self.max_fit_samples:
+            if rng is None:
+                rng = jax.random.PRNGKey(0)
+            idx = jax.random.choice(rng, x.shape[0],
+                                    (self.max_fit_samples,), replace=False)
+            x = x[idx]
+        mean, cov = covariance_from_moments(*moments(x))
+        self.state = fit_pca_from_cov(mean, cov, self.dim)
+        if self.scale_components is not None:
+            k = min(len(self.scale_components), self.dim)
+            scales = jnp.ones((self.dim,), jnp.float32)
+            scales = scales.at[:k].set(jnp.asarray(self.scale_components[:k]))
+            self.state["scales"] = scales
+        self.fitted = True
+        return self
+
+    def fit_from_moments(self, n, s, ss):
+        """Fit from pre-accumulated (possibly psum-reduced) moments."""
+        mean, cov = covariance_from_moments(n, s, ss)
+        self.state = fit_pca_from_cov(mean, cov, self.dim)
+        if self.scale_components is not None:
+            k = min(len(self.scale_components), self.dim)
+            scales = jnp.ones((self.dim,), jnp.float32)
+            scales = scales.at[:k].set(jnp.asarray(self.scale_components[:k]))
+            self.state["scales"] = scales
+        self.fitted = True
+        return self
+
+    # -- application --------------------------------------------------------
+    def projection_matrix(self) -> jax.Array:
+        """(d, d') matrix including component scaling — single-GEMM apply."""
+        w = self.state["components"]
+        if "scales" in self.state:
+            w = w * self.state["scales"][None, :]
+        return w
+
+    def __call__(self, x, kind="docs"):
+        w = self.projection_matrix()
+        return (x - self.state["mean"]) @ w
+
+    def inverse(self, z: jax.Array) -> jax.Array:
+        """Approximate reconstruction (for reconstruction-loss analysis)."""
+        w = self.state["components"]
+        if "scales" in self.state:
+            z = z / self.state["scales"][None, :]
+        return z @ w.T + self.state["mean"]
+
+    def output_dim(self, input_dim: int) -> int:
+        return self.dim
+
+    def explained_variance_ratio(self) -> jax.Array:
+        ev = self.state["eigenvalues"]
+        return ev / jnp.maximum(jnp.sum(ev), 1e-12)
+
+
+def fit_pca_distributed(x_sharded: jax.Array, dim: int,
+                        mesh: jax.sharding.Mesh,
+                        axis: str = "data") -> PCA:
+    """Fit PCA on a row-sharded index without gathering it.
+
+    ``x_sharded`` is a (N, d) global array sharded over ``axis``.  Each shard
+    computes local moments; XLA inserts the cross-device reduction for the
+    (d,)+(d,d) sums.  Cost: one pass over local rows + one all-reduce of
+    ~d² floats — independent of N.
+    """
+    @jax.jit
+    def _moments(x):
+        return moments(x)
+
+    n, s, ss = _moments(x_sharded)       # pjit reduces across shards
+    pca = PCA(dim)
+    return pca.fit_from_moments(n, s, ss)

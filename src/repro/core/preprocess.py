@@ -1,0 +1,180 @@
+"""Pre/post-processing transforms (paper §3.3, Appendix A).
+
+The paper's central practical finding: **center then normalize, both before and
+after dimension reduction**, computing the statistics for queries and documents
+*separately*.  All transforms follow the two-population convention: ``fit``
+receives (docs, queries) and stores per-population statistics; ``__call__``
+takes ``kind`` ∈ {"docs", "queries"}.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Transform:
+    """Base class for fit/apply index transforms.
+
+    Subclasses implement :meth:`fit` (estimate state from data) and
+    :meth:`__call__` (apply to new data).  All state is stored as jnp arrays in
+    ``self.state`` so pipelines serialize uniformly.
+    """
+
+    name: str = "identity"
+
+    def __init__(self) -> None:
+        self.state: dict[str, jax.Array] = {}
+        self.fitted = False
+
+    # -- fitting ----------------------------------------------------------
+    def fit(self, docs: jax.Array, queries: Optional[jax.Array] = None,
+            rng: Optional[jax.Array] = None) -> "Transform":
+        self.fitted = True
+        return self
+
+    # -- application ------------------------------------------------------
+    def __call__(self, x: jax.Array, kind: str = "docs") -> jax.Array:
+        return x
+
+    # -- bookkeeping -------------------------------------------------------
+    def output_dim(self, input_dim: int) -> int:
+        return input_dim
+
+    def bits_per_dim(self, bits_in: float) -> float:
+        """Storage bits per dimension after this transform (32.0 for fp32)."""
+        return bits_in
+
+    def state_dict(self) -> dict:
+        return {"name": self.name, "state": dict(self.state),
+                "fitted": self.fitted}
+
+    def load_state(self, sd: dict) -> "Transform":
+        self.state = {k: jnp.asarray(v) for k, v in sd["state"].items()}
+        self.fitted = bool(sd["fitted"])
+        return self
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"{type(self).__name__}(fitted={self.fitted})"
+
+
+def _mean(x: jax.Array) -> jax.Array:
+    return jnp.mean(x.astype(jnp.float32), axis=0)
+
+
+def _std(x: jax.Array) -> jax.Array:
+    return jnp.std(x.astype(jnp.float32), axis=0) + 1e-12
+
+
+class Center(Transform):
+    """x ← x − mean;   means estimated separately for docs and queries."""
+
+    name = "center"
+
+    def fit(self, docs, queries=None, rng=None):
+        self.state["mean_docs"] = _mean(docs)
+        self.state["mean_queries"] = (
+            _mean(queries) if queries is not None else self.state["mean_docs"])
+        self.fitted = True
+        return self
+
+    def __call__(self, x, kind="docs"):
+        mean = self.state["mean_queries" if kind == "queries" else "mean_docs"]
+        return x - mean
+
+
+class Normalize(Transform):
+    """x ← x / ||x||₂  (row-wise; stateless)."""
+
+    name = "normalize"
+
+    def fit(self, docs, queries=None, rng=None):
+        self.fitted = True
+        return self
+
+    def __call__(self, x, kind="docs"):
+        norm = jnp.linalg.norm(x, axis=-1, keepdims=True)
+        return x / jnp.maximum(norm, 1e-12)
+
+
+class ZScore(Transform):
+    """x ← (x − mean) / std  (per-dimension; includes centering, App. A)."""
+
+    name = "zscore"
+
+    def fit(self, docs, queries=None, rng=None):
+        self.state["mean_docs"] = _mean(docs)
+        self.state["std_docs"] = _std(docs)
+        if queries is not None:
+            self.state["mean_queries"] = _mean(queries)
+            self.state["std_queries"] = _std(queries)
+        else:
+            self.state["mean_queries"] = self.state["mean_docs"]
+            self.state["std_queries"] = self.state["std_docs"]
+        self.fitted = True
+        return self
+
+    def __call__(self, x, kind="docs"):
+        sfx = "queries" if kind == "queries" else "docs"
+        return (x - self.state[f"mean_{sfx}"]) / self.state[f"std_{sfx}"]
+
+
+class CenterNorm(Transform):
+    """The paper's recommended composite: center then L2-normalize.
+
+    Equivalent to ``Center → Normalize`` but fused (one pass, one kernel).
+    """
+
+    name = "center_norm"
+
+    def fit(self, docs, queries=None, rng=None):
+        self.state["mean_docs"] = _mean(docs)
+        self.state["mean_queries"] = (
+            _mean(queries) if queries is not None else self.state["mean_docs"])
+        self.fitted = True
+        return self
+
+    def __call__(self, x, kind="docs"):
+        mean = self.state["mean_queries" if kind == "queries" else "mean_docs"]
+        y = x - mean
+        norm = jnp.linalg.norm(y, axis=-1, keepdims=True)
+        return y / jnp.maximum(norm, 1e-12)
+
+
+@dataclasses.dataclass(frozen=True)
+class PreprocessSpec:
+    """Declarative pre/post-processing configuration.
+
+    ``mode`` ∈ {"none", "center", "norm", "center_norm", "zscore",
+    "zscore_norm"} — the rows of paper Table 5.
+    """
+
+    mode: str = "center_norm"
+
+    def build(self) -> list[Transform]:
+        if self.mode == "none":
+            return []
+        if self.mode == "center":
+            return [Center()]
+        if self.mode == "norm":
+            return [Normalize()]
+        if self.mode == "center_norm":
+            return [CenterNorm()]
+        if self.mode == "zscore":
+            return [ZScore()]
+        if self.mode == "zscore_norm":
+            return [ZScore(), Normalize()]
+        raise ValueError(f"unknown preprocess mode: {self.mode!r}")
+
+
+def fit_apply(transforms: list[Transform], docs: jax.Array,
+              queries: jax.Array, rng=None) -> tuple[jax.Array, jax.Array]:
+    """Fit each transform in order, applying as we go. Returns final (D, Q)."""
+    for t in transforms:
+        t.fit(docs, queries, rng=rng)
+        docs = t(docs, "docs")
+        queries = t(queries, "queries")
+    return docs, queries

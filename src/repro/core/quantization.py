@@ -1,0 +1,187 @@
+"""Precision reduction (paper §4.4) — fp16, int8, and 1-bit quantization.
+
+Each quantizer is a :class:`Transform` whose ``__call__`` returns the
+*dequantized* float values (quantize→dequantize round-trip), which is how the
+paper evaluates retrieval on reduced-precision indexes.  For actual deployment
+each quantizer also exposes ``encode``/``decode``: ``encode`` emits the compact
+storage representation (fp16 / int8 / bit-packed uint32) consumed directly by
+the Pallas scoring kernels in :mod:`repro.kernels`, so the index never needs to
+be materialized at full precision on device.
+
+The 1-bit scheme follows §4.4: with centered data,
+``f_α(x_i) = (1 − α)  if x_i ≥ 0 else (0 − α)``.
+α = 0.5 gives values ±0.5 which, unlike {0, 1} (Yamada et al., 2021),
+distinguishes agree/disagree under inner-product similarity; the two are
+equivalent once post-processing (center+normalize) is applied — both facts are
+reproduced in ``benchmarks/table2_compression.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.preprocess import Transform
+
+# ---------------------------------------------------------------------------
+# bit packing helpers (shared with kernels/binary_ip)
+# ---------------------------------------------------------------------------
+
+
+def pack_bits(x: jax.Array) -> jax.Array:
+    """Pack the sign bits of ``x`` (…, d) into uint32 words (…, d/32).
+
+    Bit j of word w encodes sign(x[..., 32*w + j]) — 1 for x ≥ 0.
+    d must be a multiple of 32 (pad upstream if needed).
+    """
+    d = x.shape[-1]
+    if d % 32 != 0:
+        raise ValueError(f"pack_bits needs d % 32 == 0, got d={d}")
+    bits = (x >= 0).astype(jnp.uint32)
+    bits = bits.reshape(*x.shape[:-1], d // 32, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jax.Array, d: int) -> jax.Array:
+    """Inverse of :func:`pack_bits` → ±1 int8 array of trailing dim ``d``."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    signs = bits.astype(jnp.int8) * jnp.int8(2) - jnp.int8(1)
+    return signs.reshape(*words.shape[:-1], d)
+
+
+# ---------------------------------------------------------------------------
+# quantizers
+# ---------------------------------------------------------------------------
+
+
+class FloatCast(Transform):
+    """fp32 → fp16/bf16 (2× compression, §4.4 "Precision 16-bit")."""
+
+    name = "float_cast"
+
+    def __init__(self, dtype=jnp.float16):
+        super().__init__()
+        self.dtype = jnp.dtype(dtype)
+
+    def fit(self, docs, queries=None, rng=None):
+        self.fitted = True
+        return self
+
+    def encode(self, x, kind="docs"):
+        return x.astype(self.dtype)
+
+    def decode(self, x):
+        return x.astype(jnp.float32)
+
+    def __call__(self, x, kind="docs"):
+        return self.decode(self.encode(x, kind))
+
+    def bits_per_dim(self, bits_in):
+        return self.dtype.itemsize * 8
+
+
+class Int8Quantizer(Transform):
+    """Per-dimension affine int8 quantization (4× compression).
+
+    scale_j = (max_j − min_j)/255, zero_j = min_j, fitted on the document
+    index (the population whose storage dominates).  Queries use the same
+    codebook so that quantized inner products remain comparable.
+    """
+
+    name = "int8"
+
+    def __init__(self, percentile: float = 100.0):
+        super().__init__()
+        # percentile < 100 clips outliers before fitting the range
+        self.percentile = float(percentile)
+
+    def fit(self, docs, queries=None, rng=None):
+        x = docs.astype(jnp.float32)
+        if self.percentile >= 100.0:
+            lo, hi = jnp.min(x, axis=0), jnp.max(x, axis=0)
+        else:
+            q = self.percentile / 100.0
+            lo = jnp.quantile(x, 1 - q, axis=0)
+            hi = jnp.quantile(x, q, axis=0)
+        scale = jnp.maximum(hi - lo, 1e-12) / 255.0
+        self.state["scale"] = scale
+        self.state["zero"] = lo
+        self.fitted = True
+        return self
+
+    def encode(self, x, kind="docs"):
+        q = jnp.round((x - self.state["zero"]) / self.state["scale"])
+        return jnp.clip(q, 0, 255).astype(jnp.uint8)
+
+    def decode(self, q):
+        return (q.astype(jnp.float32) * self.state["scale"]
+                + self.state["zero"])
+
+    def __call__(self, x, kind="docs"):
+        return self.decode(self.encode(x, kind))
+
+    def bits_per_dim(self, bits_in):
+        return 8.0
+
+
+class OneBitQuantizer(Transform):
+    """1-bit-per-dimension quantization with offset α (32× compression).
+
+    ``offset=0.5`` → values ±0.5 (paper's recommendation for IP similarity);
+    ``offset=0.0`` → values {0, 1} (Yamada et al., 2021).
+    ``encode`` emits bit-packed uint32 words (d/32 per vector).
+    """
+
+    name = "onebit"
+
+    def __init__(self, offset: float = 0.5):
+        super().__init__()
+        self.offset = float(offset)
+
+    def fit(self, docs, queries=None, rng=None):
+        self.fitted = True
+        return self
+
+    def encode(self, x, kind="docs"):
+        d = x.shape[-1]
+        if d % 32 != 0:
+            pad = 32 - d % 32
+            x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)],
+                        constant_values=-1.0)  # pad bits decode to 0−α (sign −)
+        return pack_bits(x)
+
+    def decode(self, words, d: int | None = None):
+        if d is None:
+            d = words.shape[-1] * 32
+        signs = unpack_bits(words, words.shape[-1] * 32)[..., :d]
+        bit = (signs > 0).astype(jnp.float32)
+        return bit - self.offset
+
+    def __call__(self, x, kind="docs"):
+        bit = (x >= 0).astype(jnp.float32)
+        return bit - self.offset
+
+    def bits_per_dim(self, bits_in):
+        return 1.0
+
+
+def compression_ratio(input_dim: int, transforms: list[Transform],
+                      base_bits: float = 32.0) -> float:
+    """Storage compression factor of a transform chain vs fp32 input."""
+    dim, bits = input_dim, base_bits
+    for t in transforms:
+        dim = t.output_dim(dim)
+        bits = t.bits_per_dim(bits)
+    return (input_dim * base_bits) / (dim * bits)
+
+
+def simulate_storage_bytes(n_vectors: int, input_dim: int,
+                           transforms: list[Transform]) -> int:
+    dim, bits = input_dim, 32.0
+    for t in transforms:
+        dim = t.output_dim(dim)
+        bits = t.bits_per_dim(bits)
+    return int(np.ceil(n_vectors * dim * bits / 8))

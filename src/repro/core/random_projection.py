@@ -1,0 +1,144 @@
+"""Random-projection dimension reduction (paper §4.1).
+
+Four methods, in the paper's increasing order of quality:
+
+* sparse random projection  (Achlioptas ±√3 entries, density 1/3)
+* Gaussian random projection
+* random dimension dropping (keep a random subset of coordinates)
+* greedy dimension dropping (one-shot: score each dimension by the retrieval
+  loss when it alone is removed; drop the least-useful ones) — deterministic
+  and the best of the family (Table 2).
+
+All four are expressible as a single (d, d') matrix, which matters for
+deployment: the compressed index applier is one GEMM regardless of method.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.preprocess import Transform
+
+
+class DimensionDrop(Transform):
+    """Keep a random subset of d' coordinates (paper f_drop)."""
+
+    name = "dim_drop"
+
+    def __init__(self, dim: int):
+        super().__init__()
+        self.dim = int(dim)
+
+    def fit(self, docs, queries=None, rng=None):
+        d = docs.shape[-1]
+        if rng is None:
+            rng = jax.random.PRNGKey(0)
+        keep = jax.random.permutation(rng, d)[: self.dim]
+        self.state["keep"] = jnp.sort(keep)
+        self.fitted = True
+        return self
+
+    def __call__(self, x, kind="docs"):
+        return jnp.take(x, self.state["keep"], axis=-1)
+
+    def output_dim(self, input_dim):
+        return self.dim
+
+
+class GreedyDimensionDrop(Transform):
+    """One-shot greedy selection of the d' most retrieval-useful dimensions.
+
+    Paper §4.1: for each dimension i, evaluate retrieval quality with i
+    removed (L_i); keep the d' dimensions whose removal hurts most.  The
+    scorer is injected (callable (Q, D) → metric) so it can run on a
+    subsample; the selection is deterministic given the scorer.
+    """
+
+    name = "greedy_dim_drop"
+
+    def __init__(self, dim: int,
+                 scorer: Optional[Callable[[jax.Array, jax.Array], float]] = None,
+                 max_eval_queries: int = 512, max_eval_docs: int = 16384):
+        super().__init__()
+        self.dim = int(dim)
+        self.scorer = scorer
+        self.max_eval_queries = max_eval_queries
+        self.max_eval_docs = max_eval_docs
+
+    def fit(self, docs, queries=None, rng=None):
+        if self.scorer is None:
+            raise ValueError("GreedyDimensionDrop needs a scorer; use "
+                             "repro.retrieval.rprecision.make_dim_drop_scorer")
+        losses = self.scorer(queries, docs)     # (d,) quality WITHOUT dim i
+        # Quality when i removed is LOW for important dims → keep ascending.
+        self.state["keep"] = jnp.sort(jnp.argsort(losses)[: self.dim])
+        self.state["per_dim_quality"] = losses
+        self.fitted = True
+        return self
+
+    def __call__(self, x, kind="docs"):
+        return jnp.take(x, self.state["keep"], axis=-1)
+
+    def output_dim(self, input_dim):
+        return self.dim
+
+
+class GaussianProjection(Transform):
+    """x ↦ x @ R,  R_ij ~ N(0, 1/d')."""
+
+    name = "gaussian_projection"
+
+    def __init__(self, dim: int):
+        super().__init__()
+        self.dim = int(dim)
+
+    def fit(self, docs, queries=None, rng=None):
+        d = docs.shape[-1]
+        if rng is None:
+            rng = jax.random.PRNGKey(0)
+        self.state["matrix"] = (
+            jax.random.normal(rng, (d, self.dim), jnp.float32)
+            / jnp.sqrt(jnp.asarray(self.dim, jnp.float32)))
+        self.fitted = True
+        return self
+
+    def __call__(self, x, kind="docs"):
+        return x @ self.state["matrix"]
+
+    def output_dim(self, input_dim):
+        return self.dim
+
+
+class SparseProjection(Transform):
+    """Achlioptas sparse random projection.
+
+    R_ij = ±√(s/d') with prob 1/(2s) each, 0 with prob 1−1/s  (s = 3).
+    """
+
+    name = "sparse_projection"
+
+    def __init__(self, dim: int, s: float = 3.0):
+        super().__init__()
+        self.dim = int(dim)
+        self.s = float(s)
+
+    def fit(self, docs, queries=None, rng=None):
+        d = docs.shape[-1]
+        if rng is None:
+            rng = jax.random.PRNGKey(0)
+        k_sign, k_mask = jax.random.split(rng)
+        signs = jax.random.rademacher(k_sign, (d, self.dim), jnp.float32)
+        mask = jax.random.bernoulli(k_mask, 1.0 / self.s, (d, self.dim))
+        scale = jnp.sqrt(self.s / self.dim)
+        self.state["matrix"] = signs * mask.astype(jnp.float32) * scale
+        self.fitted = True
+        return self
+
+    def __call__(self, x, kind="docs"):
+        return x @ self.state["matrix"]
+
+    def output_dim(self, input_dim):
+        return self.dim

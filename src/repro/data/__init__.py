@@ -1,0 +1,5 @@
+"""Deterministic synthetic corpora + sharded host data pipelines."""
+
+from repro.data.synthetic import KBData, make_dpr_like_kb
+
+__all__ = ["KBData", "make_dpr_like_kb"]

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the compressed-index hot paths.
+
+Four kernels, each a subpackage with ``kernel.py`` (pl.pallas_call +
+BlockSpec), ``ops.py`` (jit'd public wrapper with jnp fallback) and ``ref.py``
+(pure-jnp oracle used by the allclose tests):
+
+- ``binary_ip``      : 1-bit index scoring — bit-packed uint32 HBM storage,
+                       in-VMEM unpack to ±1 int8, MXU int8 matmul.  TPU-native
+                       replacement for GPU XNOR-popcount (DESIGN.md §2).
+- ``int8_ip``        : int8 index scoring with fused per-dimension dequant.
+- ``fused_quantize`` : center→normalize→PCA-project→center→normalize→int8
+                       encode in a single VMEM pass (index build / refresh).
+- ``topk_blocks``    : streaming two-stage top-k (per-block partial top-k in
+                       VMEM; global merge outside) — avoids materialising the
+                       (Q, D) score matrix in HBM.
+"""

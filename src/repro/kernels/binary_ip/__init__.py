@@ -1,0 +1,4 @@
+from repro.kernels.binary_ip import ops, ref
+from repro.kernels.binary_ip.kernel import binary_ip_pallas
+
+__all__ = ["ops", "ref", "binary_ip_pallas"]

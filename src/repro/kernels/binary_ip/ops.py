@@ -1,0 +1,82 @@
+"""Public op: score float/encoded queries against a bit-packed 1-bit index.
+
+Reduction to the sign matmul kernel: with b ∈ {0,1}, s = 2b − 1 ∈ {±1},
+value v = b − α = s/2 + (0.5 − α):
+
+    IP(v_q, v_d) = Σ (s_q/2 + c)(s_d/2 + c)          with c = 0.5 − α
+                 = 0.25·(s_q·s_d) + c/2·(Σs_q + Σs_d) + d·c²
+
+For the paper's recommended α = 0.5 the correction terms vanish and the
+score is exactly 0.25·(s_q·s_d) — a pure MXU integer matmul.  For α ≠ 0.5
+(e.g. the {0,1} encoding of Yamada et al.) the per-vector sign sums are
+cheap rank-1 corrections added outside the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import pack_bits, unpack_bits
+from repro.kernels.binary_ip.kernel import binary_ip_pallas
+from repro.kernels.binary_ip import ref as _ref
+
+
+def _sign_sums_from_packed(packed: jax.Array, d: int) -> jax.Array:
+    """Σ signs per row from packed words: 2·popcount − d."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
+    pop = jnp.sum(bits.astype(jnp.int32), axis=(-1, -2))
+    return 2 * pop - d
+
+
+def binary_ip_scores(queries, docs_packed: jax.Array, d: int,
+                     offset: float = 0.5, use_pallas: bool = False,
+                     interpret: bool | None = None,
+                     block_q: int = 128, block_d: int = 512) -> jax.Array:
+    """(Q, D) scores of offset-encoded 1-bit vectors.
+
+    ``queries`` may be float (already offset-encoded values, or any vector —
+    only signs matter) or packed uint32.  ``docs_packed`` is the index
+    storage.  ``use_pallas=False`` runs the jnp oracle path (identical
+    scores); on CPU the Pallas path runs with ``interpret=True``.
+    """
+    if queries.dtype == jnp.uint32:
+        q_signs = unpack_bits(queries, d).astype(jnp.int8)
+    else:
+        q_signs = jnp.where(queries >= 0, jnp.int8(1), jnp.int8(-1))
+        if q_signs.shape[-1] != d:
+            raise ValueError("query dim mismatch")
+        pad = docs_packed.shape[-1] * 32 - d
+        if pad:
+            q_signs = jnp.pad(q_signs, ((0, 0), (0, pad)),
+                              constant_values=jnp.int8(-1))
+
+    d_packed = docs_packed.shape[-1] * 32   # includes encoder padding
+    if use_pallas:
+        interp = (jax.default_backend() != "tpu") if interpret is None \
+            else interpret
+        sign_dot = binary_ip_pallas(q_signs, docs_packed,
+                                    block_q=block_q, block_d=block_d,
+                                    interpret=interp).astype(jnp.float32)
+    else:
+        sign_dot = _ref.sign_dot_ref(q_signs, docs_packed).astype(jnp.float32)
+
+    c = 0.5 - offset
+    scores = 0.25 * sign_dot
+    if c != 0.0:
+        sum_q = jnp.sum(q_signs.astype(jnp.int32), axis=-1)
+        sum_d = _sign_sums_from_packed(docs_packed, d_packed)
+        scores = (scores + (c / 2.0) * (sum_q[:, None] + sum_d[None, :])
+                  + d_packed * c * c)
+    return scores
+
+
+def encode_queries(queries: jax.Array, d: int) -> jax.Array:
+    """Pack float queries to the same 1-bit storage as the index."""
+    pad = (-d) % 32
+    if pad:
+        queries = jnp.pad(queries, ((0, 0), (0, pad)), constant_values=-1.0)
+    return pack_bits(queries)

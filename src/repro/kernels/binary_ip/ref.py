@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for 1-bit index scoring (paper §4.4 semantics).
+
+The reference decodes both sides to the paper's offset representation
+(bit − α) in float32 and takes the exact inner product.  All kernel paths
+must reproduce these scores bit-exactly for d % 32 == 0 (integer arithmetic;
+magnitudes ≤ d are exactly representable in fp32).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import unpack_bits
+
+
+def decode(packed: jax.Array, d: int, offset: float) -> jax.Array:
+    """(N, d/32) packed → (N, d) float values in {1−α, −α}."""
+    signs = unpack_bits(packed, d)               # ±1 int8
+    bits = (signs > 0).astype(jnp.float32)
+    return bits - offset
+
+
+def binary_ip_scores_ref(q_packed: jax.Array, docs_packed: jax.Array,
+                         d: int, offset: float) -> jax.Array:
+    """Exact (Q, D) scores between offset-encoded 1-bit vectors."""
+    q = decode(q_packed, d, offset)
+    docs = decode(docs_packed, d, offset)
+    return q @ docs.T
+
+
+def sign_dot_ref(q_signs: jax.Array, docs_packed: jax.Array) -> jax.Array:
+    """Oracle for the raw kernel output: (Q, D) int32 ±1 sign dots."""
+    d = q_signs.shape[-1]
+    signs = unpack_bits(docs_packed, d).astype(jnp.int32)
+    return q_signs.astype(jnp.int32) @ signs.T

@@ -1,0 +1,4 @@
+from repro.kernels.fused_quantize import ops, ref
+from repro.kernels.fused_quantize.kernel import fused_quantize_pallas
+
+__all__ = ["ops", "ref", "fused_quantize_pallas"]

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: fused index-build pass.
+
+The paper's best 24× recipe is a 4-stage chain —
+``center+normalize → PCA(d') → center+normalize → int8`` — which, applied
+naively, makes four HBM round-trips over a multi-TB index.  This kernel fuses
+the whole chain into one streaming pass (beyond-paper optimization; recorded
+separately in EXPERIMENTS.md §Perf):
+
+    per row x:
+        y  = (x − μ₁) / ‖x − μ₁‖            # pre-processing
+        z  = y @ W                          # PCA projection (MXU)
+        w  = (z − μ₂) / ‖z − μ₂‖            # post-processing
+        u  = clip(round((w − zero)/scale))  # uint8 encode
+
+Row blocks stream HBM→VMEM once; W (d×d') stays resident (768×128 fp32 =
+384 KiB).  Output is 4–24× smaller than the input, so the pass is read-
+bandwidth-bound at roofline.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.utils import cdiv
+
+
+def _fused_quantize_kernel(x_ref, mu1_ref, w_ref, mu2_ref, scale_ref,
+                           zero_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)                  # (bn, d)
+    y = x - mu1_ref[...]
+    y = y * jax.lax.rsqrt(jnp.sum(y * y, axis=-1, keepdims=True) + 1e-24)
+    z = jnp.dot(y, w_ref[...], preferred_element_type=jnp.float32)
+    zc = z - mu2_ref[...]
+    zc = zc * jax.lax.rsqrt(jnp.sum(zc * zc, axis=-1, keepdims=True) + 1e-24)
+    q = jnp.round((zc - zero_ref[...]) / scale_ref[...])
+    out_ref[...] = jnp.clip(q, 0.0, 255.0).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def fused_quantize_pallas(x: jax.Array, mu1: jax.Array, w: jax.Array,
+                          mu2: jax.Array, scale: jax.Array, zero: jax.Array,
+                          block_n: int = 256,
+                          interpret: bool = False) -> jax.Array:
+    """(N, d) fp32 → (N, d') uint8 codes, single fused pass."""
+    n, d = x.shape
+    d_out = w.shape[1]
+    assert w.shape[0] == d and mu1.shape == (d,)
+    assert mu2.shape == (d_out,) and scale.shape == (d_out,)
+
+    n_pad = cdiv(n, block_n) * block_n - n
+    x_in = jnp.pad(x, ((0, n_pad), (0, 0))) if n_pad else x
+
+    grid = (x_in.shape[0] // block_n,)
+    out = pl.pallas_call(
+        _fused_quantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d, d_out), lambda i: (0, 0)),
+            pl.BlockSpec((d_out,), lambda i: (0,)),
+            pl.BlockSpec((d_out,), lambda i: (0,)),
+            pl.BlockSpec((d_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x_in.shape[0], d_out), jnp.uint8),
+        interpret=interpret,
+    )(x_in, mu1, w, mu2, scale, zero)
+    return out[:n]

@@ -1,0 +1,51 @@
+"""Public op: one-pass index build for the paper's PCA+int8 recipe."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pca import PCA
+from repro.core.pipeline import CompressionPipeline
+from repro.core.preprocess import CenterNorm
+from repro.core.quantization import Int8Quantizer
+from repro.kernels.fused_quantize.kernel import fused_quantize_pallas
+from repro.kernels.fused_quantize import ref as _ref
+
+
+def params_from_pipeline(pipeline: CompressionPipeline, kind: str = "docs"):
+    """Extract (μ₁, W, μ₂, scale, zero) from a fitted
+    [CenterNorm, PCA, CenterNorm, Int8Quantizer] pipeline."""
+    stages = pipeline.transforms
+    if not (len(stages) == 4 and isinstance(stages[0], CenterNorm)
+            and isinstance(stages[1], PCA)
+            and isinstance(stages[2], CenterNorm)
+            and isinstance(stages[3], Int8Quantizer)):
+        raise ValueError(
+            "fused_quantize expects [CenterNorm, PCA, CenterNorm, Int8]; got "
+            + repr(pipeline))
+    sfx = "queries" if kind == "queries" else "docs"
+    pca = stages[1]
+    # fold the PCA mean into μ₁?  No: PCA subtracts its own mean *after* the
+    # first normalize; fold it into the projection as a bias-free form:
+    # (y − m) @ W = y @ W − m @ W → absorb into μ₂' = μ₂ + m @ W.
+    w = pca.projection_matrix()
+    mu1 = stages[0].state[f"mean_{sfx}"]
+    mu2 = stages[2].state[f"mean_{sfx}"] + pca.state["mean"] @ w
+    scale = stages[3].state["scale"]
+    zero = stages[3].state["zero"]
+    return mu1, w, mu2, scale, zero
+
+
+def fused_quantize(x: jax.Array, pipeline: CompressionPipeline,
+                   kind: str = "docs", use_pallas: bool = False,
+                   interpret: bool | None = None,
+                   block_n: int = 256) -> jax.Array:
+    """Encode (N, d) float vectors → (N, d') uint8 via the fused pass."""
+    mu1, w, mu2, scale, zero = params_from_pipeline(pipeline, kind)
+    if use_pallas:
+        interp = (jax.default_backend() != "tpu") if interpret is None \
+            else interpret
+        return fused_quantize_pallas(x, mu1, w, mu2, scale, zero,
+                                     block_n=block_n, interpret=interp)
+    return _ref.fused_quantize_ref(x, mu1, w, mu2, scale, zero)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused index-build pass (4 separate stages)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_quantize_ref(x: jax.Array, mu1: jax.Array, w: jax.Array,
+                       mu2: jax.Array, scale: jax.Array,
+                       zero: jax.Array) -> jax.Array:
+    x = x.astype(jnp.float32)
+    y = x - mu1
+    y = y / jnp.sqrt(jnp.sum(y * y, axis=-1, keepdims=True) + 1e-24)
+    z = y @ w
+    zc = z - mu2
+    zc = zc / jnp.sqrt(jnp.sum(zc * zc, axis=-1, keepdims=True) + 1e-24)
+    q = jnp.round((zc - zero) / scale)
+    return jnp.clip(q, 0.0, 255.0).astype(jnp.uint8)

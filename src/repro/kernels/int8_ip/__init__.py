@@ -1,0 +1,4 @@
+from repro.kernels.int8_ip import ops, ref
+from repro.kernels.int8_ip.kernel import int8_ip_pallas
+
+__all__ = ["ops", "ref", "int8_ip_pallas"]

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: int8 index scoring with fused dequantization.
+
+The index stores per-dimension affine-quantized uint8 codes
+``u = round((x − zero)/scale)``.  Scoring against float queries:
+
+    q · x  =  q · (scale ⊙ u)  +  q · zero
+           =  (q ⊙ scale) · u  +  const(q)
+
+The kernel computes ``(q ⊙ scale) · u`` with the per-dim scale folded into
+the *query* block once (Q ≪ D), so the document stream is consumed directly
+as uint8 from HBM — a 4× bandwidth saving over fp32 — and converted to bf16
+in VMEM for the MXU.  The rank-1 ``q·zero`` correction is added by ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.utils import cdiv
+
+
+def _int8_ip_kernel(qs_ref, docs_ref, out_ref):
+    qs = qs_ref[...]                                  # (bq, d) bf16 (q·scale)
+    docs = docs_ref[...].astype(jnp.bfloat16)         # (bd, d) uint8 → bf16
+    out_ref[...] = jax.lax.dot_general(
+        qs, docs,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_q", "block_d", "interpret"))
+def int8_ip_pallas(q_scaled: jax.Array, docs_u8: jax.Array,
+                   block_q: int = 128, block_d: int = 512,
+                   interpret: bool = False) -> jax.Array:
+    """(Q, d) bf16 pre-scaled queries × (D, d) uint8 codes → (Q, D) f32."""
+    n_q, d = q_scaled.shape
+    n_docs, d2 = docs_u8.shape
+    assert d == d2, (d, d2)
+
+    q_pad = cdiv(n_q, block_q) * block_q - n_q
+    d_pad = cdiv(n_docs, block_d) * block_d - n_docs
+    q_in = jnp.pad(q_scaled, ((0, q_pad), (0, 0))) if q_pad else q_scaled
+    docs_in = jnp.pad(docs_u8, ((0, d_pad), (0, 0))) if d_pad else docs_u8
+
+    grid = (q_in.shape[0] // block_q, docs_in.shape[0] // block_d)
+    out = pl.pallas_call(
+        _int8_ip_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_d, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_d), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(
+            (q_in.shape[0], docs_in.shape[0]), jnp.float32),
+        interpret=interpret,
+    )(q_in, docs_in)
+    return out[:n_q, :n_docs]

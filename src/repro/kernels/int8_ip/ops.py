@@ -1,0 +1,47 @@
+"""Public op: score float queries against an int8-quantized index.
+
+IP decomposition (see kernel.py): ``q·x = (q⊙scale)·u + q·zero``.
+L2 adds per-document squared norms, which depend only on the index and are
+computed once (index-build time in production; cached per call here).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.int8_ip.kernel import int8_ip_pallas
+from repro.kernels.int8_ip import ref as _ref
+
+
+def _doc_sq_norms(docs_u8: jax.Array, scale: jax.Array, zero: jax.Array,
+                  chunk: int = 262144) -> jax.Array:
+    outs = []
+    for s in range(0, docs_u8.shape[0], chunk):
+        d = _ref.decode(docs_u8[s: s + chunk], scale, zero)
+        outs.append(jnp.sum(d * d, axis=-1))
+    return jnp.concatenate(outs)
+
+
+def int8_scores(queries: jax.Array, docs_u8: jax.Array, scale: jax.Array,
+                zero: jax.Array, sim: str = "ip", use_pallas: bool = False,
+                interpret: bool | None = None, block_q: int = 128,
+                block_d: int = 512) -> jax.Array:
+    """(Q, D) similarity between float queries and uint8 index codes."""
+    queries = queries.astype(jnp.float32)
+    if not use_pallas:
+        return _ref.int8_scores_ref(queries, docs_u8, scale, zero, sim)
+
+    interp = (jax.default_backend() != "tpu") if interpret is None \
+        else interpret
+    q_scaled = (queries * scale).astype(jnp.bfloat16)
+    ip = int8_ip_pallas(q_scaled, docs_u8, block_q=block_q,
+                        block_d=block_d, interpret=interp)
+    ip = ip + (queries @ zero)[:, None]
+    if sim == "ip":
+        return ip
+    if sim == "l2":
+        q2 = jnp.sum(queries * queries, axis=-1, keepdims=True)
+        d2 = _doc_sq_norms(docs_u8, scale, zero)
+        return -(q2 + d2[None, :] - 2.0 * ip)
+    raise ValueError(sim)

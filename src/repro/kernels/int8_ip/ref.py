@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for int8 index scoring: decode to float, exact GEMM."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode(docs_u8: jax.Array, scale: jax.Array, zero: jax.Array) -> jax.Array:
+    return docs_u8.astype(jnp.float32) * scale + zero
+
+
+def int8_scores_ref(queries: jax.Array, docs_u8: jax.Array,
+                    scale: jax.Array, zero: jax.Array,
+                    sim: str = "ip") -> jax.Array:
+    docs = decode(docs_u8, scale, zero)
+    if sim == "ip":
+        return queries @ docs.T
+    if sim == "l2":
+        q2 = jnp.sum(queries * queries, axis=-1, keepdims=True)
+        d2 = jnp.sum(docs * docs, axis=-1)
+        return -(q2 + d2[None, :] - 2.0 * (queries @ docs.T))
+    raise ValueError(sim)

@@ -1,0 +1,4 @@
+from repro.kernels.topk_blocks import ops, ref
+from repro.kernels.topk_blocks.kernel import topk_blocks_pallas
+
+__all__ = ["ops", "ref", "topk_blocks_pallas"]

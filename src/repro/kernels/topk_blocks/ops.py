@@ -1,0 +1,24 @@
+"""Public op: exact streaming top-k (two-stage) over a score matrix."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk_blocks.kernel import topk_blocks_pallas
+from repro.kernels.topk_blocks import ref as _ref
+
+
+def streaming_topk(scores: jax.Array, k: int, use_pallas: bool = False,
+                   interpret: bool | None = None, block_q: int = 128,
+                   block_d: int = 1024) -> tuple[jax.Array, jax.Array]:
+    """(Q, D) → top-k (values, global indices), descending."""
+    if not use_pallas:
+        return _ref.topk_ref(scores, k)
+    interp = (jax.default_backend() != "tpu") if interpret is None \
+        else interpret
+    vals, idx = topk_blocks_pallas(scores, k, block_q=block_q,
+                                   block_d=block_d, interpret=interp)
+    kk = min(k, scores.shape[-1])
+    top_vals, pos = jax.lax.top_k(vals, kk)
+    return top_vals, jnp.take_along_axis(idx, pos, axis=1)

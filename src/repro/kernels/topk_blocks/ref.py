@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for streaming top-k: exact lax.top_k over the full axis.
+
+Note the oracle for the *two-stage* schedule is simply exact top-k: the
+per-block partial reduction is lossless for the final top-k as long as each
+block keeps k candidates (every global top-k element is a top-k element of
+its own block).  Tests assert set-equality of (value, index) pairs, with
+ties broken by lowest index in both paths.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_ref(scores: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    return jax.lax.top_k(scores, min(k, scores.shape[-1]))

@@ -1,0 +1,238 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402  — the two lines above MUST run before any jax import
+# (jax locks the device count at first initialization).
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell on the production mesh with 512 placeholder host devices.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch dbrx-132b \
+        --shape train_4k --mesh multi
+    PYTHONPATH=src python -m repro.launch.dryrun --all    # every cell,
+                                                          # subprocess-isolated
+
+Success criteria (per cell): ``.lower().compile()`` passes on the 16×16
+single-pod mesh AND the 2×16×16 multi-pod mesh; ``memory_analysis()`` fits
+HBM; roofline terms recorded to ``results/dryrun/*.jsonl``.
+"""
+
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.registry import ALL_NAMES, get_arch
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh, rules_for_mesh
+from repro.launch.steps import build_step
+from repro.utils import human_bytes
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# HBM per v5e chip
+HBM_BYTES = 16 * 1024 ** 3
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True) -> dict:
+    """Two-pass protocol per cell:
+
+    1. *deployment pass* (scan-over-layers, the production config): proves
+       lower+compile on the target mesh and yields memory_analysis (live-set
+       per device).  Runs for single AND multi-pod meshes.
+    2. *cost pass* (layers + attention chunk loop unrolled): exact
+       cost_analysis totals (XLA counts loop bodies once) for the roofline
+       terms.  Single-pod only — the §Roofline table is single-pod by spec.
+    """
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for_mesh(mesh)
+    arch = get_arch(arch_name)
+    shape = arch.shape(shape_name)
+    chips = mesh.devices.size
+    mesh_desc = "x".join(str(s) for s in mesh.devices.shape)
+
+    # ---- pass 1: deployment compile (memory + compile success)
+    bundle = build_step(arch, shape, mesh, rules)
+    with mesh:
+        lowered = bundle.lower(mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        print(mem)
+
+    # ---- pass 2: cost compile.  LM archs contain loops whose bodies XLA
+    # counts once, so they need unrolled HLO; since transformer layers are
+    # HOMOGENEOUS, per-step totals extrapolate *exactly* from two small
+    # unrolled compiles: cost(L) = cost(l2) + (L−l2)·(cost(l2)−cost(l1))
+    # /(l2−l1).  Non-LM archs have no loops → pass 1 costs are exact.
+    needs_unroll = shape.kind.startswith("lm")
+    t_cost = 0.0
+    model_flops = bundle.model_flops_fn() if bundle.model_flops_fn else None
+
+    def _measure(c) -> tuple[float, float, dict]:
+        cost = c.cost_analysis()
+        return (float(cost.get("flops", 0.0)),
+                float(cost.get("bytes accessed", 0.0)),
+                roofline.collective_bytes(c.as_text()))
+
+    if needs_unroll and not multi_pod:
+        t1 = time.time()
+        l_full = arch.model.n_layers
+        if l_full <= 8:
+            cost_bundle = build_step(arch, shape, mesh, rules, unroll=True)
+            with mesh:
+                flops, nbytes, coll = _measure(
+                    cost_bundle.lower(mesh).compile())
+        else:
+            samples = {}
+            for l_sub in (4, 8):
+                arch_l = dataclasses.replace(
+                    arch, model=dataclasses.replace(arch.model,
+                                                    n_layers=l_sub))
+                cb = build_step(arch_l, shape, mesh, rules, unroll=True)
+                with mesh:
+                    samples[l_sub] = _measure(cb.lower(mesh).compile())
+
+            def extra(i, key=None):
+                a = samples[4][i] if key is None else samples[4][i][key]
+                b = samples[8][i] if key is None else samples[8][i][key]
+                return b + (l_full - 8) * (b - a) / 4.0
+
+            flops, nbytes = extra(0), extra(1)
+            coll = {k: extra(2, k) for k in samples[8][2]}
+        t_cost = time.time() - t1
+    else:
+        flops, nbytes, coll = _measure(compiled)
+    print({"flops": flops, "bytes accessed": nbytes,
+           "collective_bytes": coll.get("total", 0.0)})
+
+    report = roofline.RooflineReport(
+        name=f"{arch_name}:{shape_name}", mesh=mesh_desc, chips=chips,
+        hlo_gflops=flops * chips / 1e9, hlo_gbytes=nbytes * chips / 1e9,
+        coll_gbytes=coll.get("total", 0.0) * chips / 1e9,
+        per_collective={k: v for k, v in coll.items() if k != "total"},
+        model_gflops=(model_flops / 1e9 if model_flops else None),
+        peak_memory_bytes=None)
+    # memory from the deployment pass (scan = production live-set)
+    ma = compiled.memory_analysis()
+    report.peak_memory_bytes = int(
+        getattr(ma, "temp_size_in_bytes", 0)
+        + getattr(ma, "argument_size_in_bytes", 0)
+        + getattr(ma, "output_size_in_bytes", 0)
+        - getattr(ma, "alias_size_in_bytes", 0))
+
+    result = report.to_dict()
+    result.update({
+        "arch": arch_name, "shape": shape_name,
+        "multi_pod": multi_pod,
+        "cost_exact": (not needs_unroll) or (not multi_pod),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "cost_compile_s": round(t_cost, 1),
+        "fits_hbm": (report.peak_memory_bytes or 0) < HBM_BYTES,
+        "status": "ok",
+        "note": shape.note,
+    })
+    if verbose:
+        print(f"[dryrun] {arch_name}:{shape_name} mesh={mesh_desc} "
+              f"compile={t_compile:.0f}s+{t_cost:.0f}s "
+              f"mem/dev={human_bytes(report.peak_memory_bytes or 0)} "
+              f"fits_hbm={result['fits_hbm']} "
+              f"bottleneck={report.bottleneck} "
+              f"roofline={report.roofline_fraction:.3f}")
+    return result
+
+
+def _append_result(result: dict, out_path: str) -> None:
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "a") as f:
+        f.write(json.dumps(result) + "\n")
+
+
+def all_cells() -> list[tuple[str, str]]:
+    cells = []
+    for name in ALL_NAMES:
+        arch = get_arch(name)
+        for shape in arch.shapes:
+            cells.append((name, shape.name))
+    return cells
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--cell-timeout", type=int, default=1500)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    out_path = args.out or os.path.abspath(
+        os.path.join(RESULTS_DIR, "results.jsonl"))
+
+    if args.all:
+        # subprocess isolation: one compile per process (bounded memory,
+        # one cell's failure cannot kill the sweep); per-cell timeout
+        done = set()
+        if args.skip_done and os.path.exists(out_path):
+            for line in open(out_path):
+                r = json.loads(line)
+                if r.get("status") == "ok":
+                    done.add((r["arch"], r["shape"],
+                              "multi" if r.get("multi_pod") else "single"))
+        failures = []
+        for arch_name, shape_name in all_cells():
+            for mesh_kind in (("single", "multi") if args.mesh == "both"
+                              else (args.mesh,)):
+                if (arch_name, shape_name, mesh_kind) in done:
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch_name, "--shape", shape_name,
+                       "--mesh", mesh_kind, "--out", out_path]
+                print(f"--- {arch_name}:{shape_name} [{mesh_kind}]",
+                      flush=True)
+                try:
+                    rc = subprocess.run(cmd, env=os.environ,
+                                        timeout=args.cell_timeout
+                                        ).returncode
+                except subprocess.TimeoutExpired:
+                    rc = -1
+                    _append_result(
+                        {"arch": arch_name, "shape": shape_name,
+                         "multi_pod": mesh_kind == "multi",
+                         "status": "error: compile timeout"}, out_path)
+                if rc != 0:
+                    failures.append((arch_name, shape_name, mesh_kind))
+        print(f"\n{len(failures)} failures: {failures}")
+        sys.exit(1 if failures else 0)
+
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required (or --all)")
+
+    for mesh_kind in (("single", "multi") if args.mesh == "both"
+                      else (args.mesh,)):
+        try:
+            result = run_cell(args.arch, args.shape,
+                              multi_pod=(mesh_kind == "multi"))
+        except Exception as e:
+            traceback.print_exc()
+            result = {"arch": args.arch, "shape": args.shape,
+                      "multi_pod": mesh_kind == "multi",
+                      "status": f"error: {type(e).__name__}: {e}"}
+            _append_result(result, out_path)
+            sys.exit(1)
+        _append_result(result, out_path)
+
+
+if __name__ == "__main__":
+    main()

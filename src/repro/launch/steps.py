@@ -1,0 +1,631 @@
+"""Step builder: (architecture × shape × mesh) → lowerable step bundle.
+
+For every cell of the assignment matrix this produces:
+- ``fn``            : the jit-able step (train_step / serve_step / search),
+- ``abstract_args`` : ShapeDtypeStruct pytrees (state/params + batch),
+- ``in_shardings``  : NamedShardings derived from logical axes + rules,
+- ``donate``        : donated arg indices (state, caches).
+
+The same builder powers the CPU smoke tests (``reduced=True`` + no mesh) and
+the 512-device dry-run (full dims + production mesh) — shapes cannot drift
+between the two.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ArchConfig, DCNConfig, DINConfig, FMConfig,
+                                LMConfig, SchNetConfig, ShapeSpec,
+                                TwoTowerConfig)
+from repro.data import batches as B
+from repro.models import gnn as G
+from repro.models import layers as L
+from repro.models import recsys as R
+from repro.models import transformer as T
+from repro.parallel.sharding import (AxisRules, ShardingContext,
+                                     spec_for_shape)
+from repro.train import optimizer as opt_lib
+from repro.train import trainer
+
+
+@dataclasses.dataclass
+class StepBundle:
+    name: str
+    fn: Callable
+    abstract_args: tuple
+    in_specs: tuple              # PartitionSpec pytrees (None mesh → None)
+    donate: tuple = ()
+    model_flops_fn: Optional[Callable] = None   # per-step useful FLOPs
+
+    def shardings(self, mesh: Mesh):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), self.in_specs,
+            is_leaf=lambda x: isinstance(x, P))
+
+    def jit(self, mesh: Optional[Mesh] = None):
+        if mesh is None:
+            return jax.jit(self.fn, donate_argnums=self.donate)
+        return jax.jit(self.fn, in_shardings=self.shardings(mesh),
+                       donate_argnums=self.donate)
+
+    def lower(self, mesh: Optional[Mesh] = None):
+        return self.jit(mesh).lower(*self.abstract_args)
+
+
+# ---------------------------------------------------------------------------
+# sharding-spec helpers
+# ---------------------------------------------------------------------------
+
+
+def _tree_specs(spec_tree, rules: AxisRules, mesh: Optional[Mesh]):
+    """ParamSpec tree → PartitionSpec tree."""
+    return jax.tree_util.tree_map(
+        lambda s: spec_for_shape(s.shape, s.axes, rules, mesh), spec_tree,
+        is_leaf=lambda x: isinstance(x, L.ParamSpec))
+
+
+def _suffix_match_specs(abstract_tree: Any, param_specs_by_path: dict,
+                        ) -> Any:
+    """Match optimizer-state leaves to param specs by path suffix."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(_pstr(p) for p in path)
+        best = P()
+        best_len = -1
+        for ppath, spec in param_specs_by_path.items():
+            if key.endswith(ppath) and len(ppath) > best_len:
+                shapes_match = True
+                best, best_len = spec, len(ppath)
+        if leaf.ndim == 0:
+            best = P()
+        out.append(best)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _pstr(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def _flat_param_specs(spec_tree, rules, mesh) -> dict:
+    specs = _tree_specs(spec_tree, rules, mesh)
+    flat, _ = jax.tree_util.tree_flatten_with_path(specs)
+    return {"/".join(_pstr(p) for p in path): s for path, s in flat}
+
+
+def _batch_specs(batch_struct: dict, rules, mesh, kind: str) -> dict:
+    """Logical axes for batch arrays, per shape kind."""
+    def logical(name: str, s) -> tuple:
+        if name == "edge_index":
+            return (None, "batch")           # shard the edge axis
+        if name == "cand_ids":
+            return ("kb_docs",) + (None,) * (len(s.shape) - 1)
+        if name == "queries":
+            return ("batch", None)
+        return ("batch",) + (None,) * (len(s.shape) - 1)
+
+    return {k: spec_for_shape(v.shape, logical(k, v), rules, mesh)
+            for k, v in batch_struct.items()}
+
+
+def _abstract_params(spec_tree, dtype=None):
+    def f(s: L.ParamSpec):
+        dt = dtype if (dtype is not None
+                       and jnp.issubdtype(s.dtype, jnp.floating)) else s.dtype
+        return jax.ShapeDtypeStruct(s.shape, dt)
+    return jax.tree_util.tree_map(f, spec_tree,
+                                  is_leaf=lambda x: isinstance(x, L.ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# per-family builders
+# ---------------------------------------------------------------------------
+
+
+def _apply_parallel_mode(rules: AxisRules, cfg: LMConfig,
+                         mesh: Optional[Mesh]) -> AxisRules:
+    """Adjust logical rules for the arch's parallelism mode.
+
+    "fsdp" (pure ZeRO-3): batch and parameter dim-0 shard over the whole
+    mesh; no tensor parallelism (for models whose head counts don't divide
+    the model axis).  "tp_fsdp" keeps the default rules.
+    """
+    if cfg.parallel_mode != "fsdp" or mesh is None:
+        return rules
+    full = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+    return rules.replace(batch=full, fsdp=full, heads=None, kv_heads=None,
+                         ff=None, experts=None, vocab=full)
+
+
+def _lm_train_bundle(arch, shape, rules, mesh, reduced,
+                     unroll=False) -> StepBundle:
+    cfg: LMConfig = arch.reduced if reduced else arch.model
+    if unroll:
+        # cost pass: unroll layers AND the attention q-chunk loop — XLA
+        # cost_analysis counts a loop body once, so exact FLOP/byte/
+        # collective totals need straight-line HLO.
+        dims_u = B.shape_dims(shape, reduced)
+        cfg = dataclasses.replace(cfg, scan_layers=False,
+                                  attn_q_chunk=min(4096, dims_u["seq_len"]),
+                                  loss_chunk=None)
+    rules = _apply_parallel_mode(rules, cfg, mesh)
+    spec_tree = T.lm_spec(cfg)
+    tx = opt_lib.OptimizerConfig(
+        lr=3e-4, weight_decay=0.1, total_steps=10000,
+        quantized_state=cfg.opt_quantized_state).build()
+    abstract_params = _abstract_params(spec_tree)
+    state = trainer.abstract_state(abstract_params, tx)
+    batch = B.input_specs(arch, shape, reduced)
+
+    param_specs = _tree_specs(spec_tree, rules, mesh)
+    by_path = _flat_param_specs(spec_tree, rules, mesh)
+    state_specs = {
+        "params": param_specs,
+        "opt": _suffix_match_specs(state["opt"], by_path),
+        "step": P(),
+    }
+    batch_specs = _batch_specs(batch, rules, mesh, shape.kind)
+
+    loss = functools.partial(_ctx_loss, T.loss_fn, cfg, mesh, rules)
+    dims = B.shape_dims(shape, reduced)
+    # cost pass: one macrobatch (identical FLOPs, 4x less HLO to partition)
+    micro = 1 if unroll else cfg.train_microbatches
+    if dims["global_batch"] % max(micro, 1) != 0:
+        micro = 1
+    step = trainer.make_train_step(loss, tx, microbatches=micro)
+
+    tokens = dims["global_batch"] * dims["seq_len"]
+    flops = lambda: 6 * cfg.params_active() * tokens
+
+    return StepBundle(
+        name=f"{arch.name}:{shape.name}", fn=step,
+        abstract_args=(state, batch),
+        in_specs=(state_specs, batch_specs),
+        donate=(0,), model_flops_fn=flops)
+
+
+def _ctx_loss(loss_fn, cfg, mesh, rules, params, batch):
+    with ShardingContext(mesh, rules):
+        return loss_fn(params, batch, cfg)
+
+
+def _lm_prefill_bundle(arch, shape, rules, mesh, reduced,
+                       unroll=False) -> StepBundle:
+    cfg: LMConfig = arch.reduced if reduced else arch.model
+    if unroll:
+        dims_u = B.shape_dims(shape, reduced)
+        cfg = dataclasses.replace(cfg, scan_layers=False,
+                                  attn_q_chunk=min(4096, dims_u["seq_len"]))
+    rules = _apply_parallel_mode(rules, cfg, mesh)
+    spec_tree = T.lm_spec(cfg)
+    params = _abstract_params(spec_tree, dtype=jnp.bfloat16)
+    batch = B.input_specs(arch, shape, reduced)
+    param_specs = _tree_specs(spec_tree, rules, mesh)
+    batch_specs = _batch_specs(batch, rules, mesh, shape.kind)
+
+    def serve_prefill(params, batch):
+        with ShardingContext(mesh, rules):
+            logits, cache = T.prefill(params, batch["tokens"], cfg)
+        return logits, cache
+
+    dims = B.shape_dims(shape, reduced)
+    tokens = dims["global_batch"] * dims["seq_len"]
+    flops = lambda: 2 * cfg.params_active() * tokens
+
+    return StepBundle(
+        name=f"{arch.name}:{shape.name}", fn=serve_prefill,
+        abstract_args=(params, batch),
+        in_specs=(param_specs, batch_specs),
+        model_flops_fn=flops)
+
+
+def _lm_decode_bundle(arch, shape, rules, mesh, reduced,
+                      unroll=False) -> StepBundle:
+    cfg: LMConfig = arch.reduced if reduced else arch.model
+    if unroll:
+        cfg = dataclasses.replace(cfg, scan_layers=False)
+    dims = B.shape_dims(shape, reduced)
+    b, s = dims["global_batch"], dims["seq_len"]
+
+    # Decode KV caches are the dominant state: shard batch over "data" and
+    # the cache *sequence* axis over "model" (GQA kv-head counts rarely
+    # divide the model axis).  For tiny batches (long_500k: b=1) the whole
+    # mesh shards the sequence axis — SPMD then emits the flash-decoding
+    # split-K schedule (partial softmax + cross-device merge).
+    if mesh is not None:
+        data_size = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+        if b % max(data_size, 1) != 0:
+            pod = ("pod",) if "pod" in mesh.axis_names else ()
+            rules = rules.replace(kv_seq=pod + ("data", "model"), batch=None,
+                                  heads=None, kv_heads=None, ff=None,
+                                  experts=None)
+        else:
+            # heads never shard at decode (kv_seq owns the model axis in
+            # attention); FFN/experts keep tensor/expert parallelism.
+            rules = rules.replace(batch=(("pod", "data")
+                                         if "pod" in mesh.axis_names
+                                         else "data"),
+                                  kv_seq="model", heads=None, kv_heads=None)
+            if cfg.parallel_mode == "fsdp":
+                rules = rules.replace(ff=None, experts=None)
+
+    spec_tree = T.lm_spec(cfg)
+    params = _abstract_params(spec_tree, dtype=jnp.bfloat16)
+    batch = B.input_specs(arch, shape, reduced)
+    cache_shape = (cfg.n_layers, b, s, cfg.n_kv_heads, cfg.resolved_head_dim)
+    cache = (jax.ShapeDtypeStruct(cache_shape, jnp.bfloat16),) * 2
+
+    param_specs = _tree_specs(spec_tree, rules, mesh)
+    cache_spec = spec_for_shape(cache_shape, T.cache_logical_axes(),
+                                rules, mesh)
+    batch_specs = _batch_specs(batch, rules, mesh, shape.kind)
+
+    pos = s - 1   # decode the last slot: worst-case attention span
+
+    def serve_decode(params, cache, batch):
+        with ShardingContext(mesh, rules):
+            logits, new_cache = T.decode_step(
+                params, cache, batch["tokens"], jnp.asarray(pos), cfg)
+        return logits, new_cache
+
+    flops = lambda: 2 * cfg.params_active() * b \
+        + 2 * cfg.n_layers * b * s * cfg.n_kv_heads \
+        * cfg.resolved_head_dim * 2 * (cfg.n_heads // cfg.n_kv_heads)
+
+    return StepBundle(
+        name=f"{arch.name}:{shape.name}", fn=serve_decode,
+        abstract_args=(params, (cache[0], cache[1]), batch),
+        in_specs=(param_specs, (cache_spec, cache_spec), batch_specs),
+        donate=(1,), model_flops_fn=flops)
+
+
+def _gnn_bundle(arch, shape, rules, mesh, reduced) -> StepBundle:
+    cfg: SchNetConfig = arch.reduced if reduced else arch.model
+    dims = B.shape_dims(shape, reduced)
+    if shape.kind in ("gnn_full", "gnn_mini"):
+        d_feat = dims.get("d_feat", 602)
+        task, n_classes = "node", 64
+    else:
+        d_feat, task, n_classes = 0, "graph", cfg.n_classes
+    cfg = dataclasses.replace(cfg, d_feat_in=d_feat, task=task,
+                              n_classes=n_classes)
+
+    spec_tree = G.schnet_spec(cfg)
+    tx = opt_lib.OptimizerConfig(lr=1e-3, total_steps=10000).build()
+    abstract_params = _abstract_params(spec_tree)
+    state = trainer.abstract_state(abstract_params, tx)
+    batch = B.input_specs(arch, shape, reduced)
+
+    param_specs = _tree_specs(spec_tree, rules, mesh)
+    by_path = _flat_param_specs(spec_tree, rules, mesh)
+    state_specs = {"params": param_specs,
+                   "opt": _suffix_match_specs(state["opt"], by_path),
+                   "step": P()}
+    batch_specs = _batch_specs(batch, rules, mesh, shape.kind)
+
+    loss = functools.partial(_ctx_loss, G.loss_fn, cfg, mesh, rules)
+    step = trainer.make_train_step(loss, tx)
+
+    n_edges = batch["edge_index"].shape[1]
+    flops = lambda: (cfg.n_interactions
+                     * (2 * n_edges * cfg.n_rbf * cfg.d_hidden
+                        + 2 * n_edges * cfg.d_hidden ** 2
+                        + 4 * batch["positions"].shape[0]
+                        * cfg.d_hidden ** 2) * 3)  # fwd+bwd ~3×
+
+    return StepBundle(
+        name=f"{arch.name}:{shape.name}", fn=step,
+        abstract_args=(state, batch),
+        in_specs=(state_specs, batch_specs),
+        donate=(0,), model_flops_fn=flops)
+
+
+_RECSYS = {
+    TwoTowerConfig: (R.two_tower_spec, R.two_tower_loss, R.two_tower_score),
+    FMConfig: (R.fm_spec, R.fm_loss, R.fm_logits),
+    DINConfig: (R.din_spec, R.din_loss, R.din_logits),
+    DCNConfig: (R.dcn_spec, R.dcn_loss, R.dcn_logits),
+}
+
+
+def _recsys_bundle(arch, shape, rules, mesh, reduced) -> StepBundle:
+    cfg = arch.reduced if reduced else arch.model
+    spec_fn, loss_fn, score_fn = _RECSYS[type(cfg)]
+    spec_tree = spec_fn(cfg)
+    batch = B.input_specs(arch, shape, reduced)
+    param_specs = _tree_specs(spec_tree, rules, mesh)
+    batch_specs = _batch_specs(batch, rules, mesh, shape.kind)
+    dims = B.shape_dims(shape, reduced)
+
+    if shape.kind == "recsys_train":
+        tx = opt_lib.OptimizerConfig(lr=1e-3, total_steps=10000).build()
+        abstract_params = _abstract_params(spec_tree)
+        state = trainer.abstract_state(abstract_params, tx)
+        by_path = _flat_param_specs(spec_tree, rules, mesh)
+        state_specs = {"params": param_specs,
+                       "opt": _suffix_match_specs(state["opt"], by_path),
+                       "step": P()}
+        loss = functools.partial(_ctx_loss, loss_fn, cfg, mesh, rules)
+        step = trainer.make_train_step(loss, tx)
+        return StepBundle(
+            name=f"{arch.name}:{shape.name}", fn=step,
+            abstract_args=(state, batch),
+            in_specs=(state_specs, batch_specs),
+            donate=(0,), model_flops_fn=_recsys_flops(cfg, dims, train=True))
+
+    if shape.kind == "recsys_serve":
+        params = _abstract_params(spec_tree)
+
+        def serve(params, batch):
+            with ShardingContext(mesh, rules):
+                return score_fn(params, batch, cfg)
+
+        return StepBundle(
+            name=f"{arch.name}:{shape.name}", fn=serve,
+            abstract_args=(params, batch),
+            in_specs=(param_specs, batch_specs),
+            model_flops_fn=_recsys_flops(cfg, dims, train=False))
+
+    if shape.kind == "retrieval_cand":
+        params = _abstract_params(spec_tree)
+        n_cand = dims["n_candidates"]
+        k_top = min(100, n_cand)
+
+        if isinstance(cfg, TwoTowerConfig):
+            cand_fn = R.retrieval_scores
+            d = cfg.embed_dim
+            tower = sum(a * b for a, b in zip(
+                (d * cfg.n_item_features,) + cfg.tower_mlp[:-1],
+                cfg.tower_mlp))
+            flops = lambda: 2 * n_cand * (tower + cfg.tower_mlp[-1]
+                                          * dims["batch"])
+        elif isinstance(cfg, FMConfig):
+            cand_fn = R.fm_candidate_scores
+            flops = lambda: 2 * n_cand * cfg.embed_dim
+        elif isinstance(cfg, DINConfig):
+            cand_fn = R.din_candidate_scores
+            per = _recsys_flops(cfg, {"batch": 1}, train=False)
+            flops = lambda: n_cand * per()
+        else:
+            cand_fn = R.dcn_candidate_scores
+            per = _recsys_flops(cfg, {"batch": 1}, train=False)
+            flops = lambda: n_cand * per()
+
+        def retrieve(params, batch):
+            with ShardingContext(mesh, rules):
+                scores = cand_fn(params, batch, cfg)
+                if scores.ndim == 1:
+                    scores = scores[None, :]
+                return jax.lax.top_k(scores, k_top)
+
+        return StepBundle(
+            name=f"{arch.name}:{shape.name}", fn=retrieve,
+            abstract_args=(params, batch),
+            in_specs=(param_specs, batch_specs),
+            model_flops_fn=flops)
+
+    raise ValueError(shape.kind)
+
+
+def _recsys_flops(cfg, dims, train: bool):
+    mult = 6 if train else 2
+    b = dims["batch"]
+
+    def f():
+        if isinstance(cfg, TwoTowerConfig):
+            d = cfg.embed_dim
+            tower_dims = (d * cfg.n_user_features,) + cfg.tower_mlp
+            tower = sum(a * o for a, o in zip(tower_dims, tower_dims[1:]))
+            per = 2 * tower + (b if train else 1) * cfg.tower_mlp[-1]
+        elif isinstance(cfg, FMConfig):
+            per = 3 * cfg.n_sparse * cfg.embed_dim
+        elif isinstance(cfg, DINConfig):
+            d = cfg.embed_dim
+            attn_dims = (4 * d,) + cfg.attn_mlp + (1,)
+            attn = sum(a * o for a, o in zip(attn_dims, attn_dims[1:]))
+            mlp_dims = ((2 + cfg.n_context_features) * d,) + cfg.mlp + (1,)
+            mlp = sum(a * o for a, o in zip(mlp_dims, mlp_dims[1:]))
+            per = cfg.seq_len * attn + mlp
+        else:  # DCN
+            d0 = cfg.n_dense + cfg.n_sparse * cfg.embed_dim
+            cross = cfg.n_cross_layers * d0 * d0
+            mlp_dims = (d0,) + cfg.mlp + (1,)
+            mlp = sum(a * o for a, o in zip(mlp_dims, mlp_dims[1:]))
+            per = cross + mlp
+        return mult * b * per
+
+    return f
+
+
+def _kb_search_bundle(arch, shape, rules, mesh, reduced) -> StepBundle:
+    """The paper's production path: compressed (PCA-128 + int8, 24×) KB
+    sharded over the mesh; fused query transform; distributed top-k."""
+    cfg = arch.reduced if reduced else arch.model
+    dims = B.shape_dims(shape, reduced)
+    n_docs = dims["n_docs"]
+    if mesh is not None:
+        total = 1
+        for v in mesh.shape.values():
+            total *= v
+        n_docs = (n_docs + total - 1) // total * total
+    d, dc = cfg.dim, cfg.pca_dim
+    k = dims["k"]
+
+    index_state = {
+        "storage": jax.ShapeDtypeStruct((n_docs, dc), jnp.uint8),
+        "mu1": jax.ShapeDtypeStruct((d,), jnp.float32),
+        "w": jax.ShapeDtypeStruct((d, dc), jnp.float32),
+        "mu2": jax.ShapeDtypeStruct((dc,), jnp.float32),
+        "scale": jax.ShapeDtypeStruct((dc,), jnp.float32),
+        "zero": jax.ShapeDtypeStruct((dc,), jnp.float32),
+    }
+    batch = B.input_specs(arch, shape, reduced)
+
+    doc_axes = rules.get("kb_docs") or ()
+    index_specs = {
+        "storage": spec_for_shape((n_docs, dc), ("kb_docs", None), rules,
+                                  mesh),
+        "mu1": P(), "w": P(), "mu2": P(), "scale": P(), "zero": P(),
+    }
+    batch_specs = _batch_specs(batch, rules, mesh, shape.kind)
+
+    storage_kind = getattr(cfg, "storage", "int8")
+    topk_impl = getattr(cfg, "topk_impl", "naive")
+    if storage_kind == "fp32":
+        index_state["storage"] = jax.ShapeDtypeStruct((n_docs, dc),
+                                                      jnp.float32)
+    elif storage_kind == "onebit":
+        index_state["storage"] = jax.ShapeDtypeStruct((n_docs, dc // 32),
+                                                      jnp.uint32)
+
+    def _encode_queries(index, q):
+        y = q - index["mu1"]
+        y = y * jax.lax.rsqrt(jnp.sum(y * y, -1, keepdims=True) + 1e-24)
+        z = y @ index["w"] - index["mu2"]
+        return z * jax.lax.rsqrt(jnp.sum(z * z, -1, keepdims=True) + 1e-24)
+
+    def _score_block(index, z, block):
+        """(Qc, dc) queries x one storage block -> (Qc, B) scores."""
+        if storage_kind == "fp32":
+            return jnp.einsum("qd,nd->qn", z.astype(jnp.bfloat16),
+                              block.astype(jnp.bfloat16),
+                              preferred_element_type=jnp.float32)
+        if storage_kind == "onebit":
+            from repro.core.quantization import unpack_bits
+            signs = unpack_bits(block, dc).astype(jnp.bfloat16)
+            zq = jnp.where(z >= 0, 1.0, -1.0).astype(jnp.bfloat16)
+            return 0.25 * jnp.einsum("qd,nd->qn", zq, signs,
+                                     preferred_element_type=jnp.float32)
+        qs = (z * index["scale"]).astype(jnp.bfloat16)
+        s = jnp.einsum("qd,nd->qn", qs, block.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+        return s + (z @ index["zero"])[:, None]
+
+    from repro.retrieval.topk import merge_topk
+    from repro.utils import cdiv, first_divisor_leq
+
+    doc_axes_t = ()
+    if mesh is not None:
+        ax = rules.get("kb_docs")
+        doc_axes_t = (ax,) if isinstance(ax, str) else tuple(ax or ())
+        doc_axes_t = tuple(a for a in doc_axes_t if a in mesh.axis_names)
+
+    def _stream_topk(index, z, storage, base):
+        """Running top-k over doc blocks of ``storage`` (local rows).
+        The (Q, D) score matrix never exists (topk_blocks schedule)."""
+        n_loc = storage.shape[0]
+        dchunk = getattr(cfg, "doc_chunk", 131072)
+        n_blocks = first_divisor_leq(n_loc, cdiv(n_loc, dchunk))
+        blocks = storage.reshape(n_blocks, n_loc // n_blocks,
+                                 *storage.shape[1:])
+        qc = getattr(cfg, "query_chunk", 512)
+
+        def q_chunk(zc):
+            def body(carry, args):
+                vals, idx = carry
+                bi, block = args
+                s = _score_block(index, zc, block)
+                bv, bidx = jax.lax.top_k(s, min(k, s.shape[1]))
+                bidx = bidx + bi * (n_loc // n_blocks) + base
+                if bv.shape[1] < k:
+                    pad = k - bv.shape[1]
+                    bv = jnp.pad(bv, ((0, 0), (0, pad)),
+                                 constant_values=-jnp.inf)
+                    bidx = jnp.pad(bidx, ((0, 0), (0, pad)))
+                return merge_topk(vals, idx, bv, bidx, k), None
+
+            init = (jnp.full((zc.shape[0], k), -jnp.inf, jnp.float32),
+                    jnp.zeros((zc.shape[0], k), jnp.int32))
+            (vals, idx), _ = jax.lax.scan(
+                body, init, (jnp.arange(n_blocks), blocks))
+            return vals, idx
+
+        n_qc = first_divisor_leq(z.shape[0], cdiv(z.shape[0], qc))
+        zc = z.reshape(n_qc, z.shape[0] // n_qc, dc)
+        vals, idx = jax.lax.map(q_chunk, zc)
+        return vals.reshape(-1, k), idx.reshape(-1, k)
+
+    def search(index, batch):
+        with ShardingContext(mesh, rules):
+            z = _encode_queries(index, batch["queries"])
+            if topk_impl == "naive" or not doc_axes_t:
+                if topk_impl == "naive":
+                    scores = _score_block(index, z, index["storage"])
+                    return jax.lax.top_k(scores, k)
+                return _stream_topk(index, z, index["storage"], 0)
+
+        # two_stage distributed: shard_map — each device streams a running
+        # top-k over ITS index shard, then a k-candidate all-gather + merge.
+        # Per-query cross-device traffic is O(shards * k * 8B), independent
+        # of index size (retrieval/sharded.py design).
+        def local_search(storage_shard, mu1, w, mu2, scale, zero, queries):
+            index_l = {"storage": storage_shard, "mu1": mu1, "w": w,
+                       "mu2": mu2, "scale": scale, "zero": zero}
+            z = _encode_queries(index_l, queries)
+            shard_id = jnp.zeros((), jnp.int32)
+            for a in doc_axes_t:
+                shard_id = shard_id * mesh.shape[a] + jax.lax.axis_index(a)
+            n_loc = storage_shard.shape[0]
+            vals, idx = _stream_topk(index_l, z, storage_shard,
+                                     shard_id * n_loc)
+            for a in doc_axes_t:
+                vals = jax.lax.all_gather(vals, a, axis=1, tiled=True)
+                idx = jax.lax.all_gather(idx, a, axis=1, tiled=True)
+            fvals, pos = jax.lax.top_k(vals, k)
+            return fvals, jnp.take_along_axis(idx, pos, axis=1)
+
+        doc_spec = P(doc_axes_t if len(doc_axes_t) > 1 else doc_axes_t[0],
+                     None)
+        fn = jax.shard_map(
+            local_search, mesh=mesh,
+            in_specs=(doc_spec, P(), P(), P(), P(), P(), P()),
+            out_specs=(P(), P()), check_vma=False)
+        return fn(index["storage"], index["mu1"], index["w"], index["mu2"],
+                  index["scale"], index["zero"], batch["queries"])
+
+    n_q = batch["queries"].shape[0]
+    flops = lambda: 2 * n_q * (d * dc + n_docs * dc)
+
+    return StepBundle(
+        name=f"{arch.name}:{shape.name}", fn=search,
+        abstract_args=(index_state, batch),
+        in_specs=(index_specs, batch_specs),
+        model_flops_fn=flops)
+
+
+# ---------------------------------------------------------------------------
+# dispatcher
+# ---------------------------------------------------------------------------
+
+
+def build_step(arch: ArchConfig, shape: ShapeSpec, mesh: Optional[Mesh],
+               rules: Optional[AxisRules], reduced: bool = False,
+               unroll: bool = False) -> StepBundle:
+    if rules is None:
+        from repro.parallel.sharding import SINGLE_POD_RULES
+        rules = SINGLE_POD_RULES
+    kind = shape.kind
+    if kind == "lm_train":
+        return _lm_train_bundle(arch, shape, rules, mesh, reduced, unroll)
+    if kind == "lm_prefill":
+        return _lm_prefill_bundle(arch, shape, rules, mesh, reduced, unroll)
+    if kind == "lm_decode":
+        return _lm_decode_bundle(arch, shape, rules, mesh, reduced, unroll)
+    if kind.startswith("gnn"):
+        return _gnn_bundle(arch, shape, rules, mesh, reduced)
+    if kind.startswith("recsys") or kind == "retrieval_cand":
+        return _recsys_bundle(arch, shape, rules, mesh, reduced)
+    if kind == "kb_search":
+        return _kb_search_bundle(arch, shape, rules, mesh, reduced)
+    raise ValueError(f"unknown shape kind {kind!r}")

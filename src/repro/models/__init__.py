@@ -1,0 +1,6 @@
+"""Model zoo: transformer LM (dense/MoE), SchNet GNN, recsys architectures.
+
+All models are pure-functional param-dict modules built on the ParamSpec DSL
+in :mod:`repro.models.layers` — a single source of truth for shapes, init
+and logical sharding axes.
+"""

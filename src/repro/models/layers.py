@@ -1,0 +1,191 @@
+"""ParamSpec DSL + core layers (self-contained; no flax).
+
+A model is described by a pytree of :class:`ParamSpec` leaves; the same tree
+yields (a) initialized parameters, (b) logical sharding axes, and (c)
+``jax.eval_shape``-compatible abstract params for the multi-pod dry-run —
+one source of truth for shape, init and distribution.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import shard
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]        # logical axis per dim
+    init: str = "normal"                   # normal|zeros|ones|glorot|embed
+    scale: float = 1.0
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(rng: jax.Array, spec_tree: Any) -> Any:
+    """Materialise parameters from a ParamSpec tree (deterministic)."""
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=_is_spec)
+    keys = jax.random.split(rng, len(leaves))
+
+    def make(key, spec: ParamSpec):
+        shape, dt = spec.shape, spec.dtype
+        if spec.init == "zeros":
+            return jnp.zeros(shape, dt)
+        if spec.init == "ones":
+            return jnp.ones(shape, dt)
+        if spec.init == "normal":
+            fan_in = shape[0] if len(shape) >= 2 else max(shape[-1], 1)
+            std = spec.scale / math.sqrt(fan_in)
+            return (jax.random.normal(key, shape, jnp.float32) * std
+                    ).astype(dt)
+        if spec.init == "glorot":
+            fan_in = int(np.prod(shape[:-1])) or 1
+            fan_out = shape[-1]
+            limit = math.sqrt(6.0 / (fan_in + fan_out)) * spec.scale
+            return jax.random.uniform(key, shape, jnp.float32,
+                                      -limit, limit).astype(dt)
+        if spec.init == "embed":
+            return (jax.random.normal(key, shape, jnp.float32)
+                    * spec.scale).astype(dt)
+        raise ValueError(f"unknown init {spec.init!r}")
+
+    params = [make(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, params)
+
+
+def abstract_params(spec_tree: Any) -> Any:
+    """ShapeDtypeStruct tree (no allocation) — dry-run path."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree,
+        is_leaf=_is_spec)
+
+
+def logical_axes(spec_tree: Any) -> Any:
+    """Pytree of logical-axis tuples mirroring the params tree."""
+    return jax.tree_util.tree_map(lambda s: s.axes, spec_tree,
+                                  is_leaf=_is_spec)
+
+
+def param_count(spec_tree: Any) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree_util.tree_leaves(spec_tree, is_leaf=_is_spec))
+
+
+# ---------------------------------------------------------------------------
+# layer applications (params are plain dict leaves produced from specs)
+# ---------------------------------------------------------------------------
+
+
+def dense_spec(d_in: int, d_out: int, in_axis: Optional[str],
+               out_axis: Optional[str], bias: bool = True,
+               init: str = "normal", scale: float = 1.0) -> dict:
+    spec = {"w": ParamSpec((d_in, d_out), (in_axis, out_axis), init, scale)}
+    if bias:
+        spec["b"] = ParamSpec((d_out,), (out_axis,), "zeros")
+    return spec
+
+
+def dense(p: dict, x: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    w = p["w"].astype(compute_dtype)
+    y = x.astype(compute_dtype) @ w
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+def rmsnorm_spec(d: int, axis: Optional[str] = None) -> dict:
+    return {"scale": ParamSpec((d,), (axis,), "ones")}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def layernorm_spec(d: int, axis: Optional[str] = None) -> dict:
+    return {"scale": ParamSpec((d,), (axis,), "ones"),
+            "bias": ParamSpec((d,), (axis,), "zeros")}
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def mlp_spec(dims: Sequence[int], in_axis=None, hidden_axis="ff",
+             bias: bool = True) -> list:
+    specs = []
+    for i in range(len(dims) - 1):
+        a_in = in_axis if i == 0 else hidden_axis
+        a_out = hidden_axis if i < len(dims) - 2 else None
+        specs.append(dense_spec(dims[i], dims[i + 1], a_in, a_out, bias))
+    return specs
+
+
+def mlp(p: list, x: jax.Array, act=jax.nn.relu,
+        compute_dtype=jnp.bfloat16) -> jax.Array:
+    for i, layer in enumerate(p):
+        x = dense(layer, x, compute_dtype)
+        if i < len(p) - 1:
+            x = act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(head_dim: int, max_len: int, theta: float = 10_000.0,
+                ) -> tuple[jax.Array, jax.Array]:
+    freqs = 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                        dtype=jnp.float32) / head_dim))
+    pos = jnp.arange(max_len, dtype=jnp.float32)
+    ang = jnp.outer(pos, freqs)                       # (S, hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, n, head_dim); cos/sin: (S, head_dim/2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    cos = cos[:, None, :].astype(x.dtype)
+    sin = sin[:, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope_at(x: jax.Array, cos: jax.Array, sin: jax.Array,
+                  positions: jax.Array) -> jax.Array:
+    """Decode-time rope: positions (B,) for single-token queries
+    x (B, 1, n, hd)."""
+    c = cos[positions][:, None, None, :].astype(x.dtype)   # (B,1,1,hd/2)
+    s = sin[positions][:, None, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def squared_relu(x: jax.Array) -> jax.Array:
+    """Primer/nemotron activation."""
+    r = jax.nn.relu(x)
+    return r * r

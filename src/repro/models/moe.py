@@ -1,0 +1,151 @@
+"""Mixture-of-Experts FFN with grouped, sort-based token dispatch.
+
+Tokens are processed in **groups** aligned with the data-parallel shards
+(MaxText-style): each group argsorts *its own* tokens by assigned expert,
+computes positions-within-expert via a searchsorted prefix, and drops tokens
+beyond each expert's per-group capacity (written to a sacrificial slot).
+All sorting/scatter/gather indexing is then local to a data shard; the only
+cross-device movement is the (groups × experts × capacity × d) dispatch
+buffer resharding for the expert GEMMs — the all-to-all that defines
+expert parallelism.  This avoids both the O(T·E·C) GShard one-hot tensors
+and any global (cross-shard) sort.
+
+Load-balancing auxiliary loss follows Switch (f·P, scaled by E).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig, MoEConfig
+from repro.models import layers as L
+from repro.parallel.sharding import ShardingContext, shard
+
+
+def moe_spec(cfg: LMConfig) -> dict:
+    moe = cfg.moe
+    d, ff, e = cfg.d_model, cfg.d_ff, moe.n_experts
+    spec = {
+        "router": L.ParamSpec((d, e), (None, "experts"), "normal"),
+        "w_out": L.ParamSpec((e, ff, d), ("experts", "ff", "fsdp")),
+        "w_in": L.ParamSpec((e, d, ff), ("experts", "fsdp", "ff")),
+    }
+    if cfg.ffn == "swiglu":
+        spec["w_gate"] = L.ParamSpec((e, d, ff), ("experts", "fsdp", "ff"))
+    return spec
+
+
+def _activation(cfg: LMConfig, h: jax.Array,
+                g: Optional[jax.Array]) -> jax.Array:
+    if cfg.ffn == "swiglu":
+        return jax.nn.silu(g) * h
+    if cfg.ffn == "squared_relu":
+        return L.squared_relu(h)
+    return jax.nn.gelu(h)
+
+
+def load_balance_loss(probs: jax.Array, expert_ids: jax.Array,
+                      n_experts: int) -> jax.Array:
+    """Switch-style aux loss: E · Σ_e f_e · P_e (over all tokens)."""
+    f = jnp.mean(
+        jax.nn.one_hot(expert_ids, n_experts, dtype=jnp.float32),
+        axis=tuple(range(expert_ids.ndim)))
+    p = jnp.mean(probs.astype(jnp.float32),
+                 axis=tuple(range(probs.ndim - 1)))
+    return n_experts * jnp.sum(f * p)
+
+
+def _n_groups(t: int) -> int:
+    """Dispatch groups = data-parallel shards (1 without a mesh)."""
+    ctx = ShardingContext.current()
+    if ctx is None or ctx.mesh is None or ctx.rules is None:
+        return 1
+    ax = ctx.rules.get("batch")
+    if ax is None:
+        return 1
+    axes = (ax,) if isinstance(ax, str) else ax
+    g = 1
+    for a in axes:
+        g *= ctx.mesh.shape.get(a, 1)
+    while g > 1 and t % g != 0:
+        g //= 2
+    return max(g, 1)
+
+
+def _dispatch_group(x: jax.Array, expert_ids: jax.Array, gate: jax.Array,
+                    capacity: int, e: int, dt):
+    """One group's sort-based dispatch.  x (Tg, d); ids/gate (Tg, k).
+    Returns (buf (E, C, d), combine metadata)."""
+    tg, d = x.shape
+    k = expert_ids.shape[-1]
+    flat_e = expert_ids.reshape(-1)                        # (Tg·k,)
+    sort_idx = jnp.argsort(flat_e)
+    sorted_e = flat_e[sort_idx]
+    token_of = sort_idx // k
+    first_occ = jnp.searchsorted(sorted_e, jnp.arange(e))
+    pos = jnp.arange(tg * k) - jnp.take(first_occ, sorted_e)
+    keep = pos < capacity
+    slot = jnp.where(keep, pos, capacity)   # dropped → sacrificial slot
+
+    buf = jnp.zeros((e, capacity + 1, d), dt)
+    buf = buf.at[sorted_e, slot].set(x[token_of])
+    buf = buf[:, :capacity]
+    gate_sorted = gate.reshape(-1)[sort_idx].astype(dt)
+    return buf, (sorted_e, slot, token_of, keep, gate_sorted)
+
+
+def _combine_group(out_buf: jax.Array, meta, tg: int, dt) -> jax.Array:
+    """Scatter-add weighted expert outputs back to the group's tokens."""
+    sorted_e, slot, token_of, keep, gate_sorted = meta
+    e, capacity, d = out_buf.shape
+    padded = jnp.concatenate(
+        [out_buf, jnp.zeros((e, 1, d), dt)], axis=1)
+    vals = padded[sorted_e, slot]
+    vals = vals * gate_sorted[:, None] * keep.astype(dt)[:, None]
+    return jnp.zeros((tg, d), dt).at[token_of].add(vals)
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg: LMConfig,
+            ) -> tuple[jax.Array, jax.Array]:
+    """x (T, d) flat tokens → (out (T, d), aux_loss scalar)."""
+    moe = cfg.moe
+    t, d = x.shape
+    e, k = moe.n_experts, moe.top_k
+    dt = x.dtype
+    g = _n_groups(t)
+    tg = t // g
+
+    # --- routing (fp32)
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                   # (T, E)
+    gate, expert_ids = jax.lax.top_k(probs, k)                # (T, k)
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+    aux = load_balance_loss(probs, expert_ids[:, 0], e)
+
+    capacity = max(1, int(moe.capacity_factor * tg * k / e))
+
+    # --- per-group dispatch (vmapped; groups align with data shards so all
+    #     index math is shard-local)
+    xg = x.reshape(g, tg, d)
+    idg = expert_ids.reshape(g, tg, k)
+    gateg = gate.reshape(g, tg, k)
+    buf, meta = jax.vmap(
+        lambda xx, ii, gg: _dispatch_group(xx, ii, gg, capacity, e, dt)
+    )(xg, idg, gateg)
+    buf = shard(buf, "batch", "experts", None, None)          # (G, E, C, d)
+
+    # --- expert GEMMs (experts sharded over "model"; groups over "data")
+    h = jnp.einsum("gecd,edf->gecf", buf, p["w_in"].astype(dt))
+    gg = (jnp.einsum("gecd,edf->gecf", buf, p["w_gate"].astype(dt))
+          if "w_gate" in p else None)
+    h = _activation(cfg, h, gg)
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["w_out"].astype(dt))
+    out_buf = shard(out_buf, "batch", "experts", None, None)
+
+    # --- combine
+    out = jax.vmap(lambda ob, m: _combine_group(ob, m, tg, dt))(
+        out_buf, meta)
+    return out.reshape(t, d), aux.astype(jnp.float32)

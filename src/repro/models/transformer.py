@@ -1,0 +1,323 @@
+"""Transformer LM (dense + MoE) — training, prefill, and decode paths.
+
+Layers are *stacked* (leading L axis) and iterated with ``lax.scan``: compile
+time and HLO size are O(1) in depth — a 96-layer nemotron-340b lowers as fast
+as a 2-layer smoke model.  Activation checkpointing wraps the scanned body
+(``remat = none | dots | full``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.parallel.sharding import shard
+
+
+def _stack_specs(spec_tree: Any, n: int, axis_name: Optional[str] = None):
+    """Prepend a stacked-layer dim to every ParamSpec in the tree."""
+    return jax.tree_util.tree_map(
+        lambda s: L.ParamSpec((n, *s.shape), (axis_name, *s.axes),
+                              s.init, s.scale, s.dtype),
+        spec_tree, is_leaf=lambda x: isinstance(x, L.ParamSpec))
+
+
+def ffn_spec(cfg: LMConfig) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    spec = {"w_out": L.ParamSpec((ff, d), ("ff", "fsdp"))}
+    spec["w_in"] = L.ParamSpec((d, ff), ("fsdp", "ff"))
+    if cfg.ffn == "swiglu":
+        spec["w_gate"] = L.ParamSpec((d, ff), ("fsdp", "ff"))
+    return spec
+
+
+def dense_ffn(p: dict, x: jax.Array, cfg: LMConfig) -> jax.Array:
+    dt = x.dtype
+    h = x @ p["w_in"].astype(dt)
+    if cfg.ffn == "swiglu":
+        g = x @ p["w_gate"].astype(dt)
+        h = jax.nn.silu(g) * h
+    elif cfg.ffn == "squared_relu":
+        h = L.squared_relu(h)
+    else:
+        h = jax.nn.gelu(h)
+    h = shard(h, "batch", None, "ff")
+    return h @ p["w_out"].astype(dt)
+
+
+def layer_spec(cfg: LMConfig) -> dict:
+    spec = {
+        "attn_norm": L.rmsnorm_spec(cfg.d_model),
+        "attn": A.attention_spec(cfg),
+        "ffn_norm": L.rmsnorm_spec(cfg.d_model),
+    }
+    spec["ffn"] = M.moe_spec(cfg) if cfg.moe else ffn_spec(cfg)
+    return spec
+
+
+def lm_spec(cfg: LMConfig) -> dict:
+    spec = {
+        "embed": L.ParamSpec((cfg.vocab_size, cfg.d_model),
+                             ("vocab", "embed"), "embed", scale=0.02),
+        "layers": _stack_specs(layer_spec(cfg), cfg.n_layers),
+        "final_norm": L.rmsnorm_spec(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = L.ParamSpec((cfg.d_model, cfg.vocab_size),
+                                      ("embed", "vocab"), "normal")
+    return spec
+
+
+def init(rng: jax.Array, cfg: LMConfig) -> dict:
+    return L.init_params(rng, lm_spec(cfg))
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def _layer_body(x: jax.Array, lp: dict, cos, sin, cfg: LMConfig,
+                ) -> tuple[jax.Array, jax.Array]:
+    """One transformer block. Returns (x, aux_loss)."""
+    h = A.self_attention(lp["attn"], L.rmsnorm(lp["attn_norm"], x),
+                         cos, sin, cfg)
+    x = x + h
+    y = L.rmsnorm(lp["ffn_norm"], x)
+    if cfg.moe:
+        b, s, d = y.shape
+        out, aux = M.moe_ffn(lp["ffn"], y.reshape(b * s, d), cfg)
+        out = out.reshape(b, s, d)
+    else:
+        out, aux = dense_ffn(lp["ffn"], y, cfg), jnp.zeros((), jnp.float32)
+    x = x + out
+    x = shard(x, "batch", None, None)
+    return x, aux
+
+
+def _remat_wrap(fn, cfg: LMConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+
+def forward_features(params: dict, tokens: jax.Array, cfg: LMConfig):
+    """tokens (B, S) → (final hidden states (B, S, d), moe aux loss)."""
+    b, s = tokens.shape
+    dt = jnp.bfloat16
+    x = params["embed"][tokens].astype(dt)            # (B, S, d)
+    x = shard(x, "batch", None, None)
+    cos, sin = L.rope_angles(cfg.resolved_head_dim, s, cfg.rope_theta)
+
+    body = _remat_wrap(
+        lambda x, lp: _layer_body(x, lp, cos, sin, cfg), cfg)
+
+    if cfg.scan_layers:
+        def scan_fn(carry, lp):
+            x, aux = carry
+            x, a = body(x, lp)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(scan_fn, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda p: p[i], params["layers"])
+            x, a = body(x, lp)
+            aux = aux + a
+    x = L.rmsnorm(params["final_norm"], x)
+    return x, aux
+
+
+def forward(params: dict, tokens: jax.Array, cfg: LMConfig) -> jax.Array:
+    """tokens (B, S) → logits (B, S, V)."""
+    x, aux = forward_features(params, tokens, cfg)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32),
+                        head.astype(jnp.float32))
+    logits = shard(logits, "batch", None, "vocab")
+    return logits, aux
+
+
+def _ce_chunk(x_chunk: jax.Array, labels_chunk: jax.Array,
+              mask_chunk, head: jax.Array) -> jax.Array:
+    """Sum of token NLLs for one chunk.
+
+    CE is ``logsumexp − masked-reduce(gold)`` rather than take_along_axis:
+    with the vocab axis sharded, both terms are plain reductions that SPMD
+    turns into per-shard partials + one psum — no (T, V) all-gather.
+    """
+    logits = x_chunk.astype(jnp.float32) @ head.astype(jnp.float32)
+    logits = shard(logits, "batch", "vocab")
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(labels_chunk.dtype, logits.shape, 1)
+    gold = jnp.sum(
+        jnp.where(vocab_iota == labels_chunk[:, None], logits, 0.0), axis=-1)
+    nll = lse - gold
+    if mask_chunk is not None:
+        nll = nll * mask_chunk
+    return jnp.sum(nll)
+
+
+def loss_fn(params: dict, batch: dict, cfg: LMConfig) -> tuple[jax.Array, dict]:
+    """Next-token cross-entropy + MoE aux loss.
+
+    The CE runs over token chunks under ``jax.checkpoint``: the full
+    (tokens, vocab) logits tensor — the largest buffer of naive LM training
+    — is never materialized (chunk logits are recomputed in the backward
+    pass).  ``cfg.loss_chunk=None`` restores the single-pass form (used by
+    the dry-run cost pass where loop bodies must be unrolled).
+    """
+    x, aux = forward_features(params, batch["tokens"], cfg)
+    b, s, d = x.shape
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    xf = x.reshape(b * s, d)
+    labels = batch["labels"].reshape(b * s)
+    mask = batch.get("mask")
+    mask_f = mask.reshape(b * s) if mask is not None else None
+
+    chunk = cfg.loss_chunk
+    if chunk is None or (b * s) <= chunk or (b * s) % chunk != 0:
+        nll_sum = _ce_chunk(xf, labels, mask_f, head)
+    else:
+        n_chunks = (b * s) // chunk
+        xc = xf.reshape(n_chunks, chunk, d)
+        lc = labels.reshape(n_chunks, chunk)
+        mc = (mask_f.reshape(n_chunks, chunk) if mask_f is not None
+              else jnp.ones((n_chunks, 1), jnp.float32))
+        use_mask = mask_f is not None
+        ce_body = jax.checkpoint(
+            lambda args: _ce_chunk(args[0], args[1],
+                                   args[2] if use_mask else None, head))
+
+        def scan_fn(acc, args):
+            return acc + ce_body(args), None
+
+        nll_sum, _ = jax.lax.scan(scan_fn, jnp.zeros((), jnp.float32),
+                                  (xc, lc, mc))
+
+    denom = (jnp.maximum(jnp.sum(mask_f), 1.0) if mask_f is not None
+             else b * s)
+    ce = nll_sum / denom
+    aux_w = cfg.moe.router_aux_weight if cfg.moe else 0.0
+    total = ce + aux_w * aux / max(cfg.n_layers, 1)
+    return total, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: LMConfig,
+            cache_len: Optional[int] = None):
+    """tokens (B, S) → (last-token logits (B, V), kv caches (L, B, S*, KV, hd)).
+
+    ``cache_len`` pads the cache for subsequent decode steps.
+    """
+    b, s = tokens.shape
+    s_cache = cache_len or s
+    dt = jnp.bfloat16
+    x = params["embed"][tokens].astype(dt)
+    x = shard(x, "batch", None, None)
+    cos, sin = L.rope_angles(cfg.resolved_head_dim, max(s, s_cache),
+                             cfg.rope_theta)
+
+    def scan_fn(x, lp):
+        h, k, v = A.prefill_attention(
+            lp["attn"], L.rmsnorm(lp["attn_norm"], x), cos, sin, cfg)
+        x = x + h
+        y = L.rmsnorm(lp["ffn_norm"], x)
+        if cfg.moe:
+            bb, ss, d = y.shape
+            out, _ = M.moe_ffn(lp["ffn"], y.reshape(bb * ss, d), cfg)
+            out = out.reshape(bb, ss, d)
+        else:
+            out = dense_ffn(lp["ffn"], y, cfg)
+        x = x + out
+        if s_cache > s:
+            pad = [(0, 0), (0, s_cache - s), (0, 0), (0, 0)]
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        return x, (k, v)
+
+    if cfg.scan_layers:
+        x, (ks, vs) = jax.lax.scan(scan_fn, x, params["layers"])
+    else:
+        all_k, all_v = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda p: p[i], params["layers"])
+            x, (k, v) = scan_fn(x, lp)
+            all_k.append(k)
+            all_v.append(v)
+        ks, vs = jnp.stack(all_k), jnp.stack(all_v)
+    x = L.rmsnorm(params["final_norm"], x[:, -1:])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = (x.astype(jnp.float32) @ head.astype(jnp.float32))[:, 0]
+    return logits, (ks, vs)
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> tuple[jax.Array, jax.Array]:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+             cfg.resolved_head_dim)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def cache_logical_axes() -> tuple[Optional[str], ...]:
+    return (None, "batch", "kv_seq", "kv_heads", None)
+
+
+def decode_step(params: dict, cache: tuple[jax.Array, jax.Array],
+                tokens: jax.Array, pos: jax.Array, cfg: LMConfig):
+    """One decode step: tokens (B,) new token ids at position ``pos``.
+
+    Returns (logits (B, V), updated cache).  The layer loop is a scan over
+    (params, cache) jointly.
+    """
+    ks, vs = cache
+    b = tokens.shape[0]
+    dt = jnp.bfloat16
+    x = params["embed"][tokens][:, None, :].astype(dt)     # (B, 1, d)
+    s_max = ks.shape[2]
+    cos, sin = L.rope_angles(cfg.resolved_head_dim, s_max, cfg.rope_theta)
+
+    def scan_fn(x, layer):
+        lp, k_c, v_c = layer
+        h, k_c, v_c = A.decode_attention(
+            lp["attn"], L.rmsnorm(lp["attn_norm"], x), k_c, v_c, pos,
+            cos, sin, cfg)
+        x = x + h
+        y = L.rmsnorm(lp["ffn_norm"], x)
+        if cfg.moe:
+            out, _ = M.moe_ffn(lp["ffn"], y.reshape(b, -1), cfg)
+            out = out[:, None, :]
+        else:
+            out = dense_ffn(lp["ffn"], y, cfg)
+        return x + out, (k_c, v_c)
+
+    if cfg.scan_layers:
+        x, (ks, vs) = jax.lax.scan(scan_fn, x, (params["layers"], ks, vs))
+    else:
+        new_k, new_v = [], []
+        for i in range(cfg.n_layers):
+            layer = jax.tree_util.tree_map(lambda p: p[i],
+                                           (params["layers"], ks, vs))
+            x, (k_c, v_c) = scan_fn(x, layer)
+            new_k.append(k_c)
+            new_v.append(v_c)
+        ks, vs = jnp.stack(new_k), jnp.stack(new_v)
+    x = L.rmsnorm(params["final_norm"], x)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = (x.astype(jnp.float32) @ head.astype(jnp.float32))[:, 0]
+    return logits, (ks, vs)

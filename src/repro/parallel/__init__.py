@@ -1,0 +1,10 @@
+"""Distribution utilities: logical-axis sharding rules, compressed collectives."""
+
+from repro.parallel.sharding import (AxisRules, MULTI_POD_RULES,
+                                     SINGLE_POD_RULES, ShardingContext,
+                                     logical_to_spec, shard,
+                                     shard_constraint, spec_for_shape)
+
+__all__ = ["AxisRules", "MULTI_POD_RULES", "SINGLE_POD_RULES",
+           "ShardingContext", "logical_to_spec", "shard",
+           "shard_constraint", "spec_for_shape"]

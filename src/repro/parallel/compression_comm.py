@@ -1,0 +1,114 @@
+"""Compressed data-parallel gradient exchange — the paper's precision-
+reduction idea applied to the collective layer (beyond-paper feature).
+
+Two schemes, both with **error feedback** (the quantization residual is
+carried to the next step, which provably preserves SGD convergence —
+Karimireddy et al. 2019):
+
+- int8: per-tensor absmax scaling → int8 all-gather → fp32 mean.  4× less
+  DP traffic than fp32 psum (2× vs bf16).
+- 1-bit: sign + per-tensor L1 scale (signSGD-style), bit-packed uint32
+  all-gather → popcount-free unpack+mean.  ~32× less traffic.
+
+Implemented as shard_map collectives over the "data" axis: the trainer uses
+them via ``grad_transform`` *instead of* relying on pjit's implicit psum
+(batch must then be sharded only over "data" and grads computed per-shard).
+Exactness contract: compressed exchange is lossy per step; error feedback
+keeps the *accumulated* bias bounded — validated in tests/test_compression_comm.py
+against fp32 psum over multiple steps.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import pack_bits, unpack_bits
+
+
+def _flatten_to_vector(tree: Any) -> tuple[jax.Array, Any, list]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = [(l.shape, l.dtype) for l in leaves]
+    vec = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                           for l in leaves]) if leaves else jnp.zeros((0,))
+    return vec, treedef, shapes
+
+
+def _unflatten_from_vector(vec: jax.Array, treedef, shapes) -> Any:
+    out, off = [], 0
+    import numpy as np
+    for shape, dtype in shapes:
+        n = int(np.prod(shape)) if shape else 1
+        out.append(vec[off: off + n].reshape(shape).astype(dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def int8_allmean(vec: jax.Array, axis_name: str) -> jax.Array:
+    """int8-compressed mean over a named axis (inside shard_map)."""
+    absmax = jnp.max(jnp.abs(vec)) + 1e-12
+    scale = absmax / 127.0
+    q = jnp.clip(jnp.round(vec / scale), -127, 127).astype(jnp.int8)
+    qs = jax.lax.all_gather(q, axis_name)              # (shards, n) int8
+    scales = jax.lax.all_gather(scale, axis_name)      # (shards,)
+    deq = qs.astype(jnp.float32) * scales[:, None]
+    return jnp.mean(deq, axis=0)
+
+
+def onebit_allmean(vec: jax.Array, axis_name: str) -> jax.Array:
+    """1-bit (sign + L1 scale) compressed mean over a named axis."""
+    n = vec.shape[0]
+    pad = (-n) % 32
+    v = jnp.pad(vec, (0, pad))
+    scale = jnp.mean(jnp.abs(vec)) + 1e-12
+    packed = pack_bits(v[None, :])[0]                  # (n/32,) uint32
+    packs = jax.lax.all_gather(packed, axis_name)      # (shards, n/32)
+    scales = jax.lax.all_gather(scale, axis_name)
+    signs = unpack_bits(packs, v.shape[0]).astype(jnp.float32)
+    deq = signs * scales[:, None]
+    return jnp.mean(deq, axis=0)[:n]
+
+
+def make_compressed_grad_exchange(scheme: str, axis_name: str = "data"):
+    """Stateful (error-feedback) grad exchange for shard_map DP trainers.
+
+    Returns ``exchange(grads, residual) → (grads_mean, new_residual)``; call
+    inside shard_map with per-shard grads.  ``scheme`` ∈ {int8, onebit,
+    none}.
+    """
+    if scheme == "none":
+        def exchange(grads, residual):
+            mean = jax.tree_util.tree_map(
+                lambda g: jax.lax.pmean(g, axis_name), grads)
+            return mean, residual
+        return exchange
+
+    allmean = {"int8": int8_allmean, "onebit": onebit_allmean}[scheme]
+
+    def exchange(grads, residual):
+        vec, treedef, shapes = _flatten_to_vector(grads)
+        res_vec = (residual if residual is not None
+                   else jnp.zeros_like(vec))
+        corrected = vec + res_vec
+        mean = allmean(corrected, axis_name)
+        # error feedback: what compression lost locally this step
+        if scheme == "int8":
+            absmax = jnp.max(jnp.abs(corrected)) + 1e-12
+            scale = absmax / 127.0
+            q = jnp.clip(jnp.round(corrected / scale), -127, 127)
+            local_decoded = q * scale
+        else:
+            scale = jnp.mean(jnp.abs(corrected)) + 1e-12
+            local_decoded = jnp.sign(corrected) * scale
+        new_residual = corrected - local_decoded
+        return _unflatten_from_vector(mean, treedef, shapes), new_residual
+
+    return exchange
+
+
+def init_residual(params: Any) -> jax.Array:
+    vec, _, _ = _flatten_to_vector(params)
+    return jnp.zeros_like(vec)

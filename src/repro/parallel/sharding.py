@@ -1,0 +1,180 @@
+"""Logical-axis sharding (MaxText/T5X-style rules, self-contained).
+
+Models annotate every parameter and key activation with *logical* axis names
+("batch", "heads", "ff", "experts", "fsdp", …).  A rule table maps logical
+names → physical mesh axes per deployment; the same model code then runs on
+a single pod (data, model), a multi-pod (pod, data, model), or a laptop
+(no mesh) without modification.
+
+Divisibility guard: a logical axis is silently unsharded for a tensor whose
+dimension does not divide by the mapped mesh-axis size — the standard
+production behaviour (sharding a 39-field embedding table over 16 devices
+must not crash the launcher; it just stays replicated on that dim).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Mapping logical axis name → physical mesh axis (or axes)."""
+
+    rules: tuple[tuple[str, MeshAxes], ...]
+
+    def get(self, name: Optional[str]) -> MeshAxes:
+        if name is None:
+            return None
+        for k, v in self.rules:
+            if k == name:
+                return v
+        return None
+
+    def replace(self, **updates: MeshAxes) -> "AxisRules":
+        new = dict(self.rules)
+        new.update(updates)
+        return AxisRules(tuple(new.items()))
+
+
+# Single-pod production mesh: (data=16, model=16).
+SINGLE_POD_RULES = AxisRules((
+    ("batch", "data"),
+    ("fsdp", "data"),
+    ("tensor", "model"),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("ff", "model"),
+    ("experts", "model"),
+    ("vocab", "model"),
+    ("kb_docs", "model"),          # retrieval index rows
+    ("kv_seq", None),              # decode KV cache sequence axis
+    ("seq", None),
+    ("embed", None),
+    ("d_model", None),
+))
+
+# Multi-pod mesh: (pod=2, data=16, model=16).  Batch/FSDP span the pod axis
+# (cross-pod traffic = gradient all-reduce + FSDP gathers only).
+MULTI_POD_RULES = AxisRules((
+    ("batch", ("pod", "data")),
+    ("fsdp", ("pod", "data")),
+    ("tensor", "model"),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("ff", "model"),
+    ("experts", "model"),
+    ("vocab", "model"),
+    ("kb_docs", ("pod", "model")),  # pods add KB capacity
+    ("kv_seq", None),
+    ("seq", None),
+    ("embed", None),
+    ("d_model", None),
+))
+
+
+def _axis_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def spec_for_shape(shape: Sequence[int], logical: Sequence[Optional[str]],
+                   rules: AxisRules, mesh: Optional[Mesh]) -> P:
+    """PartitionSpec for a tensor, dropping non-divisible shardings."""
+    if mesh is None:
+        return P()
+    parts: list[MeshAxes] = []
+    used: set[str] = set()
+    for dim, name in zip(shape, logical):
+        ax = rules.get(name)
+        if ax is None:
+            parts.append(None)
+            continue
+        ax_t = (ax,) if isinstance(ax, str) else tuple(ax)
+        # skip axes already used by an earlier dim (illegal to reuse)
+        ax_t = tuple(a for a in ax_t if a not in used)
+        if not ax_t:
+            parts.append(None)
+            continue
+        size = 1
+        for a in ax_t:
+            size *= mesh.shape[a]
+        if size <= 1 or dim % size != 0:
+            # try a prefix of the axes that divides
+            while ax_t and (dim % _axis_size(mesh, ax_t) != 0):
+                ax_t = ax_t[:-1]
+            if not ax_t:
+                parts.append(None)
+                continue
+        used.update(ax_t)
+        parts.append(ax_t[0] if len(ax_t) == 1 else ax_t)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def logical_to_spec(tree_logical: Any, tree_shapes: Any, rules: AxisRules,
+                    mesh: Optional[Mesh]) -> Any:
+    """Map a pytree of logical-axis tuples (+ matching shapes) to specs."""
+    return jax.tree_util.tree_map(
+        lambda log, shp: spec_for_shape(shp, log, rules, mesh),
+        tree_logical, tree_shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def shard_constraint(x: jax.Array, logical: Sequence[Optional[str]],
+                     rules: Optional[AxisRules],
+                     mesh: Optional[Mesh]) -> jax.Array:
+    """with_sharding_constraint by logical names (no-op without a mesh)."""
+    if mesh is None or rules is None:
+        return x
+    spec = spec_for_shape(x.shape, logical, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+class ShardingContext:
+    """Carries (mesh, rules) through model code without threading args.
+
+    Models call ``ctx.shard(x, "batch", "seq", None)``; with no active
+    context this is the identity, so the same model runs unsharded in unit
+    tests.
+    """
+
+    _active: Optional["ShardingContext"] = None
+
+    def __init__(self, mesh: Optional[Mesh], rules: Optional[AxisRules]):
+        self.mesh = mesh
+        self.rules = rules
+
+    def __enter__(self) -> "ShardingContext":
+        self._prev = ShardingContext._active
+        ShardingContext._active = self
+        return self
+
+    def __exit__(self, *exc) -> None:
+        ShardingContext._active = self._prev
+
+    @classmethod
+    def current(cls) -> Optional["ShardingContext"]:
+        return cls._active
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    ctx = ShardingContext.current()
+    if ctx is None or ctx.mesh is None:
+        return x
+    return shard_constraint(x, logical, ctx.rules, ctx.mesh)

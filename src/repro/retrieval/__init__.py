@@ -1,0 +1,13 @@
+"""Dense retrieval substrate: exact & approximate top-k, metrics, sharding."""
+
+from repro.retrieval.index import CompressedIndex, DenseIndex
+from repro.retrieval.ivf import IVFFlatIndex
+from repro.retrieval.rprecision import (make_dim_drop_scorer, r_precision,
+                                        retrieved_relevant_counts)
+from repro.retrieval.topk import topk_search
+
+__all__ = [
+    "CompressedIndex", "DenseIndex", "IVFFlatIndex",
+    "make_dim_drop_scorer", "r_precision", "retrieved_relevant_counts",
+    "topk_search",
+]

@@ -1,0 +1,148 @@
+"""Dense and compressed KB indexes (single-host reference implementation).
+
+:class:`DenseIndex` is the uncompressed baseline; :class:`CompressedIndex`
+applies a fitted :class:`~repro.core.pipeline.CompressionPipeline` and stores
+the *encoded* representation (fp16 / int8 / bit-packed words) — scoring then
+runs through the matching kernel path (Pallas on TPU; jnp oracle on CPU).
+
+The multi-pod sharded variant lives in :mod:`repro.retrieval.sharded`.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import CompressionPipeline
+from repro.core.quantization import Int8Quantizer, OneBitQuantizer, FloatCast
+from repro.retrieval.topk import topk_search
+
+
+class DenseIndex:
+    """Flat exact-search index over float vectors."""
+
+    def __init__(self, docs: jax.Array, sim: str = "ip"):
+        self.docs = jnp.asarray(docs)
+        self.sim = sim
+
+    def __len__(self) -> int:
+        return int(self.docs.shape[0])
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.docs.size * self.docs.dtype.itemsize)
+
+    def search(self, queries: jax.Array, k: int,
+               doc_chunk: int = 131072) -> tuple[jax.Array, jax.Array]:
+        return topk_search(queries, self.docs, k, sim=self.sim,
+                           doc_chunk=doc_chunk)
+
+    def add(self, docs: jax.Array) -> "DenseIndex":
+        self.docs = jnp.concatenate([self.docs, jnp.asarray(docs)], axis=0)
+        return self
+
+
+class CompressedIndex:
+    """Index stored in compressed form; queries compressed at search time.
+
+    ``backend`` ∈ {"auto", "jnp", "pallas"}: which scoring path decodes the
+    quantized storage.  "auto" uses Pallas kernels on TPU and the jnp oracle
+    elsewhere (both produce identical rankings; see tests/test_kernels_*).
+    """
+
+    def __init__(self, pipeline: CompressionPipeline, sim: str = "ip",
+                 backend: str = "auto"):
+        self.pipeline = pipeline
+        self.sim = sim
+        self.backend = backend
+        self.storage: Optional[jax.Array] = None
+        self._quantizer = None
+        self._n_docs = 0
+        self._dim = 0
+
+    # -- construction -----------------------------------------------------
+    @classmethod
+    def build(cls, docs: jax.Array, queries_sample: Optional[jax.Array],
+              pipeline: CompressionPipeline, sim: str = "ip",
+              backend: str = "auto", rng=None) -> "CompressedIndex":
+        idx = cls(pipeline, sim=sim, backend=backend)
+        pipeline.fit(docs, queries_sample, rng=rng)
+        idx.add(docs)
+        return idx
+
+    def _split_pipeline(self):
+        """Split transforms into (float stages, trailing quantizer|None)."""
+        stages = self.pipeline.transforms
+        if stages and isinstance(stages[-1],
+                                 (Int8Quantizer, OneBitQuantizer, FloatCast)):
+            return stages[:-1], stages[-1]
+        return stages, None
+
+    def add(self, docs: jax.Array) -> "CompressedIndex":
+        float_stages, quantizer = self._split_pipeline()
+        x = jnp.asarray(docs)
+        for t in float_stages:
+            x = t(x, "docs")
+        self._dim = int(x.shape[-1])
+        self._quantizer = quantizer
+        enc = quantizer.encode(x, "docs") if quantizer is not None else x
+        if self.storage is None:
+            self.storage = enc
+        else:
+            self.storage = jnp.concatenate([self.storage, enc], axis=0)
+        self._n_docs = int(self.storage.shape[0])
+        return self
+
+    def __len__(self) -> int:
+        return self._n_docs
+
+    @property
+    def nbytes(self) -> int:
+        assert self.storage is not None
+        return int(self.storage.size * self.storage.dtype.itemsize)
+
+    # -- search ------------------------------------------------------------
+    def _use_pallas(self) -> bool:
+        if self.backend == "pallas":
+            return True
+        if self.backend == "jnp":
+            return False
+        return jax.default_backend() == "tpu"
+
+    def encode_queries(self, queries: jax.Array) -> jax.Array:
+        float_stages, _ = self._split_pipeline()
+        q = jnp.asarray(queries)
+        for t in float_stages:
+            q = t(q, "queries")
+        return q
+
+    def search(self, queries: jax.Array, k: int,
+               doc_chunk: int = 131072) -> tuple[jax.Array, jax.Array]:
+        q = self.encode_queries(queries)
+        quantizer = self._quantizer
+        if quantizer is None:
+            return topk_search(q, self.storage, k, sim=self.sim,
+                               doc_chunk=doc_chunk)
+        if isinstance(quantizer, OneBitQuantizer):
+            from repro.kernels.binary_ip import ops as binary_ops
+            q_enc = quantizer(q, "queries")  # ±offset float; sim reduces to IP
+            scores = binary_ops.binary_ip_scores(
+                q_enc, self.storage, self._dim,
+                offset=quantizer.offset,
+                use_pallas=self._use_pallas())
+            kk = min(k, self._n_docs)
+            return jax.lax.top_k(scores, kk)
+        if isinstance(quantizer, Int8Quantizer):
+            from repro.kernels.int8_ip import ops as int8_ops
+            scores = int8_ops.int8_scores(
+                q, self.storage,
+                scale=quantizer.state["scale"], zero=quantizer.state["zero"],
+                sim=self.sim, use_pallas=self._use_pallas())
+            kk = min(k, self._n_docs)
+            return jax.lax.top_k(scores, kk)
+        # FloatCast: decode is a dtype view; score directly
+        docs = quantizer.decode(self.storage)
+        return topk_search(q, docs, k, sim=self.sim, doc_chunk=doc_chunk)

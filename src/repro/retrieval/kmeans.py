@@ -1,0 +1,46 @@
+"""Mini-batch Lloyd k-means (coarse quantizer for IVF; also used by
+k-means-pruning ablations).  Pure JAX, jit-compiled updates."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=())
+def assign(x: jax.Array, centroids: jax.Array) -> jax.Array:
+    """Nearest centroid (L2) per row of x."""
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    c2 = jnp.sum(centroids * centroids, axis=-1)
+    d2 = x2 + c2[None, :] - 2.0 * (x @ centroids.T)
+    return jnp.argmin(d2, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_clusters",))
+def _update(x, labels, n_clusters, old):
+    sums = jax.ops.segment_sum(x, labels, num_segments=n_clusters)
+    counts = jax.ops.segment_sum(jnp.ones((x.shape[0],), x.dtype), labels,
+                                 num_segments=n_clusters)
+    new = sums / jnp.maximum(counts[:, None], 1.0)
+    # keep old centroid if a cluster went empty
+    return jnp.where(counts[:, None] > 0, new, old)
+
+
+def kmeans_fit(x: jax.Array, n_clusters: int, n_iters: int = 20,
+               rng=None) -> jax.Array:
+    """Fit k-means centroids; kmeans++-lite init (random distinct rows)."""
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+    x = jnp.asarray(x, jnp.float32)
+    n = x.shape[0]
+    init_idx = jax.random.choice(rng, n, (min(n_clusters, n),), replace=False)
+    centroids = x[init_idx]
+    if centroids.shape[0] < n_clusters:  # tiny corpora: repeat rows
+        reps = -(-n_clusters // centroids.shape[0])
+        centroids = jnp.tile(centroids, (reps, 1))[:n_clusters]
+    for _ in range(n_iters):
+        labels = assign(x, centroids)
+        centroids = _update(x, labels, n_clusters, centroids)
+    return centroids

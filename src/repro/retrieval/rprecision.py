@@ -1,0 +1,123 @@
+"""R-Precision evaluation (paper §3.1, following Petroni et al. 2021).
+
+For query q with r(q) relevant documents, R-Precision is
+``|relevant ∩ top-r(q) retrieved| / r(q)``, averaged over queries.
+
+Relevance is a padded ``(Q, max_r)`` int32 array of document ids (−1 padding);
+HotpotQA-style data has r = 2 for every query (two supporting documents).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.retrieval.topk import similarity, topk_search
+
+
+def _hits_from_topk(idx: jax.Array, relevant: jax.Array) -> jax.Array:
+    """Count relevant docs among the first r(q) retrieved, per query.
+
+    idx: (Q, K) retrieved ids with K >= max_r; relevant: (Q, max_r), −1 pad.
+    """
+    max_r = relevant.shape[1]
+    r = jnp.sum(relevant >= 0, axis=1)                      # (Q,)
+    pos_valid = jnp.arange(idx.shape[1])[None, :] < r[:, None]
+    is_rel = jnp.any(idx[:, :, None] == relevant[:, None, :], axis=-1)
+    return jnp.sum(is_rel & pos_valid, axis=1)              # (Q,)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def r_precision_from_scores(scores: jax.Array,
+                            relevant: jax.Array) -> jax.Array:
+    """R-Precision from a dense (Q, D) score matrix (small-scale path)."""
+    max_r = relevant.shape[1]
+    _, idx = jax.lax.top_k(scores, max_r)
+    r = jnp.maximum(jnp.sum(relevant >= 0, axis=1), 1)
+    hits = _hits_from_topk(idx, relevant)
+    return jnp.mean(hits / r)
+
+
+def retrieved_relevant_counts(queries: jax.Array, docs: jax.Array,
+                              relevant: jax.Array, sim: str = "ip",
+                              doc_chunk: int = 131072) -> jax.Array:
+    """Per-query number of relevant docs in the top-r(q) (paper Fig. 7)."""
+    max_r = relevant.shape[1]
+    _, idx = topk_search(queries, docs, max_r, sim=sim, doc_chunk=doc_chunk)
+    return _hits_from_topk(idx, relevant)
+
+
+def r_precision(queries: jax.Array, docs: jax.Array, relevant: jax.Array,
+                sim: str = "ip", doc_chunk: int = 131072) -> float:
+    """Streaming R-Precision over an arbitrarily large document index."""
+    hits = retrieved_relevant_counts(queries, docs, relevant, sim, doc_chunk)
+    r = jnp.maximum(jnp.sum(relevant >= 0, axis=1), 1)
+    return float(jnp.mean(hits / r))
+
+
+# ---------------------------------------------------------------------------
+# Greedy-dimension-dropping scorer (paper §4.1) — per-dimension quality
+# ---------------------------------------------------------------------------
+
+
+def make_dim_drop_scorer(relevant: np.ndarray, sim: str = "ip",
+                         n_queries: int = 256, n_docs: int = 8192,
+                         dim_chunk: int = 16, seed: int = 0,
+                         ) -> Callable[[jax.Array, jax.Array], jax.Array]:
+    """Build the scorer used by :class:`GreedyDimensionDrop`.
+
+    Returns ``scorer(queries, docs) → (d,)`` where entry i is the R-Precision
+    *with dimension i removed* (evaluated on a fixed subsample that always
+    contains each sampled query's relevant documents plus random distractors).
+    The rank-1 update ``S_i = S − q_i d_iᵀ`` makes the 768 evaluations cheap:
+    one (Q, D) GEMM total, then d rank-1 updates.
+    """
+    relevant = np.asarray(relevant)
+
+    def scorer(queries: jax.Array, docs: jax.Array) -> jax.Array:
+        rng = np.random.default_rng(seed)
+        n_q = min(n_queries, queries.shape[0])
+        qi = rng.choice(queries.shape[0], size=n_q, replace=False)
+        rel = relevant[qi]                                    # (q, max_r)
+        needed = np.unique(rel[rel >= 0])
+        n_total = docs.shape[0]
+        budget = max(n_docs - needed.size, 0)
+        extra = rng.choice(n_total, size=min(budget, n_total), replace=False)
+        doc_ids = np.unique(np.concatenate([needed, extra]))
+        lookup = np.full((n_total,), -1, np.int64)
+        lookup[doc_ids] = np.arange(doc_ids.size)
+        rel_local = np.where(rel >= 0, lookup[np.maximum(rel, 0)], -1)
+        rel_local = jnp.asarray(rel_local.astype(np.int32))
+
+        qs = jnp.asarray(queries)[qi].astype(jnp.float32)
+        ds = jnp.asarray(docs)[doc_ids].astype(jnp.float32)
+        base = similarity(qs, ds, sim)
+
+        if sim == "ip":
+            def drop_dim(i):
+                return base - jnp.outer(qs[:, i], ds[:, i])
+        elif sim == "l2":
+            def drop_dim(i):
+                diff2 = jnp.square(qs[:, i][:, None] - ds[:, i][None, :])
+                return base + diff2  # base is negative sq-dist; add back dim i
+        else:
+            raise ValueError("greedy dim-drop scorer supports ip|l2")
+
+        @jax.jit
+        def eval_dims(dims):
+            def one(i):
+                return r_precision_from_scores(drop_dim(i), rel_local)
+            return jax.vmap(one)(dims)
+
+        d = queries.shape[-1]
+        out = []
+        for s in range(0, d, dim_chunk):
+            dims = jnp.arange(s, min(s + dim_chunk, d))
+            out.append(eval_dims(dims))
+        return jnp.concatenate(out)
+
+    return scorer

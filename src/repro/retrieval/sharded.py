@@ -1,0 +1,82 @@
+"""Distributed KB search over a device mesh (the production serving path).
+
+Layout
+------
+* Document index: row-sharded over the ``doc_axis`` ("model" within a pod; the
+  "pod" axis adds capacity — 2 pods hold 2× the KB).
+* Queries: batch-sharded over ``query_axis`` ("data"), replicated over
+  ``doc_axis``.
+
+Schedule (per query shard)::
+
+    local scores (Q_local, D_local)          # GEMM, no comms
+    local top-k                              # on-device
+    all_gather over doc_axis → (shards·k)    # tiny: k·(score+id) per shard
+    global top-k merge                       # on-device
+
+Collective volume per query is ``O(n_doc_shards · k · 8 bytes)`` — independent
+of index size, which is what makes the design scale to 1000+ nodes: adding
+devices grows the KB linearly at constant per-query communication.
+
+Quantized variants score via the same kernels as the single-host
+:class:`~repro.retrieval.index.CompressedIndex` (the shard-local GEMM is the
+Pallas hot path; the merge is unchanged).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.retrieval.topk import similarity
+
+
+def make_distributed_search(mesh: Mesh, *, sim: str = "ip", k: int = 10,
+                            query_axis="data", doc_axis="model"):
+    """Build a shard_map'd search fn: (queries, docs) → (scores, global ids).
+
+    ``doc_axis`` may be a tuple (e.g. ("pod", "model")) — the KB is then
+    sharded over the combined axes and the gather happens over both.
+    """
+    doc_axes = (doc_axis,) if isinstance(doc_axis, str) else tuple(doc_axis)
+    q_axes = (query_axis,) if isinstance(query_axis, str) else tuple(query_axis)
+
+    def local_search(q, d_shard):
+        # shard ids along the doc axes → global row offset of this shard
+        shard_sizes = [jax.lax.axis_size(a) for a in doc_axes]
+        shard_id = jnp.zeros((), jnp.int32)
+        for a, size in zip(doc_axes, shard_sizes):
+            shard_id = shard_id * size + jax.lax.axis_index(a)
+        d_local = d_shard.shape[0]
+        scores = similarity(q, d_shard, sim)
+        kk = min(k, d_local)
+        vals, idx = jax.lax.top_k(scores, kk)
+        gidx = idx + shard_id * d_local
+        # gather candidates from every doc shard: (n_shards·k) per query
+        all_vals = vals
+        all_idx = gidx
+        for a in doc_axes:
+            all_vals = jax.lax.all_gather(all_vals, a, axis=1, tiled=True)
+            all_idx = jax.lax.all_gather(all_idx, a, axis=1, tiled=True)
+        fvals, pos = jax.lax.top_k(all_vals, min(k, all_vals.shape[1]))
+        fidx = jnp.take_along_axis(all_idx, pos, axis=1)
+        return fvals, fidx
+
+    in_specs = (P(q_axes if len(q_axes) > 1 else q_axes[0], None),
+                P(doc_axes if len(doc_axes) > 1 else doc_axes[0], None))
+    out_specs = (P(q_axes if len(q_axes) > 1 else q_axes[0], None),) * 2
+
+    fn = jax.shard_map(local_search, mesh=mesh,
+                       in_specs=in_specs, out_specs=out_specs,
+                       check_vma=False)
+    return jax.jit(fn)
+
+
+def shard_index(docs: jax.Array, mesh: Mesh, doc_axis="model") -> jax.Array:
+    """Place a host array as a row-sharded device array on the mesh."""
+    spec = P(doc_axis, None)
+    return jax.device_put(docs, NamedSharding(mesh, spec))

@@ -1,0 +1,81 @@
+"""Exact maximum-similarity search with streaming (chunked) top-k.
+
+Scoring never materialises the full (Q, D) matrix: the document axis is
+scanned in chunks, keeping a running top-k per query (two-stage top-k — the
+same schedule the Pallas kernels use on TPU, here expressed in jnp for the
+host/reference path).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def similarity(queries: jax.Array, docs: jax.Array, sim: str) -> jax.Array:
+    """(Q, d) × (D, d) → (Q, D) similarity. sim ∈ {"ip", "l2", "cos"}.
+
+    "l2" returns the *negative squared* L2 distance so that maximum-similarity
+    search is uniform across metrics (argmax).
+    """
+    if sim == "ip":
+        return queries @ docs.T
+    if sim == "cos":
+        qn = queries / (jnp.linalg.norm(queries, axis=-1, keepdims=True) + 1e-12)
+        dn = docs / (jnp.linalg.norm(docs, axis=-1, keepdims=True) + 1e-12)
+        return qn @ dn.T
+    if sim == "l2":
+        q2 = jnp.sum(queries * queries, axis=-1, keepdims=True)
+        d2 = jnp.sum(docs * docs, axis=-1)
+        return -(q2 + d2[None, :] - 2.0 * (queries @ docs.T))
+    raise ValueError(f"unknown similarity {sim!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("k", "sim"))
+def _topk_chunk(queries, docs, base, k, sim):
+    scores = similarity(queries, docs, sim)
+    kk = min(k, docs.shape[0])
+    vals, idx = jax.lax.top_k(scores, kk)
+    return vals, idx + base
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def merge_topk(vals_a, idx_a, vals_b, idx_b, k):
+    """Merge two top-k candidate sets into one global top-k."""
+    vals = jnp.concatenate([vals_a, vals_b], axis=-1)
+    idx = jnp.concatenate([idx_a, idx_b], axis=-1)
+    top_vals, pos = jax.lax.top_k(vals, k)
+    return top_vals, jnp.take_along_axis(idx, pos, axis=-1)
+
+
+def topk_search(queries: jax.Array, docs: jax.Array, k: int,
+                sim: str = "ip", doc_chunk: int = 131072,
+                query_chunk: int = 4096) -> tuple[jax.Array, jax.Array]:
+    """Exact top-k over the document axis, streamed in chunks.
+
+    Returns (scores (Q, k), indices (Q, k)), sorted by descending score.
+    """
+    n_docs = docs.shape[0]
+    k = min(k, n_docs)
+
+    out_vals, out_idx = [], []
+    for qs in range(0, queries.shape[0], query_chunk):
+        q = queries[qs: qs + query_chunk]
+        vals = jnp.full((q.shape[0], k), -jnp.inf, jnp.float32)
+        idx = jnp.zeros((q.shape[0], k), jnp.int32)
+        for ds in range(0, n_docs, doc_chunk):
+            d = docs[ds: ds + doc_chunk]
+            cv, ci = _topk_chunk(q, d, ds, k, sim)
+            if cv.shape[-1] < k:  # chunk smaller than k: pad
+                pad = k - cv.shape[-1]
+                cv = jnp.pad(cv, ((0, 0), (0, pad)),
+                             constant_values=-jnp.inf)
+                ci = jnp.pad(ci, ((0, 0), (0, pad)))
+            vals, idx = merge_topk(vals, idx, cv, ci, k)
+        out_vals.append(vals)
+        out_idx.append(idx)
+    return (jnp.concatenate(out_vals, axis=0),
+            jnp.concatenate(out_idx, axis=0))

@@ -1,0 +1,153 @@
+"""Sharded checkpointing with atomic publish, retention, and async save.
+
+Layout::
+
+    <dir>/step_000042/          # staged as .tmp-step_000042, renamed when done
+        manifest.json           # step, tree structure, array index, fingerprint
+        arrays.npz              # flat {path: array} (host-gathered)
+    <dir>/LATEST                # text file: last complete step
+
+Design points for the 1000-node regime (documented; single-host here):
+- *atomic publish*: writers stage into a tmp dir and ``os.rename`` —
+  a reader never sees a partial checkpoint; LATEST is written after.
+- *restore to any mesh*: arrays are stored unsharded-logical; restore
+  ``device_put``s against the *target* sharding, so a checkpoint written on
+  512 chips restores onto 256 or 1024 (elastic re-mesh, fault recovery).
+- *async*: save() snapshots to host then writes on a worker thread —
+  training continues; ``wait()`` joins before the next save.
+- *retention*: keep the newest K complete checkpoints.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree: Any) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ----------------------------------------------------------------
+    def save(self, state: Any, step: int, blocking: bool = False) -> None:
+        self.wait()
+        flat = _flatten(state)
+        # snapshot to host memory synchronously (cheap vs device compute)
+        host = {k: np.asarray(v) for k, v in flat.items()}
+        treedef = jax.tree_util.tree_structure(state)
+
+        def write():
+            name = f"step_{step:08d}"
+            tmp = os.path.join(self.directory, f".tmp-{name}")
+            final = os.path.join(self.directory, name)
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"), **host)
+            manifest = {
+                "step": step,
+                "keys": sorted(host.keys()),
+                "treedef": str(treedef),
+                "time": time.time(),
+                "nbytes": int(sum(a.nbytes for a in host.values())),
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f, indent=2)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            with open(os.path.join(self.directory, "LATEST"), "w") as f:
+                f.write(str(step))
+            self._retain()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _retain(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore ----------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        steps = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and os.path.exists(
+                    os.path.join(self.directory, d, "manifest.json")):
+                steps.append(int(d.split("_")[1]))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        path = os.path.join(self.directory, "LATEST")
+        if os.path.exists(path):
+            step = int(open(path).read().strip())
+            if step in self.all_steps():
+                return step
+        steps = self.all_steps()          # LATEST missing/stale: recover
+        return steps[-1] if steps else None
+
+    def restore(self, like: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Any:
+        """Restore into the structure of ``like`` (arrays or structs).
+
+        ``shardings``: optional matching pytree of Sharding objects — arrays
+        are placed directly to their target devices (elastic re-mesh path).
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step:08d}", "arrays.npz")
+        data = np.load(path)
+        flat_like = _flatten(like)
+        flat_shard = _flatten(shardings) if shardings is not None else {}
+        out = {}
+        for key, leaf in flat_like.items():
+            if key not in data:
+                raise KeyError(f"checkpoint missing {key}")
+            arr = data[key]
+            if flat_shard.get(key) is not None:
+                out[key] = jax.device_put(arr, flat_shard[key])
+            else:
+                out[key] = jax.numpy.asarray(arr)
+        # rebuild tree in like's structure
+        leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+        keys_in_order = [SEP.join(_path_str(p) for p in path_)
+                         for path_, _ in leaves_like]
+        return jax.tree_util.tree_unflatten(
+            treedef, [out[k] for k in keys_in_order])

@@ -1,0 +1,69 @@
+"""Elastic re-meshing: resume a checkpoint onto a different device count.
+
+The recovery path after node loss (or fleet growth):
+
+    1. controller detects failure → picks the new healthy device set,
+    2. builds a new mesh (data axis shrinks/grows; model axis preserved so
+       TP-sharded weights keep their layout),
+    3. restores the latest checkpoint with shardings derived from the *new*
+       mesh (Checkpointer.restore is mesh-agnostic),
+    4. training resumes at the saved step; the data pipeline is stateless in
+       step index so no samples are lost or duplicated.
+
+Batch handling on shrink: global batch is preserved by raising the gradient-
+accumulation factor (microbatches ×= old_data/new_data) — the optimizer sees
+identical statistics, so loss curves continue smoothly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.utils import first_divisor_leq
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    old_shape: dict[str, int]
+    new_shape: dict[str, int]
+    microbatch_scale: int        # multiply grad-accum by this on shrink
+
+    @property
+    def data_scale(self) -> float:
+        return self.old_shape.get("data", 1) / self.new_shape.get("data", 1)
+
+
+def plan_remesh(old_mesh_shape: dict[str, int], n_devices: int,
+                model_axis: str = "model") -> RemeshPlan:
+    """Choose a new mesh shape for ``n_devices``, preserving the model axis."""
+    model = old_mesh_shape.get(model_axis, 1)
+    if n_devices % model != 0:
+        model = first_divisor_leq(n_devices, model)
+    data = n_devices // model
+    new_shape = {"data": data, model_axis: model}
+    old_data = old_mesh_shape.get("data", 1) * old_mesh_shape.get("pod", 1)
+    scale = max(1, int(np.ceil(old_data / data)))
+    return RemeshPlan(old_shape=dict(old_mesh_shape), new_shape=new_shape,
+                      microbatch_scale=scale)
+
+
+def build_mesh(shape: dict[str, int],
+               devices: Optional[Sequence] = None) -> Mesh:
+    devices = list(devices) if devices is not None else jax.devices()
+    n = int(np.prod(list(shape.values())))
+    if len(devices) < n:
+        raise ValueError(f"need {n} devices, have {len(devices)}")
+    arr = np.array(devices[:n]).reshape(*shape.values())
+    return Mesh(arr, tuple(shape.keys()))
+
+
+def reshard_state(state: Any, specs: Any, new_mesh: Mesh) -> Any:
+    """Move a state pytree onto a new mesh (device_put per leaf)."""
+    def place(x, spec):
+        return jax.device_put(x, NamedSharding(new_mesh, spec))
+    return jax.tree_util.tree_map(place, state, specs)

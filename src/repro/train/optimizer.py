@@ -1,0 +1,322 @@
+"""Minimal optax-style optimizer library (self-contained; no optax dependency).
+
+Gradient transformations compose with :func:`chain`; every transformation is a
+pair of pure functions (``init``, ``update``) over pytrees, so optimizer state
+shards exactly like the parameters (see ``repro.parallel.sharding`` for the
+ZeRO rules applied on top).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+OptState = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+class GradientTransformation(NamedTuple):
+    init: Callable[[Params], OptState]
+    update: Callable[[Params, OptState, Params], tuple[Params, OptState]]
+    # update(grads, state, params) -> (updates, new_state)
+
+
+def apply_updates(params: Params, updates: Params) -> Params:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p,
+        params, updates)
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def constant_schedule(value: float) -> Schedule:
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def cosine_schedule(peak: float, warmup_steps: int, total_steps: int,
+                    end_fraction: float = 0.1) -> Schedule:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / jnp.maximum(1.0, warmup_steps)
+        t = jnp.clip((step - warmup_steps)
+                     / jnp.maximum(1.0, total_steps - warmup_steps), 0.0, 1.0)
+        cos = peak * (end_fraction + (1 - end_fraction)
+                      * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return sched
+
+
+def linear_warmup_schedule(peak: float, warmup_steps: int) -> Schedule:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        return peak * jnp.minimum(1.0, step / jnp.maximum(1.0, warmup_steps))
+    return sched
+
+
+def _as_schedule(lr) -> Schedule:
+    return lr if callable(lr) else constant_schedule(lr)
+
+
+# ---------------------------------------------------------------------------
+# transformations
+# ---------------------------------------------------------------------------
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        norm = global_norm(grads)
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+        return jax.tree_util.tree_map(lambda g: g * scale, grads), state
+
+    return GradientTransformation(init, update)
+
+
+class ScaleByAdamState(NamedTuple):
+    count: jax.Array
+    mu: Params
+    nu: Params
+
+
+def scale_by_adam(b1: float = 0.9, b2: float = 0.999,
+                  eps: float = 1e-8) -> GradientTransformation:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return ScaleByAdamState(
+            count=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(zeros, params),
+            nu=jax.tree_util.tree_map(zeros, params))
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        f32 = lambda g: g.astype(jnp.float32)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * f32(g), state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(f32(g)),
+            state.nu, grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        updates = jax.tree_util.tree_map(
+            lambda m, v: (m / c1) / (jnp.sqrt(v / c2) + eps), mu, nu)
+        return updates, ScaleByAdamState(count, mu, nu)
+
+    return GradientTransformation(init, update)
+
+
+class ScaleByAdamQ8State(NamedTuple):
+    count: jax.Array
+    mu_q: Params            # int8 codes
+    mu_scale: Params        # per-tensor absmax scales
+    nu_q: Params
+    nu_scale: Params
+
+
+def scale_by_adam_q8(b1: float = 0.9, b2: float = 0.999,
+                     eps: float = 1e-8) -> GradientTransformation:
+    """Adam with int8-quantized moments (per-tensor absmax scaling).
+
+    The paper's precision-reduction insight applied to optimizer state:
+    m and v are stored as int8 + one fp32 scale per tensor — 2 bytes/param
+    of optimizer state instead of 8 (the dominant memory of large-model
+    training; see EXPERIMENTS.md §Perf).  Dequant → update → requant per
+    step; the requant error is O(absmax/127) per step and empirically
+    indistinguishable on convergence (tests/test_train.py).
+    """
+
+    def _q(x):
+        scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-20
+        return (jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8),
+                scale)
+
+    def _dq(q, scale):
+        return q.astype(jnp.float32) * scale
+
+    def init(params):
+        z8 = lambda p: jnp.zeros(p.shape, jnp.int8)
+        zs = lambda p: jnp.zeros((), jnp.float32)
+        return ScaleByAdamQ8State(
+            count=jnp.zeros((), jnp.int32),
+            mu_q=jax.tree_util.tree_map(z8, params),
+            mu_scale=jax.tree_util.tree_map(zs, params),
+            nu_q=jax.tree_util.tree_map(z8, params),
+            nu_scale=jax.tree_util.tree_map(zs, params))
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        f32 = lambda g: g.astype(jnp.float32)
+
+        def upd_mu(q, s, g):
+            m = b1 * _dq(q, s) + (1 - b1) * f32(g)
+            return _q(m) + (m,)
+
+        def upd_nu(q, s, g):
+            v = b2 * _dq(q, s) + (1 - b2) * jnp.square(f32(g))
+            return _q(v) + (v,)
+
+        mu_t = jax.tree_util.tree_map(upd_mu, state.mu_q, state.mu_scale,
+                                      grads)
+        nu_t = jax.tree_util.tree_map(upd_nu, state.nu_q, state.nu_scale,
+                                      grads)
+        unzip = lambda t, i: jax.tree_util.tree_map(
+            lambda x: x[i], t, is_leaf=lambda x: isinstance(x, tuple))
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        updates = jax.tree_util.tree_map(
+            lambda mt, vt: (mt[2] / c1) / (jnp.sqrt(vt[2] / c2) + eps),
+            mu_t, nu_t, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, ScaleByAdamQ8State(
+            count, unzip(mu_t, 0), unzip(mu_t, 1),
+            unzip(nu_t, 0), unzip(nu_t, 1))
+
+    return GradientTransformation(init, update)
+
+
+def add_decayed_weights(weight_decay: float,
+                        mask_fn: Optional[Callable] = None,
+                        ) -> GradientTransformation:
+    """Adds wd·param to the (normalized-gradient) update. mask_fn(path, p)
+    returns True for params to decay; default: decay only ndim >= 2."""
+
+    def init(params):
+        return ()
+
+    def update(updates, state, params):
+        if params is None:
+            raise ValueError("add_decayed_weights needs params")
+
+        def f(u, p):
+            decay = weight_decay if (mask_fn is None and p.ndim >= 2) else (
+                weight_decay if (mask_fn is not None and mask_fn(p)) else 0.0)
+            return u + decay * p.astype(jnp.float32)
+
+        return jax.tree_util.tree_map(f, updates, params), state
+
+    return GradientTransformation(init, update)
+
+
+def scale_by_schedule(lr) -> GradientTransformation:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return jnp.zeros((), jnp.int32)
+
+    def update(updates, count, params=None):
+        step_lr = sched(count)
+        return (jax.tree_util.tree_map(lambda u: -step_lr * u, updates),
+                count + 1)
+
+    return GradientTransformation(init, update)
+
+
+def add_l1_penalty(l1: float) -> GradientTransformation:
+    """Subgradient of λ·|w|₁ added to grads (paper autoencoder Table 3)."""
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        return jax.tree_util.tree_map(
+            lambda g, p: g + l1 * jnp.sign(p.astype(jnp.float32)),
+            grads, params), state
+
+    return GradientTransformation(init, update)
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return GradientTransformation(init, update)
+
+
+# ---------------------------------------------------------------------------
+# user-facing factories
+# ---------------------------------------------------------------------------
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0, l1: float = 0.0,
+          max_grad_norm: Optional[float] = None,
+          quantized_state: bool = False) -> GradientTransformation:
+    parts: list[GradientTransformation] = []
+    if l1 > 0:
+        parts.append(add_l1_penalty(l1))
+    if max_grad_norm is not None:
+        parts.append(clip_by_global_norm(max_grad_norm))
+    parts.append(scale_by_adam_q8(b1, b2, eps) if quantized_state
+                 else scale_by_adam(b1, b2, eps))
+    if weight_decay > 0:
+        parts.append(add_decayed_weights(weight_decay))
+    parts.append(scale_by_schedule(lr))
+    return chain(*parts)
+
+
+def sgd(lr, momentum: float = 0.0) -> GradientTransformation:
+    if momentum == 0.0:
+        return chain(scale_by_schedule(lr))
+
+    def init(params):
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params=None):
+        state = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state, grads)
+        return state, state
+
+    return chain(GradientTransformation(init, update), scale_by_schedule(lr))
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    """Config-file friendly optimizer spec."""
+
+    name: str = "adamw"
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    max_grad_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    schedule: str = "cosine"  # constant|cosine|warmup_linear
+    quantized_state: bool = False  # int8 Adam moments (see scale_by_adam_q8)
+
+    def build(self) -> GradientTransformation:
+        if self.schedule == "cosine":
+            lr = cosine_schedule(self.lr, self.warmup_steps, self.total_steps)
+        elif self.schedule == "warmup_linear":
+            lr = linear_warmup_schedule(self.lr, self.warmup_steps)
+        else:
+            lr = constant_schedule(self.lr)
+        if self.name == "adamw":
+            return adamw(lr, self.b1, self.b2, self.eps, self.weight_decay,
+                         max_grad_norm=self.max_grad_norm,
+                         quantized_state=self.quantized_state)
+        if self.name == "sgd":
+            return sgd(lr)
+        raise ValueError(f"unknown optimizer {self.name!r}")

@@ -1,0 +1,150 @@
+"""Train-step factory: loss → grads → optimizer, with microbatch gradient
+accumulation, global-norm metrics, and optional compressed data-parallel
+gradient exchange (see :mod:`repro.parallel.compression_comm`).
+
+State layout (plain pytree — shards like params):
+    {"params": …, "opt": tx_state, "step": int32}
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import optimizer as opt_lib
+
+
+def init_state(rng: jax.Array, init_params_fn: Callable,
+               tx: opt_lib.GradientTransformation) -> dict:
+    params = init_params_fn(rng)
+    return {"params": params, "opt": tx.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_state(abstract_params: Any,
+                   tx: opt_lib.GradientTransformation) -> dict:
+    """ShapeDtypeStruct state tree (dry-run path, no allocation)."""
+    opt = jax.eval_shape(tx.init, abstract_params)
+    return {"params": abstract_params, "opt": opt,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def _split_microbatches(batch: Any, n: int) -> Any:
+    def f(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} not divisible by microbatches {n}"
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree_util.tree_map(f, batch)
+
+
+def make_train_step(loss_fn: Callable[[Any, Any], tuple[jax.Array, dict]],
+                    tx: opt_lib.GradientTransformation,
+                    microbatches: int = 1,
+                    grad_transform: Optional[Callable] = None,
+                    unroll_microbatches: bool = False) -> Callable:
+    """Build ``train_step(state, batch) → (state, metrics)``.
+
+    ``loss_fn(params, batch) → (loss, metrics_dict)``.
+    ``grad_transform`` optionally post-processes grads (e.g. compressed DP
+    exchange).  ``unroll_microbatches`` replaces the accumulation scan with
+    a Python loop (dry-run cost pass: loop bodies count once).
+    """
+
+    def compute_grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(state: dict, batch: Any) -> tuple[dict, dict]:
+        params = state["params"]
+        if microbatches > 1 and unroll_microbatches:
+            mb = _split_microbatches(batch, microbatches)
+            loss = jnp.zeros(())
+            grads = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            for i in range(microbatches):
+                micro = jax.tree_util.tree_map(lambda x: x[i], mb)
+                li, metrics, gi = compute_grads(params, micro)
+                loss = loss + li
+                grads = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), grads, gi)
+            loss = loss / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+        elif microbatches > 1:
+            mb = _split_microbatches(batch, microbatches)
+
+            def body(carry, micro):
+                loss_acc, grads_acc = carry
+                loss, metrics, grads = compute_grads(params, micro)
+                grads_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32),
+                    grads_acc, grads)
+                return (loss_acc + loss, grads_acc), metrics
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), metrics = jax.lax.scan(
+                body, (jnp.zeros(()), zeros), mb)
+            loss = loss / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+        else:
+            loss, metrics, grads = compute_grads(params, batch)
+
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+
+        updates, opt = tx.update(grads, state["opt"], params)
+        params = opt_lib.apply_updates(params, updates)
+        new_state = {"params": params, "opt": opt,
+                     "step": state["step"] + 1}
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = opt_lib.global_norm(grads)
+        return new_state, metrics
+
+    return train_step
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 0           # 0 = disabled
+    checkpoint_dir: Optional[str] = None
+    keep_checkpoints: int = 3
+
+
+def run_train_loop(train_step, state, batch_iter, cfg: TrainLoopConfig,
+                   checkpointer=None, preemption=None,
+                   log_fn=print) -> tuple[dict, list[dict]]:
+    """Host training loop with checkpointing + preemption handling.
+
+    ``batch_iter`` yields batches; ``checkpointer`` is a
+    :class:`repro.train.checkpoint.Checkpointer`; ``preemption`` a
+    :class:`repro.train.fault_tolerance.PreemptionHandler`.
+    """
+    history = []
+    start = int(state["step"])
+    step_jit = jax.jit(train_step, donate_argnums=(0,))
+    for step in range(start, cfg.total_steps):
+        batch = next(batch_iter)
+        state, metrics = step_jit(state, batch)
+        if preemption is not None and preemption.should_stop():
+            if checkpointer is not None:
+                checkpointer.save(state, step + 1, blocking=True)
+            log_fn(f"[preempt] saved emergency checkpoint at step {step+1}")
+            break
+        if cfg.log_every and (step + 1) % cfg.log_every == 0:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": step + 1, **m})
+            log_fn(f"step {step+1}: " +
+                   " ".join(f"{k}={v:.4f}" for k, v in m.items()))
+        if (cfg.checkpoint_every and checkpointer is not None
+                and (step + 1) % cfg.checkpoint_every == 0):
+            checkpointer.save(state, step + 1)
+    return state, history

@@ -1,0 +1,97 @@
+"""Shared utilities: chunked evaluation, PRNG plumbing, pytree helpers."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rng_seq(seed: int) -> Iterable[jax.Array]:
+    """Infinite deterministic stream of PRNG keys."""
+    key = jax.random.PRNGKey(seed)
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub
+
+
+def chunked(n: int, chunk: int) -> Iterable[tuple[int, int]]:
+    """Yield (start, stop) covering [0, n) in chunks."""
+    for start in range(0, n, chunk):
+        yield start, min(start + chunk, n)
+
+
+def chunked_map(fn: Callable[[jax.Array], jax.Array], x: jax.Array,
+                chunk: int = 65536) -> jax.Array:
+    """Apply ``fn`` over the leading axis of ``x`` in chunks and concatenate.
+
+    Used for streaming transforms over indexes too large to process at once.
+    """
+    n = x.shape[0]
+    if n <= chunk:
+        return fn(x)
+    outs = [fn(x[s:e]) for s, e in chunked(n, chunk)]
+    return jnp.concatenate(outs, axis=0)
+
+
+def tree_size_bytes(tree: Any) -> int:
+    """Total size in bytes of all array leaves."""
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree)
+               if hasattr(x, "dtype"))
+
+
+def tree_num_params(tree: Any) -> int:
+    return sum(int(np.prod(x.shape))
+               for x in jax.tree_util.tree_leaves(tree)
+               if hasattr(x, "shape"))
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB", "PiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f} {unit}"
+        n /= 1024.0
+    return f"{n:.2f} EiB"
+
+
+def human_count(n: float) -> str:
+    for unit in ("", "K", "M", "B", "T"):
+        if abs(n) < 1000.0:
+            return f"{n:.2f}{unit}"
+        n /= 1000.0
+    return f"{n:.2f}Q"
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def first_divisor_leq(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= cap (>=1)."""
+    for d in range(min(cap, n), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+@functools.cache
+def cached_jit(fn, **kwargs):
+    return jax.jit(fn, **kwargs)
+
+
+def stable_hash(items: Sequence[Any]) -> int:
+    """Order-dependent deterministic hash for seeding from config fields."""
+    h = 1469598103934665603
+    for it in items:
+        for b in repr(it).encode():
+            h ^= b
+            h = (h * 1099511628211) % (1 << 64)
+    return h % (1 << 31)

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# tests run with PYTHONPATH=src; this makes them work standalone too.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Keep smoke tests on 1 device — the dry-run (and only the dry-run) forces
+# 512 host devices in its own process.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,164 @@
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import Checkpointer
+from repro.train.fault_tolerance import (PreemptionHandler, StragglerMonitor,
+                                         with_retries)
+from repro.train import optimizer as O
+from repro.train import trainer
+
+
+def _state():
+    return {"params": {"w": jnp.arange(6.0).reshape(2, 3),
+                       "b": jnp.ones((3,))},
+            "opt": (jnp.zeros(()),),
+            "step": jnp.asarray(5, jnp.int32)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    state = _state()
+    ck.save(state, 5, blocking=True)
+    restored = ck.restore(state)
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(_state(), 1, blocking=False)
+    ck.wait()
+    assert ck.latest_step() == 1
+
+
+def test_latest_and_retention(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(_state(), s, blocking=True)
+    assert ck.latest_step() == 4
+    assert ck.all_steps() == [3, 4]
+
+
+def test_no_partial_checkpoints_visible(tmp_path):
+    """Staged tmp dirs must never be listed as checkpoints."""
+    ck = Checkpointer(str(tmp_path))
+    os.makedirs(tmp_path / ".tmp-step_00000009")
+    assert ck.all_steps() == []
+    assert ck.latest_step() is None
+
+
+def test_restore_missing_key_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(_state(), 1, blocking=True)
+    bigger = dict(_state())
+    bigger["extra"] = jnp.zeros((2,))
+    with pytest.raises(KeyError):
+        ck.restore(bigger)
+
+
+def test_stale_latest_recovers(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(_state(), 3, blocking=True)
+    with open(tmp_path / "LATEST", "w") as f:
+        f.write("99")              # points at a checkpoint that doesn't exist
+    assert ck.latest_step() == 3
+
+
+def test_resume_training_loop(tmp_path):
+    """Kill training mid-run; resume reproduces the uninterrupted run."""
+    tx = O.sgd(0.1)
+
+    def loss(params, batch):
+        l = jnp.sum(jnp.square(params["w"] - 4.0))
+        return l, {}
+
+    def fresh():
+        return {"params": {"w": jnp.zeros((2,))},
+                "opt": tx.init({"w": jnp.zeros((2,))}),
+                "step": jnp.zeros((), jnp.int32)}
+
+    step = jax.jit(trainer.make_train_step(loss, tx))
+
+    # uninterrupted 10 steps
+    s = fresh()
+    for _ in range(10):
+        s, _ = step(s, {})
+    want = np.asarray(s["params"]["w"])
+
+    # interrupted at 6 + resumed
+    ck = Checkpointer(str(tmp_path))
+    s = fresh()
+    for _ in range(6):
+        s, _ = step(s, {})
+    ck.save(s, 6, blocking=True)
+    restored = ck.restore(fresh())
+    assert int(restored["step"]) == 6
+    for _ in range(4):
+        restored, _ = step(restored, {})
+    np.testing.assert_allclose(np.asarray(restored["params"]["w"]), want,
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_handler_stops_loop(tmp_path):
+    tx = O.sgd(0.1)
+
+    def loss(params, batch):
+        return jnp.sum(params["w"]), {}
+
+    state = trainer.init_state(jax.random.PRNGKey(0),
+                               lambda _: {"w": jnp.ones((2,))}, tx)
+    step = trainer.make_train_step(loss, tx)
+    handler = PreemptionHandler(signals=())
+    ck = Checkpointer(str(tmp_path))
+
+    def batches():
+        while True:
+            yield {}
+
+    handler.trigger()
+    cfg = trainer.TrainLoopConfig(total_steps=50, log_every=0)
+    state, _ = trainer.run_train_loop(step, state, batches(), cfg,
+                                      checkpointer=ck, preemption=handler,
+                                      log_fn=lambda *_: None)
+    assert int(state["step"]) == 1          # stopped after first step
+    assert ck.latest_step() == 1            # emergency checkpoint written
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(threshold=2.0, warmup_steps=2)
+    for _ in range(5):
+        assert not mon.observe(0.1)
+    assert mon.observe(0.5)                 # 5× slower → flagged
+    assert mon.flagged
+
+
+def test_with_retries():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise IOError("transient")
+        return "ok"
+
+    assert with_retries(flaky, retries=3, backoff=0.0,
+                        log_fn=lambda *_: None) == "ok"
+    assert len(calls) == 3
+
+    def hard_fail():
+        raise ValueError("logic error")
+
+    with pytest.raises(ValueError):
+        with_retries(hard_fail, retries=2, backoff=0.0,
+                     log_fn=lambda *_: None)

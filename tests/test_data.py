@@ -1,0 +1,62 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ALL_NAMES, get_arch
+from repro.data import batches as B
+from repro.data.synthetic import add_distractors, make_dpr_like_kb
+
+
+def test_kb_matches_paper_statistics():
+    """Table 1: doc L2 12.3±0.6, query L2 9.3±0.2 (we match the ordering
+    and magnitudes; exact values depend on noise knobs)."""
+    kb = make_dpr_like_kb(n_queries=200, n_docs=5000)
+    assert 10.0 < kb.meta["doc_l2"] < 16.0
+    assert 8.0 < kb.meta["query_l2"] < 13.0
+    assert kb.meta["query_l2"] < kb.meta["doc_l2"]      # queries more centered
+    assert kb.meta["query_l1"] < kb.meta["doc_l1"]
+
+
+def test_kb_deterministic():
+    a = make_dpr_like_kb(n_queries=20, n_docs=100, seed=7)
+    b = make_dpr_like_kb(n_queries=20, n_docs=100, seed=7)
+    np.testing.assert_array_equal(np.asarray(a.docs), np.asarray(b.docs))
+    c = make_dpr_like_kb(n_queries=20, n_docs=100, seed=8)
+    assert not np.array_equal(np.asarray(a.docs), np.asarray(c.docs))
+
+
+def test_kb_relevance_valid():
+    kb = make_dpr_like_kb(n_queries=50, n_docs=500)
+    rel = kb.relevant
+    assert rel.shape == (50, 2)
+    assert rel.min() >= 0 and rel.max() < 500
+    # multi-hop: the two relevant docs differ
+    assert np.all(rel[:, 0] != rel[:, 1])
+
+
+def test_add_distractors():
+    kb = make_dpr_like_kb(n_queries=20, n_docs=200)
+    bigger = add_distractors(kb, 300)
+    assert bigger.docs.shape == (500, 768)
+    np.testing.assert_array_equal(np.asarray(bigger.docs[:200]),
+                                  np.asarray(kb.docs))
+
+
+@pytest.mark.parametrize("arch_name", ALL_NAMES)
+def test_batches_match_specs(arch_name):
+    arch = get_arch(arch_name)
+    rng = np.random.default_rng(0)
+    for shape in arch.shapes:
+        specs = B.input_specs(arch, shape, reduced=True)
+        batch = B.make_batch(rng, arch, shape, reduced=True)
+        for k, s in specs.items():
+            assert batch[k].shape == s.shape, (arch_name, shape.name, k)
+            assert batch[k].dtype == s.dtype, (arch_name, shape.name, k)
+
+
+def test_full_specs_have_production_dims():
+    arch = get_arch("dbrx-132b")
+    spec = B.input_specs(arch, arch.shape("train_4k"), reduced=False)
+    assert spec["tokens"].shape == (256, 4096)
+    spec = B.input_specs(arch, arch.shape("long_500k"), reduced=False)
+    assert spec["tokens"].shape == (1,)

@@ -1,0 +1,194 @@
+"""Per-kernel allclose vs pure-jnp oracle, swept over shapes/dtypes.
+
+All Pallas kernels run with ``interpret=True`` on CPU (the kernel body
+executes in Python) — the same body lowers to Mosaic on TPU.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CenterNorm, CompressionPipeline, Int8Quantizer, PCA
+from repro.core.quantization import pack_bits
+from repro.kernels.binary_ip import ops as bops, ref as bref
+from repro.kernels.binary_ip.kernel import binary_ip_pallas
+from repro.kernels.fused_quantize import ops as fops, ref as fref
+from repro.kernels.int8_ip import ops as iops, ref as iref
+from repro.kernels.int8_ip.kernel import int8_ip_pallas
+from repro.kernels.topk_blocks import ops as tops
+from repro.kernels.topk_blocks.kernel import topk_blocks_pallas
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# binary_ip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("q,d,dim,bq,bd", [
+    (7, 33, 64, 8, 16),        # paddings in every axis
+    (32, 128, 96, 16, 64),
+    (1, 5, 32, 8, 8),          # single query / tiny corpus
+    (64, 300, 256, 32, 128),
+])
+def test_binary_ip_shapes(q, d, dim, bq, bd):
+    rng = np.random.default_rng(q * d)
+    queries, docs = _rand(rng, q, dim), _rand(rng, d, dim)
+    qp, dp = pack_bits(queries), pack_bits(docs)
+    want = bref.binary_ip_scores_ref(qp, dp, dim, 0.5)
+    got = bops.binary_ip_scores(queries, dp, dim, offset=0.5,
+                                use_pallas=True, interpret=True,
+                                block_q=bq, block_d=bd)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@pytest.mark.parametrize("offset", [0.5, 0.0, 0.25])
+def test_binary_ip_offsets(offset):
+    rng = np.random.default_rng(0)
+    queries, docs = _rand(rng, 9, 64), _rand(rng, 40, 64)
+    qp, dp = pack_bits(queries), pack_bits(docs)
+    want = bref.binary_ip_scores_ref(qp, dp, 64, offset)
+    for use_pallas in (False, True):
+        got = bops.binary_ip_scores(queries, dp, 64, offset=offset,
+                                    use_pallas=use_pallas, interpret=True,
+                                    block_q=8, block_d=16)
+        np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                                   atol=1e-5)
+
+
+def test_binary_ip_packed_queries():
+    rng = np.random.default_rng(1)
+    queries, docs = _rand(rng, 5, 32), _rand(rng, 20, 32)
+    qp, dp = pack_bits(queries), pack_bits(docs)
+    got = bops.binary_ip_scores(qp, dp, 32, use_pallas=False)
+    want = bref.binary_ip_scores_ref(qp, dp, 32, 0.5)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 20), st.integers(1, 50), st.integers(1, 3),
+       st.integers(0, 1000))
+def test_binary_ip_property(q, d, words, seed):
+    """Kernel == oracle for arbitrary shapes (d multiple of 32)."""
+    rng = np.random.default_rng(seed)
+    dim = words * 32
+    queries, docs = _rand(rng, q, dim), _rand(rng, d, dim)
+    dp = pack_bits(docs)
+    want = bref.binary_ip_scores_ref(pack_bits(queries), dp, dim, 0.5)
+    got = bops.binary_ip_scores(queries, dp, dim, use_pallas=True,
+                                interpret=True, block_q=8, block_d=8)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+# ---------------------------------------------------------------------------
+# int8_ip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sim", ["ip", "l2"])
+@pytest.mark.parametrize("q,d,dim", [(5, 37, 48), (16, 100, 64)])
+def test_int8_scores(sim, q, d, dim):
+    rng = np.random.default_rng(q + d)
+    queries, docs = _rand(rng, q, dim), _rand(rng, d, dim)
+    quant = Int8Quantizer().fit(docs)
+    codes = quant.encode(docs)
+    want = iref.int8_scores_ref(queries, codes, quant.state["scale"],
+                                quant.state["zero"], sim)
+    got = iops.int8_scores(queries, codes, quant.state["scale"],
+                           quant.state["zero"], sim, use_pallas=True,
+                           interpret=True, block_q=8, block_d=16)
+    scale = float(jnp.max(jnp.abs(want)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=0.02 * scale)  # bf16 query path
+
+
+def test_int8_ranking_preserved():
+    """bf16 kernel scores must give the same top-k as the f32 oracle."""
+    rng = np.random.default_rng(7)
+    queries, docs = _rand(rng, 8, 64), _rand(rng, 200, 64)
+    quant = Int8Quantizer().fit(docs)
+    codes = quant.encode(docs)
+    want = iref.int8_scores_ref(queries, codes, quant.state["scale"],
+                                quant.state["zero"], "ip")
+    got = iops.int8_scores(queries, codes, quant.state["scale"],
+                           quant.state["zero"], "ip", use_pallas=True,
+                           interpret=True, block_q=8, block_d=32)
+    w10 = np.argsort(-np.asarray(want), 1)[:, :10]
+    g10 = np.argsort(-np.asarray(got), 1)[:, :10]
+    overlap = np.mean([len(set(a) & set(b)) / 10 for a, b in zip(w10, g10)])
+    assert overlap > 0.95
+
+
+# ---------------------------------------------------------------------------
+# fused_quantize
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,d,dc,bn", [(50, 64, 16, 16), (257, 96, 32, 64)])
+def test_fused_quantize_matches_ref_and_pipeline(n, d, dc, bn):
+    rng = np.random.default_rng(n)
+    docs, queries = _rand(rng, n, d), _rand(rng, max(n // 4, 2), d)
+    pipe = CompressionPipeline([CenterNorm(), PCA(dc), CenterNorm(),
+                                Int8Quantizer()])
+    pipe.fit(docs, queries)
+    want = fops.fused_quantize(docs, pipe, use_pallas=False)
+    got = fops.fused_quantize(docs, pipe, use_pallas=True, interpret=True,
+                              block_n=bn)
+    diff = np.abs(np.asarray(want).astype(int) - np.asarray(got).astype(int))
+    assert diff.max() <= 1 and (diff > 0).mean() < 0.01  # rounding boundary
+    # ref == the actual 4-stage pipeline encode
+    staged = pipe.transforms[3].encode(
+        pipe.transforms[2](pipe.transforms[1](
+            pipe.transforms[0](docs, "docs"), "docs"), "docs"), "docs")
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(staged))
+
+
+def test_fused_quantize_rejects_wrong_pipeline():
+    pipe = CompressionPipeline([CenterNorm()])
+    with pytest.raises(ValueError):
+        fops.params_from_pipeline(pipe)
+
+
+# ---------------------------------------------------------------------------
+# topk_blocks
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("q,d,k,bq,bd", [
+    (10, 333, 7, 8, 64), (3, 50, 10, 4, 16), (33, 1000, 16, 16, 128),
+])
+def test_streaming_topk(q, d, k, bq, bd):
+    rng = np.random.default_rng(q * d + k)
+    scores = _rand(rng, q, d)
+    wv, wi = tops.streaming_topk(scores, k, use_pallas=False)
+    gv, gi = tops.streaming_topk(scores, k, use_pallas=True, interpret=True,
+                                 block_q=bq, block_d=bd)
+    np.testing.assert_allclose(np.asarray(wv), np.asarray(gv), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(wi), np.asarray(gi))
+
+
+def test_streaming_topk_with_ties():
+    scores = jnp.asarray(np.tile(np.arange(16)[::-1] // 2, (3, 1)),
+                         jnp.float32)
+    wv, wi = tops.streaming_topk(scores, 4, use_pallas=False)
+    gv, gi = tops.streaming_topk(scores, 4, use_pallas=True, interpret=True,
+                                 block_q=2, block_d=8)
+    np.testing.assert_allclose(np.asarray(wv), np.asarray(gv))
+    np.testing.assert_array_equal(np.asarray(wi), np.asarray(gi))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 8), st.integers(2, 200), st.integers(1, 12),
+       st.integers(0, 999))
+def test_streaming_topk_property(q, d, k, seed):
+    rng = np.random.default_rng(seed)
+    scores = _rand(rng, q, d)
+    wv, _ = tops.streaming_topk(scores, k, use_pallas=False)
+    gv, _ = tops.streaming_topk(scores, k, use_pallas=True, interpret=True,
+                                block_q=4, block_d=32)
+    np.testing.assert_allclose(np.asarray(wv), np.asarray(gv), rtol=1e-6)

@@ -1,0 +1,97 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pca import (PCA, PAPER_COMPONENT_SCALES,
+                            covariance_from_moments, fit_pca_from_cov,
+                            moments)
+
+
+@pytest.fixture
+def aniso():
+    rng = np.random.default_rng(1)
+    # anisotropic: strong variance in 4 latent dirs, weak elsewhere
+    z = rng.standard_normal((500, 4)).astype(np.float32) * [10, 5, 2, 1]
+    mix = rng.standard_normal((4, 32)).astype(np.float32)
+    x = z @ mix + 0.05 * rng.standard_normal((500, 32)).astype(np.float32)
+    return jnp.asarray(x + 2.0)       # non-centered
+
+
+def test_components_orthonormal(aniso):
+    pca = PCA(8).fit(aniso)
+    w = np.asarray(pca.state["components"])
+    np.testing.assert_allclose(w.T @ w, np.eye(8), atol=1e-4)
+
+
+def test_eigenvalues_descending(aniso):
+    pca = PCA(8).fit(aniso)
+    ev = np.asarray(pca.state["eigenvalues"])
+    assert np.all(np.diff(ev) <= 1e-5)
+
+
+def test_reconstruction_captures_variance(aniso):
+    pca = PCA(4).fit(aniso)
+    z = pca(aniso)
+    rec = pca.inverse(z)
+    x = np.asarray(aniso)
+    resid = np.mean((np.asarray(rec) - x) ** 2)
+    total = np.mean((x - x.mean(0)) ** 2)
+    assert resid / total < 0.01       # 4 latent dims → near-lossless
+
+
+def test_full_rank_pca_preserves_distances(aniso):
+    """d' = d: PCA is a rotation+shift — pairwise IP of centered data kept."""
+    pca = PCA(32).fit(aniso)
+    z = pca(aniso)
+    x = np.asarray(aniso) - np.asarray(pca.state["mean"])
+    np.testing.assert_allclose(np.asarray(z @ z.T), x @ x.T,
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_moments_accumulate_like_batch_fit(aniso):
+    """Distributed fit contract: summed shard moments == full-data fit."""
+    a, b = aniso[:200], aniso[200:]
+    n1, s1, ss1 = moments(a)
+    n2, s2, ss2 = moments(b)
+    mean, cov = covariance_from_moments(n1 + n2, s1 + s2, ss1 + ss2)
+    direct_mean, direct_cov = covariance_from_moments(*moments(aniso))
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(direct_mean),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(cov), np.asarray(direct_cov),
+                               rtol=1e-3, atol=1e-4)
+
+    p1 = PCA(4)
+    p1.fit_from_moments(n1 + n2, s1 + s2, ss1 + ss2)
+    p2 = PCA(4).fit(aniso)
+    # eigenvectors defined up to sign
+    w1, w2 = np.asarray(p1.state["components"]), np.asarray(
+        p2.state["components"])
+    cos = np.abs(np.sum(w1 * w2, axis=0))
+    np.testing.assert_allclose(cos, 1.0, atol=1e-3)
+
+
+def test_component_scaling(aniso):
+    pca = PCA(8, scale_components="paper").fit(aniso)
+    assert tuple(np.asarray(pca.state["scales"][:5])) == pytest.approx(
+        PAPER_COMPONENT_SCALES)
+    plain = PCA(8).fit(aniso)
+    z_scaled = np.asarray(pca(aniso))
+    z_plain = np.asarray(plain(aniso))
+    # scaled projection = plain projection × per-component scale (up to sign)
+    ratio = np.abs(z_scaled[:, 0]) / np.maximum(np.abs(z_plain[:, 0]), 1e-9)
+    np.testing.assert_allclose(ratio, 0.5, rtol=1e-2)
+
+
+def test_fit_on_subsample(aniso):
+    pca = PCA(4, max_fit_samples=64).fit(aniso, rng=jax.random.PRNGKey(0))
+    assert pca(aniso).shape == (500, 4)
+
+
+def test_fit_on_queries_vs_docs(aniso):
+    queries = aniso[:100] * 0.5
+    for fit_on in ("docs", "queries", "both"):
+        pca = PCA(4, fit_on=fit_on).fit(aniso, queries)
+        assert pca(queries, "queries").shape == (100, 4)
+    with pytest.raises(ValueError):
+        PCA(4, fit_on="nonsense")

@@ -1,0 +1,69 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.preprocess import (Center, CenterNorm, Normalize,
+                                   PreprocessSpec, ZScore, fit_apply)
+
+
+@pytest.fixture
+def data():
+    rng = np.random.default_rng(0)
+    docs = jnp.asarray(rng.standard_normal((200, 16)) + 3.0, jnp.float32)
+    queries = jnp.asarray(rng.standard_normal((50, 16)) - 1.0, jnp.float32)
+    return docs, queries
+
+
+def test_center_separate_populations(data):
+    docs, queries = data
+    t = Center().fit(docs, queries)
+    np.testing.assert_allclose(np.asarray(t(docs, "docs").mean(0)), 0,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(t(queries, "queries").mean(0)), 0,
+                               atol=1e-5)
+    # doc mean applied to queries would NOT center them
+    assert abs(float(t(queries, "docs").mean())) > 0.5
+
+
+def test_normalize_unit_rows(data):
+    docs, _ = data
+    y = Normalize().fit(docs)(docs)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=1)), 1.0,
+                               rtol=1e-5)
+
+
+def test_zscore(data):
+    docs, queries = data
+    t = ZScore().fit(docs, queries)
+    y = t(docs, "docs")
+    np.testing.assert_allclose(np.asarray(y.mean(0)), 0, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y.std(0)), 1, atol=1e-3)
+
+
+def test_center_norm_equals_composition(data):
+    docs, queries = data
+    fused = CenterNorm().fit(docs, queries)
+    c = Center().fit(docs, queries)
+    n = Normalize().fit(docs)
+    np.testing.assert_allclose(np.asarray(fused(docs, "docs")),
+                               np.asarray(n(c(docs, "docs"))), rtol=1e-5)
+
+
+def test_preprocess_spec_modes(data):
+    docs, queries = data
+    for mode in ("none", "center", "norm", "center_norm", "zscore",
+                 "zscore_norm"):
+        ts = PreprocessSpec(mode).build()
+        d, q = fit_apply(ts, docs, queries)
+        assert d.shape == docs.shape and q.shape == queries.shape
+        assert not bool(jnp.any(jnp.isnan(d)))
+    with pytest.raises(ValueError):
+        PreprocessSpec("bogus").build()
+
+
+def test_state_dict_roundtrip(data):
+    docs, queries = data
+    t = CenterNorm().fit(docs, queries)
+    t2 = CenterNorm().load_state(t.state_dict())
+    np.testing.assert_allclose(np.asarray(t(docs, "docs")),
+                               np.asarray(t2(docs, "docs")))

@@ -1,0 +1,113 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CenterNorm, OneBitQuantizer, PCA
+from repro.core.quantization import pack_bits, unpack_bits
+from repro.retrieval.rprecision import r_precision_from_scores
+from repro.retrieval.topk import merge_topk, similarity
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 30), st.integers(2, 12), st.integers(0, 10_000))
+def test_rprecision_bounded(n_docs, n_q, seed):
+    rng = np.random.default_rng(seed)
+    scores = jnp.asarray(rng.standard_normal((n_q, n_docs)), jnp.float32)
+    rel = rng.integers(0, n_docs, (n_q, 2)).astype(np.int32)
+    rp = float(r_precision_from_scores(scores, jnp.asarray(rel)))
+    assert 0.0 <= rp <= 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_rprecision_perfect_when_relevant_scores_highest(seed):
+    rng = np.random.default_rng(seed)
+    n_q, n_docs = 5, 40
+    scores = jnp.asarray(rng.uniform(0, 1, (n_q, n_docs)), jnp.float32)
+    rel = np.stack([np.arange(n_q) * 2, np.arange(n_q) * 2 + 1], 1)
+    s = np.array(scores)          # writable copy
+    for i in range(n_q):
+        s[i, rel[i]] = 10.0 + rng.uniform(0, 1, 2)
+    rp = float(r_precision_from_scores(jnp.asarray(s),
+                                       jnp.asarray(rel.astype(np.int32))))
+    assert rp == 1.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 4), st.integers(0, 10_000))
+def test_ranking_invariant_under_positive_scaling(words, seed):
+    """1-bit scoring: rankings are invariant to any per-call positive scale
+    (the kernels may fold constants; rank order must not change)."""
+    rng = np.random.default_rng(seed)
+    d = words * 32
+    q = jnp.asarray(rng.standard_normal((3, d)), jnp.float32)
+    docs = jnp.asarray(rng.standard_normal((17, d)), jnp.float32)
+    s1 = similarity(q, docs, "ip")
+    s2 = similarity(q * 3.7, docs, "ip")
+    np.testing.assert_array_equal(np.asarray(jnp.argsort(-s1, 1)),
+                                  np.asarray(jnp.argsort(-s2, 1)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 10_000))
+def test_merge_topk_equals_global_topk(k, seed):
+    rng = np.random.default_rng(seed)
+    scores = jnp.asarray(rng.standard_normal((4, 40)), jnp.float32)
+    idx = jnp.arange(40)[None].repeat(4, 0)
+    va, ia = merge_topk(scores[:, :20], idx[:, :20],
+                        scores[:, 20:], idx[:, 20:], k)
+    want, _ = jax.lax.top_k(scores, k)
+    np.testing.assert_allclose(np.asarray(va), np.asarray(want), rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 30), st.integers(0, 10_000))
+def test_pack_bits_involution(words, rows, seed):
+    rng = np.random.default_rng(seed)
+    d = words * 32
+    x = rng.standard_normal((rows, d)).astype(np.float32)
+    signs = unpack_bits(pack_bits(jnp.asarray(x)), d).astype(np.float32)
+    repacked = pack_bits(jnp.asarray(signs))
+    np.testing.assert_array_equal(np.asarray(pack_bits(jnp.asarray(x))),
+                                  np.asarray(repacked))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_onebit_scoring_affine_in_sign_dot(seed):
+    """IP of offset-encoded vectors is affine in the ±1 sign dot — the
+    identity the binary kernel relies on (ops.py)."""
+    rng = np.random.default_rng(seed)
+    d = 64
+    alpha = float(rng.uniform(0, 1))
+    x = rng.standard_normal((5, d)).astype(np.float32)
+    y = rng.standard_normal((7, d)).astype(np.float32)
+    bx, by = (x >= 0).astype(np.float32), (y >= 0).astype(np.float32)
+    vx, vy = bx - alpha, by - alpha
+    want = vx @ vy.T
+    sx, sy = np.where(x >= 0, 1.0, -1.0), np.where(y >= 0, 1.0, -1.0)
+    c = 0.5 - alpha
+    got = (0.25 * (sx @ sy.T)
+           + (c / 2) * (sx.sum(1)[:, None] + sy.sum(1)[None, :])
+           + d * c * c)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 1000))
+def test_pca_projection_is_isometry_on_components(seed):
+    """PCA with orthonormal columns: ‖(x−μ)W‖ ≤ ‖x−μ‖, equality at full d."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((50, 12)), jnp.float32)
+    full = PCA(12).fit(x)
+    z = full(x)
+    xc = np.asarray(x) - np.asarray(full.state["mean"])
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(z), axis=1),
+                               np.linalg.norm(xc, axis=1), rtol=1e-4)
+    part = PCA(4).fit(x)
+    zp = np.asarray(part(x))
+    assert np.all(np.linalg.norm(zp, axis=1)
+                  <= np.linalg.norm(xc, axis=1) + 1e-4)

@@ -1,0 +1,88 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import (FloatCast, Int8Quantizer,
+                                     OneBitQuantizer, compression_ratio,
+                                     pack_bits, unpack_bits)
+from repro.core.pca import PCA
+from repro.core.preprocess import CenterNorm
+
+
+@pytest.fixture
+def data():
+    rng = np.random.default_rng(2)
+    return jnp.asarray(rng.standard_normal((100, 64)), jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
+def test_pack_unpack_roundtrip(rows, words, seed):
+    rng = np.random.default_rng(seed)
+    d = words * 32
+    x = rng.standard_normal((rows, d)).astype(np.float32)
+    signs = unpack_bits(pack_bits(jnp.asarray(x)), d)
+    np.testing.assert_array_equal(np.asarray(signs),
+                                  np.where(x >= 0, 1, -1).astype(np.int8))
+
+
+def test_pack_requires_mult32():
+    with pytest.raises(ValueError):
+        pack_bits(jnp.zeros((2, 31)))
+
+
+def test_float_cast(data):
+    t = FloatCast(jnp.float16).fit(data)
+    enc = t.encode(data)
+    assert enc.dtype == jnp.float16
+    np.testing.assert_allclose(np.asarray(t(data)), np.asarray(data),
+                               rtol=1e-3, atol=1e-3)
+    assert t.bits_per_dim(32.0) == 16
+
+
+def test_int8_bounds_and_error(data):
+    t = Int8Quantizer().fit(data)
+    enc = t.encode(data)
+    assert enc.dtype == jnp.uint8
+    err = np.abs(np.asarray(t(data)) - np.asarray(data))
+    scale = np.asarray(t.state["scale"])
+    assert np.all(err <= scale * 0.51 + 1e-6)   # ≤ half a quantization step
+
+
+def test_onebit_offsets(data):
+    for offset in (0.5, 0.0):
+        t = OneBitQuantizer(offset=offset).fit(data)
+        vals = np.unique(np.asarray(t(data)))
+        assert set(vals) <= {1.0 - offset, -offset}
+
+
+def test_onebit_encode_packs(data):
+    t = OneBitQuantizer().fit(data)
+    enc = t.encode(data)
+    assert enc.dtype == jnp.uint32 and enc.shape == (100, 2)
+    dec = t.decode(enc, d=64)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(t(data)))
+
+
+def test_paper_compression_ratios():
+    """Table 2 storage factors."""
+    assert compression_ratio(768, [PCA(128)]) == pytest.approx(6.0)
+    assert compression_ratio(768, [Int8Quantizer()]) == pytest.approx(4.0)
+    assert compression_ratio(768, [FloatCast()]) == pytest.approx(2.0)
+    assert compression_ratio(768, [OneBitQuantizer()]) == pytest.approx(32.0)
+    assert compression_ratio(
+        768, [PCA(128), Int8Quantizer()]) == pytest.approx(24.0)
+    assert compression_ratio(
+        768, [PCA(245), OneBitQuantizer()]) == pytest.approx(
+            100.0, rel=0.01)
+
+
+def test_onebit_offset_equivalence_after_centernorm(data):
+    """Paper §4.4: offsets 0.5 and 0.0 are equivalent once post-processed."""
+    t5 = OneBitQuantizer(0.5).fit(data)
+    t0 = OneBitQuantizer(0.0).fit(data)
+    post = CenterNorm()
+    y5 = post.fit(t5(data))(t5(data))
+    y0 = post.fit(t0(data))(t0(data))
+    np.testing.assert_allclose(np.asarray(y5), np.asarray(y0), atol=1e-5)

@@ -1,0 +1,60 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.random_projection import (DimensionDrop, GaussianProjection,
+                                          GreedyDimensionDrop,
+                                          SparseProjection)
+from repro.data import make_dpr_like_kb
+from repro.retrieval.rprecision import make_dim_drop_scorer
+
+
+@pytest.fixture
+def data():
+    rng = np.random.default_rng(3)
+    return jnp.asarray(rng.standard_normal((300, 64)), jnp.float32)
+
+
+def test_dimension_drop(data):
+    t = DimensionDrop(16).fit(data, rng=jax.random.PRNGKey(0))
+    y = t(data)
+    assert y.shape == (300, 16)
+    keep = np.asarray(t.state["keep"])
+    assert len(np.unique(keep)) == 16
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(data)[:, keep])
+
+
+def test_gaussian_projection_jl(data):
+    """JL property: projected IPs approximate original IPs on average."""
+    t = GaussianProjection(48).fit(data, rng=jax.random.PRNGKey(1))
+    y = np.asarray(t(data))
+    x = np.asarray(data)
+    corr = np.corrcoef((x @ x.T).ravel(), (y @ y.T).ravel())[0, 1]
+    assert corr > 0.6
+
+
+def test_sparse_projection_density(data):
+    t = SparseProjection(32, s=3.0).fit(data, rng=jax.random.PRNGKey(2))
+    m = np.asarray(t.state["matrix"])
+    density = np.mean(m != 0)
+    assert 0.2 < density < 0.5      # expected 1/3
+
+
+def test_greedy_dim_drop_uses_scorer():
+    kb = make_dpr_like_kb(n_queries=50, n_docs=1000, d=64, r_eff=16)
+    scorer = make_dim_drop_scorer(kb.relevant, n_queries=32, n_docs=256,
+                                  dim_chunk=16)
+    t = GreedyDimensionDrop(16, scorer=scorer)
+    t.fit(kb.docs, kb.queries)
+    assert t(kb.docs).shape == (1000, 16)
+    assert t.state["per_dim_quality"].shape == (64,)
+    # deterministic
+    t2 = GreedyDimensionDrop(16, scorer=scorer).fit(kb.docs, kb.queries)
+    np.testing.assert_array_equal(np.asarray(t.state["keep"]),
+                                  np.asarray(t2.state["keep"]))
+
+
+def test_greedy_requires_scorer(data):
+    with pytest.raises(ValueError):
+        GreedyDimensionDrop(8).fit(data)

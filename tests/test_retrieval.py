@@ -1,0 +1,112 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CenterNorm, CompressionPipeline, Int8Quantizer,
+                        OneBitQuantizer, PCA)
+from repro.data import make_dpr_like_kb
+from repro.retrieval import (CompressedIndex, DenseIndex, IVFFlatIndex,
+                             r_precision, topk_search)
+from repro.retrieval.topk import merge_topk, similarity
+
+
+@pytest.fixture(scope="module")
+def kb():
+    return make_dpr_like_kb(n_queries=100, n_docs=4000, d=128, r_eff=48)
+
+
+def test_topk_matches_bruteforce(kb):
+    q = kb.queries[:10]
+    scores = np.asarray(similarity(q, kb.docs, "ip"))
+    want = np.argsort(-scores, axis=1)[:, :5]
+    vals, idx = topk_search(q, kb.docs, 5, doc_chunk=700)
+    np.testing.assert_array_equal(np.asarray(idx), want)
+
+
+def test_topk_l2(kb):
+    q = kb.queries[:5]
+    d2 = np.asarray(similarity(q, kb.docs, "l2"))
+    want = np.argsort(-d2, axis=1)[:, :3]
+    _, idx = topk_search(q, kb.docs, 3, sim="l2", doc_chunk=1000)
+    np.testing.assert_array_equal(np.asarray(idx), want)
+
+
+def test_merge_topk_associative():
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.standard_normal((4, 20)), jnp.float32)
+    i = jnp.arange(20)[None, :].repeat(4, 0)
+    va, ia = merge_topk(v[:, :10], i[:, :10], v[:, 10:], i[:, 10:], 5)
+    vb, ib = merge_topk(v[:, 10:], i[:, 10:], v[:, :10], i[:, :10], 5)
+    np.testing.assert_allclose(np.asarray(va), np.asarray(vb))
+
+
+def test_r_precision_perfect_and_zero():
+    docs = jnp.eye(4, dtype=jnp.float32)
+    queries = jnp.eye(4, dtype=jnp.float32)
+    rel = np.arange(4, dtype=np.int32)[:, None]
+    assert r_precision(queries, docs, rel, "ip") == 1.0
+    rel_wrong = ((np.arange(4) + 1) % 4).astype(np.int32)[:, None]
+    assert r_precision(queries, docs, rel_wrong, "ip") == 0.0
+
+
+def test_dense_index(kb):
+    idx = DenseIndex(kb.docs)
+    vals, ids = idx.search(kb.queries[:8], 4)
+    assert ids.shape == (8, 4)
+    assert np.all(np.diff(np.asarray(vals), axis=1) <= 1e-6)
+
+
+def test_compressed_index_int8_matches_float_pipeline(kb):
+    pipe = CompressionPipeline([CenterNorm(), PCA(32), CenterNorm(),
+                                Int8Quantizer()])
+    idx = CompressedIndex.build(kb.docs, kb.queries, pipe, backend="jnp")
+    vals, ids = idx.search(kb.queries[:16], 8)
+    # oracle: ASYMMETRIC scoring — docs dequantized, queries through the
+    # float stages only (the index never quantizes queries)
+    d = pipe.transform(kb.docs, "docs")            # includes quant→dequant
+    q = idx.encode_queries(kb.queries[:16])
+    _, want = topk_search(q, d, 8)
+    overlap = np.mean([len(set(np.asarray(ids)[i]) &
+                           set(np.asarray(want)[i])) / 8
+                       for i in range(16)])
+    assert overlap > 0.97        # < 1.0 only via float ties at the k-cut
+    assert idx.nbytes == 4000 * 32                  # 16× smaller (128→32+int8)
+
+
+def test_compressed_index_onebit(kb):
+    pipe = CompressionPipeline([CenterNorm(), OneBitQuantizer(0.5)])
+    idx = CompressedIndex.build(kb.docs, kb.queries, pipe, backend="jnp")
+    vals, ids = idx.search(kb.queries[:8], 4)
+    assert ids.shape == (8, 4)
+    assert idx.nbytes == 4000 * 128 // 8            # exactly 32× smaller
+
+
+def test_compressed_index_pallas_backend_agrees(kb):
+    pipe = CompressionPipeline([CenterNorm(), OneBitQuantizer(0.5)])
+    a = CompressedIndex.build(kb.docs, kb.queries, pipe, backend="jnp")
+    b = CompressedIndex.build(kb.docs, kb.queries,
+                              CompressionPipeline([CenterNorm(),
+                                                   OneBitQuantizer(0.5)]),
+                              backend="pallas")
+    _, ia = a.search(kb.queries[:8], 5)
+    _, ib = b.search(kb.queries[:8], 5)
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+
+
+def test_ivf_recall(kb):
+    exact = DenseIndex(kb.docs)
+    _, want = exact.search(kb.queries[:32], 10)
+    ivf = IVFFlatIndex(nlist=32, nprobe=16).fit(kb.docs)
+    _, got = ivf.search(kb.queries[:32], 10)
+    recall = np.mean([len(set(np.asarray(got)[i]) & set(np.asarray(want)[i]))
+                      / 10 for i in range(32)])
+    assert recall > 0.8
+
+
+def test_ivf_full_probe_is_exact(kb):
+    exact = DenseIndex(kb.docs)
+    _, want = exact.search(kb.queries[:16], 5)
+    ivf = IVFFlatIndex(nlist=16, nprobe=16).fit(kb.docs)
+    _, got = ivf.search(kb.queries[:16], 5)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,103 @@
+"""End-to-end behaviour tests: the paper's full pipeline on synthetic data.
+
+These assert the paper's HEADLINE CLAIMS hold qualitatively on our DPR-like
+KB (exact values are data-dependent; EXPERIMENTS.md records the full grid):
+
+  1. center+normalize ≥ raw, and equalizes IP vs L2      (§3.3, Table 5)
+  2. PCA-128 ≈ 90–100% of uncompressed                   (§4.2)
+  3. int8 ≈ 100%, 1-bit ≈ 85–95%                         (§4.4)
+  4. PCA+int8 (24×) within a few % of PCA alone          (§4.5)
+  5. random projections clearly worse than PCA           (§4.1)
+  6. PCA needs very few fit samples                      (§5.1)
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CenterNorm, CompressionPipeline, build_method)
+from repro.data import make_dpr_like_kb
+from repro.retrieval import r_precision
+
+
+@pytest.fixture(scope="module")
+def kb():
+    return make_dpr_like_kb(n_queries=300, n_docs=10_000)
+
+
+@pytest.fixture(scope="module")
+def baseline(kb):
+    pipe = CompressionPipeline([CenterNorm()])
+    d, q = pipe.fit_transform(kb.docs, kb.queries)
+    return r_precision(q, d, kb.relevant, sim="ip")
+
+
+def _run(kb, method, dim=128, **kw):
+    pipe = build_method(method, dim, **kw)
+    d, q = pipe.fit_transform(kb.docs, kb.queries)
+    return r_precision(q, d, kb.relevant, sim="ip")
+
+
+def test_preprocessing_helps_and_equalizes(kb, baseline):
+    raw_ip = r_precision(kb.queries, kb.docs, kb.relevant, sim="ip")
+    raw_l2 = r_precision(kb.queries, kb.docs, kb.relevant, sim="l2")
+    assert raw_l2 < raw_ip                 # L2 collapses on raw DPR-like data
+    assert baseline >= raw_ip - 0.02       # center+norm ≥ raw IP
+    pipe = CompressionPipeline([CenterNorm()])
+    d, q = pipe.fit_transform(kb.docs, kb.queries)
+    cn_l2 = r_precision(q, d, kb.relevant, sim="l2")
+    assert cn_l2 == pytest.approx(baseline, abs=1e-6)  # normalized ⇒ same rank
+
+
+def test_pca_retains_most_performance(kb, baseline):
+    assert _run(kb, "pca") / baseline > 0.88
+
+
+def test_precision_reduction(kb, baseline):
+    assert _run(kb, "int8") / baseline > 0.97
+    assert _run(kb, "fp16") / baseline > 0.99
+    r1 = _run(kb, "onebit") / baseline
+    assert 0.75 < r1 <= 1.0
+
+
+def test_combined_pca_int8_24x(kb, baseline):
+    combined = _run(kb, "pca_int8")
+    pca_only = _run(kb, "pca")
+    assert combined > pca_only - 0.04      # negligible extra loss (§4.5)
+
+
+def test_random_projections_worse_than_pca(kb, baseline):
+    gauss = _run(kb, "gaussian_projection")
+    sparse = _run(kb, "sparse_projection")
+    pca = _run(kb, "pca")
+    assert gauss < pca and sparse < pca
+
+
+def test_pca_needs_few_samples(kb, baseline):
+    """§5.1: PCA fitted on 512 docs ≈ PCA fitted on everything."""
+    small = _run(kb, "pca")
+    from repro.core import PCA
+    pipe = CompressionPipeline([CenterNorm(),
+                                PCA(128, max_fit_samples=512), CenterNorm()])
+    d, q = pipe.fit_transform(kb.docs, kb.queries)
+    few = r_precision(q, d, kb.relevant, sim="ip")
+    assert few > small - 0.06
+
+
+def test_compressed_serving_end_to_end(kb):
+    """Production path: build compressed index, serve queries, compare ids
+    against the uncompressed oracle."""
+    from repro.core import Int8Quantizer, PCA
+    from repro.retrieval import CompressedIndex, DenseIndex
+
+    pipe = CompressionPipeline([CenterNorm(), PCA(128), CenterNorm(),
+                                Int8Quantizer()])
+    idx = CompressedIndex.build(kb.docs, kb.queries, pipe, backend="jnp")
+    _, got = idx.search(kb.queries[:64], 10)
+
+    exact = DenseIndex(CenterNorm().fit(kb.docs, kb.queries)(kb.docs))
+    q = CenterNorm().fit(kb.docs, kb.queries)(kb.queries[:64], "queries")
+    _, want = exact.search(q, 10)
+    overlap = np.mean([len(set(np.asarray(got)[i]) & set(np.asarray(want)[i]))
+                       / 10 for i in range(64)])
+    assert overlap > 0.5        # 24× smaller index, majority agreement
