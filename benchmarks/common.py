@@ -72,6 +72,6 @@ def base_parser(desc: str) -> argparse.ArgumentParser:
                     choices=("hotpot-like", "nq-like"))
     ap.add_argument("--n-docs", type=int, default=20_000)
     ap.add_argument("--n-queries", type=int, default=400)
-    ap.add_argument("--fast", action="store_true",
+    ap.add_argument("--fast", "--quick", action="store_true", dest="fast",
                     help="smaller grids for CI")
     return ap

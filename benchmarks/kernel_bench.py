@@ -16,9 +16,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import base_parser, print_csv
-from repro.core.quantization import Int8Quantizer, OneBitQuantizer, pack_bits
+from repro.core.pipeline import CompressionPipeline
+from repro.core.preprocess import CenterNorm
+from repro.core.quantization import (FloatCast, Int8Quantizer,
+                                     OneBitQuantizer, pack_bits)
 from repro.kernels.binary_ip import ops as bops
 from repro.kernels.int8_ip import ops as iops
+from repro.retrieval.index import CompressedIndex
 
 
 def _bench(fn, reps=5):
@@ -59,6 +63,19 @@ def main(argv=None) -> list[dict]:
     rows.append({"kernel": "binary_ip(jnp)", "bytes_per_doc": d // 8,
                  "us_per_call": t * 1e6,
                  "gdocs_per_s": n_q * n_docs / t / 1e9})
+
+    # end-to-end fused search per scorer backend (encode → kernel → top-k,
+    # one jit graph; see repro.retrieval.scorers)
+    tails = {"float": [], "fp16": [FloatCast()],
+             "int8": [Int8Quantizer()], "onebit": [OneBitQuantizer(0.5)]}
+    for name, tail in tails.items():
+        idx = CompressedIndex.build(
+            docs, queries, CompressionPipeline([CenterNorm()] + tail))
+        t = _bench(lambda: idx.search(queries, 10))
+        rows.append({"kernel": f"search[{idx.scorer.name}]",
+                     "bytes_per_doc": idx.nbytes // n_docs,
+                     "us_per_call": t * 1e6,
+                     "gdocs_per_s": n_q * n_docs / t / 1e9})
 
     for r in rows:
         print(f"  {r['kernel']:18s} {r['bytes_per_doc']:5d} B/doc "

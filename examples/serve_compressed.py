@@ -1,23 +1,24 @@
-"""End-to-end serving driver: batched requests against a compressed,
-(optionally sharded) KB index — the paper's production deployment.
+"""End-to-end serving driver: a request stream against a compressed,
+(optionally sharded) KB index through the :mod:`repro.serve` engine.
 
     PYTHONPATH=src python examples/serve_compressed.py --requests 50
     PYTHONPATH=src python examples/serve_compressed.py --method pca_onebit
 
-Simulates a request stream (batches of queries), measures per-batch latency
-percentiles, and verifies quality online against an exact-search shadow
-index (the standard "shadow scoring" deployment-validation pattern).
+Simulates a request stream (blocks of queries submitted to the engine),
+which coalesces them into padded micro-batches, dispatches to the index,
+measures latency percentiles, and validates quality online against an
+exact-search shadow index (the standard "shadow scoring" pattern).
 """
 
 import argparse
 import sys
-import time
 
 import numpy as np
 
 from repro.core import build_method
 from repro.data import make_dpr_like_kb
-from repro.retrieval import CompressedIndex, DenseIndex
+from repro.retrieval import CompressedIndex
+from repro.serve import MicroBatcher, ServeEngine, ShadowScorer
 from repro.utils import human_bytes
 
 
@@ -29,7 +30,14 @@ def main(argv=None) -> None:
     ap.add_argument("--n-docs", type=int, default=50_000)
     ap.add_argument("--requests", type=int, default=20)
     ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--no-post", action="store_true",
+                    help="skip post-quantization CenterNorm: storage stays "
+                         "quantized and scoring runs the int8/1-bit kernels")
+    ap.add_argument("--drain-every", type=int, default=1,
+                    help="submit N requests between drains (N>1 shows the "
+                         "micro-batcher coalescing requests)")
     args = ap.parse_args(argv)
 
     dim = 245 if args.method == "pca_onebit" else args.dim
@@ -37,34 +45,36 @@ def main(argv=None) -> None:
                           n_docs=args.n_docs)
 
     print(f"building compressed index [{args.method}] ...")
-    pipe = build_method(args.method, dim)
+    pipe = build_method(args.method, dim, post=not args.no_post)
     idx = CompressedIndex.build(kb.docs, kb.queries[:512], pipe)
-    shadow = DenseIndex(idx.encode_queries(kb.docs))   # shadow: float stages
+    print(f"  scorer backend: {idx.scorer.name}")
+    shadow = ShadowScorer.for_compressed(idx, kb.docs, every=5)
     print(f"  index {human_bytes(idx.nbytes)} vs shadow "
-          f"{human_bytes(shadow.nbytes)} "
-          f"({shadow.nbytes / idx.nbytes:.0f}x)")
+          f"{human_bytes(shadow.index.nbytes)} "
+          f"({shadow.index.nbytes / idx.nbytes:.0f}x)")
 
-    lat, overlap = [], []
+    engine = ServeEngine(idx, k=args.k,
+                         batcher=MicroBatcher(max_batch=args.max_batch),
+                         shadow=shadow)
+
     queries = np.asarray(kb.queries)
+    served = 0
     for r in range(args.requests):
-        batch = queries[r * args.batch: (r + 1) * args.batch]
-        t0 = time.perf_counter()
-        _, ids = idx.search(batch, args.k)
-        lat.append(time.perf_counter() - t0)
-        if r % 5 == 0:      # shadow-score 20% of traffic
-            _, want = shadow.search(
-                idx.encode_queries(batch), args.k)
-            overlap.append(np.mean([
-                len(set(a.tolist()) & set(b.tolist())) / args.k
-                for a, b in zip(np.asarray(ids), np.asarray(want))]))
+        engine.submit(queries[r * args.batch: (r + 1) * args.batch])
+        if (r + 1) % args.drain_every == 0:
+            served += len(engine.drain())
+    served += len(engine.drain())
 
-    lat_ms = np.asarray(lat) * 1000
-    print(f"\nserved {args.requests} batches × {args.batch} queries")
-    print(f"  latency p50={np.percentile(lat_ms, 50):.1f}ms "
-          f"p95={np.percentile(lat_ms, 95):.1f}ms "
-          f"p99={np.percentile(lat_ms, 99):.1f}ms  (CPU host)")
+    stats = engine.stats()
+    print(f"\nserved {served} requests "
+          f"({stats['queries_served']} queries, "
+          f"{stats['batches_served']} micro-batches)")
+    print(f"  latency p50={stats['p50_ms']:.1f}ms "
+          f"p95={stats['p95_ms']:.1f}ms "
+          f"p99={stats['p99_ms']:.1f}ms  (CPU host)")
     print(f"  top-{args.k} overlap vs exact shadow: "
-          f"{np.mean(overlap):.3f}")
+          f"{stats['shadow_overlap']:.3f} "
+          f"({stats['shadow_batches']} batches sampled)")
 
 
 if __name__ == "__main__":

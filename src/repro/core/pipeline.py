@@ -81,6 +81,18 @@ class CompressionPipeline:
                 "types": [type(t).__name__ for t in self.transforms]}
 
     def load_state_dict(self, sd: dict) -> "CompressionPipeline":
+        types = sd.get("types")
+        if types is not None:
+            have = [type(t).__name__ for t in self.transforms]
+            if have != list(types):
+                raise ValueError(
+                    f"pipeline stage mismatch: state dict has {list(types)}, "
+                    f"object has {have}")
+        if len(sd["stages"]) != len(self.transforms):
+            raise ValueError(
+                f"pipeline length mismatch: state dict has "
+                f"{len(sd['stages'])} stages, object has "
+                f"{len(self.transforms)}")
         for t, stage_sd in zip(self.transforms, sd["stages"]):
             t.load_state(stage_sd)
         return self

@@ -29,6 +29,7 @@ from repro.models import gnn as G
 from repro.models import layers as L
 from repro.models import recsys as R
 from repro.models import transformer as T
+from repro.parallel.compat import shard_map as compat_shard_map
 from repro.parallel.sharding import (AxisRules, ShardingContext,
                                      spec_for_shape)
 from repro.train import optimizer as opt_lib
@@ -587,10 +588,10 @@ def _kb_search_bundle(arch, shape, rules, mesh, reduced) -> StepBundle:
 
         doc_spec = P(doc_axes_t if len(doc_axes_t) > 1 else doc_axes_t[0],
                      None)
-        fn = jax.shard_map(
+        fn = compat_shard_map(
             local_search, mesh=mesh,
             in_specs=(doc_spec, P(), P(), P(), P(), P(), P()),
-            out_specs=(P(), P()), check_vma=False)
+            out_specs=(P(), P()))
         return fn(index["storage"], index["mu1"], index["w"], index["mu2"],
                   index["scale"], index["zero"], batch["queries"])
 

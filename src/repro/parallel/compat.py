@@ -1,0 +1,30 @@
+"""jax API compatibility shims.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+(and its replication-check kwarg was renamed ``check_rep`` → ``check_vma``)
+across the jax versions this repo supports.  Everything in the repo routes
+through :func:`shard_map` below so the call sites stay version-agnostic.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """Version-portable ``shard_map`` with replication checks disabled.
+
+    (The repo's collectives deliberately produce replicated outputs from
+    sharded inputs — e.g. top-k merges after an all-gather — which the
+    strict checker rejects; both APIs expose a flag to turn it off.)
+    """
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False)

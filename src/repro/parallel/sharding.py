@@ -120,7 +120,10 @@ def spec_for_shape(shape: Sequence[int], logical: Sequence[Optional[str]],
                 parts.append(None)
                 continue
         used.update(ax_t)
-        parts.append(ax_t[0] if len(ax_t) == 1 else ax_t)
+        # preserve the rule's form: a tuple-valued rule stays a tuple even
+        # when the divisibility guard shrinks it to one axis (PartitionSpec
+        # equality distinguishes P("a") from P(("a",)))
+        parts.append(ax_t if isinstance(ax, tuple) else ax_t[0])
     while parts and parts[-1] is None:
         parts.pop()
     return P(*parts)

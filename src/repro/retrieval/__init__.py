@@ -4,10 +4,16 @@ from repro.retrieval.index import CompressedIndex, DenseIndex
 from repro.retrieval.ivf import IVFFlatIndex
 from repro.retrieval.rprecision import (make_dim_drop_scorer, r_precision,
                                         retrieved_relevant_counts)
+from repro.retrieval.scorers import (Scorer, get_scorer, register_scorer,
+                                     scorer_for_pipeline, scorer_names)
+from repro.retrieval.sharded import ShardedCompressedIndex
 from repro.retrieval.topk import topk_search
 
 __all__ = [
     "CompressedIndex", "DenseIndex", "IVFFlatIndex",
+    "ShardedCompressedIndex",
+    "Scorer", "get_scorer", "register_scorer", "scorer_for_pipeline",
+    "scorer_names",
     "make_dim_drop_scorer", "r_precision", "retrieved_relevant_counts",
     "topk_search",
 ]

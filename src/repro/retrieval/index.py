@@ -2,14 +2,19 @@
 
 :class:`DenseIndex` is the uncompressed baseline; :class:`CompressedIndex`
 applies a fitted :class:`~repro.core.pipeline.CompressionPipeline` and stores
-the *encoded* representation (fp16 / int8 / bit-packed words) — scoring then
-runs through the matching kernel path (Pallas on TPU; jnp oracle on CPU).
+the *encoded* representation (fp16 / int8 / bit-packed words).  All scoring
+dispatches through the pluggable :mod:`~repro.retrieval.scorers` backends —
+the same objects that power the sharded path
+(:mod:`repro.retrieval.sharded`) and the serving engine (:mod:`repro.serve`).
 
-The multi-pod sharded variant lives in :mod:`repro.retrieval.sharded`.
+The quantized search path is jit-compiled end to end: float query stages,
+query-side encoding, kernel scoring, and top-k all live in one traced graph,
+so repeated calls pay no per-call Python dispatch or storage decode.
 """
 
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
@@ -17,7 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.pipeline import CompressionPipeline
-from repro.core.quantization import Int8Quantizer, OneBitQuantizer, FloatCast
+from repro.retrieval.scorers import (Scorer, apply_float_stages,
+                                     scorer_for_pipeline)
 from repro.retrieval.topk import topk_search
 
 
@@ -46,7 +52,7 @@ class DenseIndex:
 
 
 class CompressedIndex:
-    """Index stored in compressed form; queries compressed at search time.
+    """Thin orchestrator: float pipeline stages + a scorer backend.
 
     ``backend`` ∈ {"auto", "jnp", "pallas"}: which scoring path decodes the
     quantized storage.  "auto" uses Pallas kernels on TPU and the jnp oracle
@@ -58,42 +64,34 @@ class CompressedIndex:
         self.pipeline = pipeline
         self.sim = sim
         self.backend = backend
+        self.float_stages, self.scorer = scorer_for_pipeline(
+            pipeline, sim=sim, backend=backend)
         self.storage: Optional[jax.Array] = None
-        self._quantizer = None
         self._n_docs = 0
         self._dim = 0
+        self._decoded_cache: Optional[jax.Array] = None
+        self._search_fn = None
 
     # -- construction -----------------------------------------------------
     @classmethod
     def build(cls, docs: jax.Array, queries_sample: Optional[jax.Array],
               pipeline: CompressionPipeline, sim: str = "ip",
               backend: str = "auto", rng=None) -> "CompressedIndex":
-        idx = cls(pipeline, sim=sim, backend=backend)
         pipeline.fit(docs, queries_sample, rng=rng)
+        idx = cls(pipeline, sim=sim, backend=backend)
         idx.add(docs)
         return idx
 
-    def _split_pipeline(self):
-        """Split transforms into (float stages, trailing quantizer|None)."""
-        stages = self.pipeline.transforms
-        if stages and isinstance(stages[-1],
-                                 (Int8Quantizer, OneBitQuantizer, FloatCast)):
-            return stages[:-1], stages[-1]
-        return stages, None
-
     def add(self, docs: jax.Array) -> "CompressedIndex":
-        float_stages, quantizer = self._split_pipeline()
-        x = jnp.asarray(docs)
-        for t in float_stages:
-            x = t(x, "docs")
+        x = apply_float_stages(self.float_stages, docs, "docs")
         self._dim = int(x.shape[-1])
-        self._quantizer = quantizer
-        enc = quantizer.encode(x, "docs") if quantizer is not None else x
+        enc = self.scorer.encode_docs(x)
         if self.storage is None:
             self.storage = enc
         else:
             self.storage = jnp.concatenate([self.storage, enc], axis=0)
         self._n_docs = int(self.storage.shape[0])
+        self._decoded_cache = None     # storage changed: drop the float view
         return self
 
     def __len__(self) -> int:
@@ -105,44 +103,52 @@ class CompressedIndex:
         return int(self.storage.size * self.storage.dtype.itemsize)
 
     # -- search ------------------------------------------------------------
-    def _use_pallas(self) -> bool:
-        if self.backend == "pallas":
-            return True
-        if self.backend == "jnp":
-            return False
-        return jax.default_backend() == "tpu"
-
     def encode_queries(self, queries: jax.Array) -> jax.Array:
-        float_stages, _ = self._split_pipeline()
-        q = jnp.asarray(queries)
-        for t in float_stages:
-            q = t(q, "queries")
-        return q
+        """Queries through the float stages (no query-side quantization)."""
+        return apply_float_stages(self.float_stages, queries, "queries")
+
+    def decoded_docs(self) -> jax.Array:
+        """Float view of the storage, decoded once and cached.
+
+        For plain-float storage this *is* the storage; for fp16 the upcast
+        is computed on first use and reused by every subsequent ``search``.
+        Deliberate latency-for-memory trade: the cached f32 view lives
+        alongside the fp16 storage (6 B/dim resident vs 2 B/dim stored) —
+        ``nbytes`` reports the storage alone.
+        """
+        if type(self.scorer) is Scorer:
+            return self.storage
+        if self._decoded_cache is None:
+            self._decoded_cache = self.scorer.decode(self.storage)
+        return self._decoded_cache
+
+    def _fused_search_fn(self):
+        """jit'd end-to-end search: stages → encode → kernel scores → top-k."""
+        if self._search_fn is None:
+            stages = tuple(self.float_stages)
+            scorer = self.scorer
+
+            @functools.partial(jax.jit, static_argnames=("k",))
+            def _search(queries, storage, params, *, k):
+                q = queries
+                for t in stages:
+                    q = t(q, "queries")
+                q = scorer.encode_queries(q)
+                scores = scorer.scores(q, storage, params=params)
+                return jax.lax.top_k(scores, k)
+
+            self._search_fn = _search
+        return self._search_fn
 
     def search(self, queries: jax.Array, k: int,
                doc_chunk: int = 131072) -> tuple[jax.Array, jax.Array]:
+        if self.scorer.name not in ("float", "fp16"):
+            # quantized storage: one fused graph, no host-side dispatch
+            fn = self._fused_search_fn()
+            return fn(jnp.asarray(queries), self.storage,
+                      self.scorer.params(), k=min(k, self._n_docs))
+        # float / fp16 storage: stream the (cached) float view in chunks so
+        # arbitrarily large indexes never materialise a full score matrix
         q = self.encode_queries(queries)
-        quantizer = self._quantizer
-        if quantizer is None:
-            return topk_search(q, self.storage, k, sim=self.sim,
-                               doc_chunk=doc_chunk)
-        if isinstance(quantizer, OneBitQuantizer):
-            from repro.kernels.binary_ip import ops as binary_ops
-            q_enc = quantizer(q, "queries")  # ±offset float; sim reduces to IP
-            scores = binary_ops.binary_ip_scores(
-                q_enc, self.storage, self._dim,
-                offset=quantizer.offset,
-                use_pallas=self._use_pallas())
-            kk = min(k, self._n_docs)
-            return jax.lax.top_k(scores, kk)
-        if isinstance(quantizer, Int8Quantizer):
-            from repro.kernels.int8_ip import ops as int8_ops
-            scores = int8_ops.int8_scores(
-                q, self.storage,
-                scale=quantizer.state["scale"], zero=quantizer.state["zero"],
-                sim=self.sim, use_pallas=self._use_pallas())
-            kk = min(k, self._n_docs)
-            return jax.lax.top_k(scores, kk)
-        # FloatCast: decode is a dtype view; score directly
-        docs = quantizer.decode(self.storage)
-        return topk_search(q, docs, k, sim=self.sim, doc_chunk=doc_chunk)
+        return topk_search(q, self.decoded_docs(), k, sim=self.sim,
+                           doc_chunk=doc_chunk)

@@ -4,12 +4,12 @@ Layout
 ------
 * Document index: row-sharded over the ``doc_axis`` ("model" within a pod; the
   "pod" axis adds capacity — 2 pods hold 2× the KB).
-* Queries: batch-sharded over ``query_axis`` ("data"), replicated over
-  ``doc_axis``.
+* Queries: batch-sharded over ``query_axis`` ("data") when given, replicated
+  otherwise.
 
 Schedule (per query shard)::
 
-    local scores (Q_local, D_local)          # GEMM, no comms
+    local scores (Q_local, D_local)          # GEMM/kernel, no comms
     local top-k                              # on-device
     all_gather over doc_axis → (shards·k)    # tiny: k·(score+id) per shard
     global top-k merge                       # on-device
@@ -18,39 +18,106 @@ Collective volume per query is ``O(n_doc_shards · k · 8 bytes)`` — independe
 of index size, which is what makes the design scale to 1000+ nodes: adding
 devices grows the KB linearly at constant per-query communication.
 
-Quantized variants score via the same kernels as the single-host
-:class:`~repro.retrieval.index.CompressedIndex` (the shard-local GEMM is the
-Pallas hot path; the merge is unchanged).
+Quantized variants score via the *same* scorer backends as the single-host
+:class:`~repro.retrieval.index.CompressedIndex`
+(:mod:`repro.retrieval.scorers`): the shard-local GEMM is the Pallas hot
+path, the merge is unchanged.  :class:`ShardedCompressedIndex` wraps the
+whole thing behind the single-host ``build``/``add``/``search`` API.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Optional
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.pipeline import CompressionPipeline
+from repro.parallel.compat import shard_map
+from repro.retrieval.scorers import (Scorer, apply_float_stages,
+                                     scorer_for_pipeline)
 from repro.retrieval.topk import similarity
+
+AxisName = Union[str, Sequence[str]]
+
+
+def _as_tuple(axis: Optional[AxisName]) -> tuple[str, ...]:
+    if axis is None:
+        return ()
+    return (axis,) if isinstance(axis, str) else tuple(axis)
+
+
+def _axis_spec(axes: tuple[str, ...]):
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def make_sharded_scorer_search(mesh: Mesh, scorer: Scorer, *, k: int = 10,
+                               n_docs: Optional[int] = None,
+                               doc_axis: AxisName = "model",
+                               query_axis: Optional[AxisName] = None):
+    """shard_map'd quantized search: (queries, storage, params) → (vals, ids).
+
+    ``storage`` is the scorer's encoded representation, row-sharded over
+    ``doc_axis`` (rows may be padded to divide the shard count — pass the
+    true ``n_docs`` and padded rows are masked out of the top-k).  ``params``
+    is ``scorer.params()``; it is threaded through explicitly (replicated)
+    so the mapped function closes over no device arrays.
+    """
+    doc_axes = _as_tuple(doc_axis)
+    q_axes = _as_tuple(query_axis)
+    if not doc_axes:
+        raise ValueError("doc_axis must name at least one mesh axis")
+
+    def local_search(q, storage_shard, params):
+        shard_id = jnp.zeros((), jnp.int32)
+        for a in doc_axes:
+            shard_id = shard_id * mesh.shape[a] + jax.lax.axis_index(a)
+        d_local = storage_shard.shape[0]
+        scores = scorer.scores(q, storage_shard, params=params)
+        gidx_all = shard_id * d_local + jnp.arange(d_local, dtype=jnp.int32)
+        if n_docs is not None:
+            # rows padded to divide the shard count never win the top-k
+            scores = jnp.where(gidx_all[None, :] < n_docs, scores, -jnp.inf)
+        kk = min(k, d_local)
+        vals, idx = jax.lax.top_k(scores, kk)
+        gidx = jnp.take(gidx_all, idx)
+        for a in doc_axes:
+            vals = jax.lax.all_gather(vals, a, axis=1, tiled=True)
+            gidx = jax.lax.all_gather(gidx, a, axis=1, tiled=True)
+        k_out = min(k, vals.shape[1] if n_docs is None else n_docs)
+        fvals, pos = jax.lax.top_k(vals, k_out)
+        fidx = jnp.take_along_axis(gidx, pos, axis=1)
+        return fvals, fidx
+
+    q_spec = P(_axis_spec(q_axes), None)
+    in_specs = (q_spec, P(_axis_spec(doc_axes), None), P())
+    out_specs = (q_spec,) * 2
+    fn = shard_map(local_search, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs)
+    return jax.jit(fn)
 
 
 def make_distributed_search(mesh: Mesh, *, sim: str = "ip", k: int = 10,
-                            query_axis="data", doc_axis="model"):
-    """Build a shard_map'd search fn: (queries, docs) → (scores, global ids).
+                            query_axis: AxisName = "data",
+                            doc_axis: AxisName = "model"):
+    """Float-GEMM sharded search: (queries, docs) → (scores, global ids).
 
+    Kept for the dense/uncompressed path; the quantized backends go through
+    :func:`make_sharded_scorer_search` (identical schedule, scorer kernels).
     ``doc_axis`` may be a tuple (e.g. ("pod", "model")) — the KB is then
     sharded over the combined axes and the gather happens over both.
     """
-    doc_axes = (doc_axis,) if isinstance(doc_axis, str) else tuple(doc_axis)
-    q_axes = (query_axis,) if isinstance(query_axis, str) else tuple(query_axis)
+    doc_axes = _as_tuple(doc_axis)
+    q_axes = _as_tuple(query_axis)
 
     def local_search(q, d_shard):
         # shard ids along the doc axes → global row offset of this shard
-        shard_sizes = [jax.lax.axis_size(a) for a in doc_axes]
         shard_id = jnp.zeros((), jnp.int32)
-        for a, size in zip(doc_axes, shard_sizes):
-            shard_id = shard_id * size + jax.lax.axis_index(a)
+        for a in doc_axes:
+            shard_id = shard_id * mesh.shape[a] + jax.lax.axis_index(a)
         d_local = d_shard.shape[0]
         scores = similarity(q, d_shard, sim)
         kk = min(k, d_local)
@@ -66,17 +133,113 @@ def make_distributed_search(mesh: Mesh, *, sim: str = "ip", k: int = 10,
         fidx = jnp.take_along_axis(all_idx, pos, axis=1)
         return fvals, fidx
 
-    in_specs = (P(q_axes if len(q_axes) > 1 else q_axes[0], None),
-                P(doc_axes if len(doc_axes) > 1 else doc_axes[0], None))
-    out_specs = (P(q_axes if len(q_axes) > 1 else q_axes[0], None),) * 2
+    in_specs = (P(_axis_spec(q_axes), None), P(_axis_spec(doc_axes), None))
+    out_specs = (P(_axis_spec(q_axes), None),) * 2
 
-    fn = jax.shard_map(local_search, mesh=mesh,
-                       in_specs=in_specs, out_specs=out_specs,
-                       check_vma=False)
+    fn = shard_map(local_search, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs)
     return jax.jit(fn)
 
 
-def shard_index(docs: jax.Array, mesh: Mesh, doc_axis="model") -> jax.Array:
+def shard_index(docs: jax.Array, mesh: Mesh, doc_axis: AxisName = "model"
+                ) -> jax.Array:
     """Place a host array as a row-sharded device array on the mesh."""
-    spec = P(doc_axis, None)
+    spec = P(_axis_spec(_as_tuple(doc_axis)), None)
     return jax.device_put(docs, NamedSharding(mesh, spec))
+
+
+class ShardedCompressedIndex:
+    """Compressed index row-sharded over a mesh, single-host API.
+
+    Mirrors :class:`~repro.retrieval.index.CompressedIndex`
+    (``build`` / ``add`` / ``search`` / ``nbytes``) but keeps the encoded
+    storage as a device array sharded over ``doc_axis`` and scores each
+    shard locally through the same scorer backend, merging per-shard top-k
+    candidates with a constant-volume all-gather.  Rankings are identical
+    to the single-host index (see tests/test_sharded_index.py).
+    """
+
+    def __init__(self, pipeline: CompressionPipeline, mesh: Mesh,
+                 sim: str = "ip", backend: str = "auto",
+                 doc_axis: AxisName = "model",
+                 query_axis: Optional[AxisName] = None):
+        self.pipeline = pipeline
+        self.mesh = mesh
+        self.sim = sim
+        self.backend = backend
+        self.doc_axes = _as_tuple(doc_axis)
+        self.query_axis = query_axis
+        self.float_stages, self.scorer = scorer_for_pipeline(
+            pipeline, sim=sim, backend=backend)
+        self._storage_host: Optional[jax.Array] = None  # unpadded, unsharded
+        self._placed: Optional[jax.Array] = None        # padded, mesh-sharded
+        self._search_fns: dict[int, object] = {}
+        self._n_docs = 0
+        self._dim = 0
+
+    # -- construction -----------------------------------------------------
+    @classmethod
+    def build(cls, docs: jax.Array, queries_sample: Optional[jax.Array],
+              pipeline: CompressionPipeline, mesh: Mesh, sim: str = "ip",
+              backend: str = "auto", doc_axis: AxisName = "model",
+              query_axis: Optional[AxisName] = None,
+              rng=None) -> "ShardedCompressedIndex":
+        pipeline.fit(docs, queries_sample, rng=rng)
+        idx = cls(pipeline, mesh, sim=sim, backend=backend,
+                  doc_axis=doc_axis, query_axis=query_axis)
+        idx.add(docs)
+        return idx
+
+    @property
+    def n_doc_shards(self) -> int:
+        n = 1
+        for a in self.doc_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def add(self, docs: jax.Array) -> "ShardedCompressedIndex":
+        x = apply_float_stages(self.float_stages, docs, "docs")
+        self._dim = int(x.shape[-1])
+        enc = self.scorer.encode_docs(x)
+        if self._storage_host is None:
+            self._storage_host = enc
+        else:
+            self._storage_host = jnp.concatenate([self._storage_host, enc],
+                                                 axis=0)
+        self._n_docs = int(self._storage_host.shape[0])
+        self._placed = None            # re-place lazily on next search
+        self._search_fns.clear()       # n_docs is baked into the mask
+        return self
+
+    def __len__(self) -> int:
+        return self._n_docs
+
+    @property
+    def nbytes(self) -> int:
+        assert self._storage_host is not None
+        return int(self._storage_host.size * self._storage_host.dtype.itemsize)
+
+    # -- search ------------------------------------------------------------
+    def _placed_storage(self) -> jax.Array:
+        if self._placed is None:
+            enc = self._storage_host
+            pad = (-enc.shape[0]) % self.n_doc_shards
+            if pad:
+                enc = jnp.concatenate(
+                    [enc, jnp.zeros((pad,) + enc.shape[1:], enc.dtype)],
+                    axis=0)
+            self._placed = shard_index(enc, self.mesh, self.doc_axes)
+        return self._placed
+
+    def encode_queries(self, queries: jax.Array) -> jax.Array:
+        return apply_float_stages(self.float_stages, queries, "queries")
+
+    def search(self, queries: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+        k = min(k, self._n_docs)
+        if k not in self._search_fns:
+            self._search_fns[k] = make_sharded_scorer_search(
+                self.mesh, self.scorer, k=k, n_docs=self._n_docs,
+                doc_axis=self.doc_axes, query_axis=self.query_axis)
+        q = self.scorer.encode_queries(self.encode_queries(queries))
+        return self._search_fns[k](q, self._placed_storage(),
+                                   self.scorer.params())

@@ -1,0 +1,24 @@
+"""Online serving layer: micro-batching request engine over any index.
+
+Promoted out of ``examples/serve_compressed.py`` into a reusable subsystem:
+
+* :class:`~repro.serve.batcher.MicroBatcher` — coalesces queued requests
+  into padded micro-batches (bucketed row counts bound jit recompiles).
+* :class:`~repro.serve.engine.ServeEngine` — ``submit``/``drain`` request
+  queue dispatching micro-batches to any index (dense / compressed /
+  sharded) and tracking latency percentiles.
+* :class:`~repro.serve.shadow.ShadowScorer` — online quality validation
+  against an exact-search shadow index on a sampled fraction of traffic.
+* :class:`~repro.serve.metrics.LatencyStats` — streaming latency
+  percentile tracking.
+"""
+
+from repro.serve.batcher import MicroBatch, MicroBatcher
+from repro.serve.engine import ServeEngine, ServeResult
+from repro.serve.metrics import LatencyStats
+from repro.serve.shadow import ShadowScorer
+
+__all__ = [
+    "MicroBatch", "MicroBatcher", "ServeEngine", "ServeResult",
+    "LatencyStats", "ShadowScorer",
+]

@@ -1,0 +1,127 @@
+"""The serving engine: request queue → micro-batches → index → results.
+
+:class:`ServeEngine` fronts any index exposing ``search(queries, k)`` —
+:class:`~repro.retrieval.index.DenseIndex`,
+:class:`~repro.retrieval.index.CompressedIndex`, or
+:class:`~repro.retrieval.sharded.ShardedCompressedIndex` — so the same
+engine serves a laptop demo and a mesh-sharded production deployment.
+
+Model: callers ``submit()`` query blocks (any row count) and receive a
+request id; ``drain()`` coalesces everything pending through the
+micro-batcher, dispatches each padded batch in one device call, and
+returns completed :class:`ServeResult`\\ s.  The synchronous queue keeps
+the engine deterministic and testable; an async front-end would call
+``drain`` from its event loop at the cadence the hardware sustains.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.serve.batcher import MicroBatcher
+from repro.serve.metrics import LatencyStats
+from repro.serve.shadow import ShadowScorer
+
+
+@dataclasses.dataclass
+class ServeResult:
+    request_id: int
+    scores: np.ndarray           # (n, k)
+    ids: np.ndarray              # (n, k)
+    latency_s: float             # queue-entry → results materialised
+
+
+class ServeEngine:
+    """Micro-batching search engine over a pluggable index."""
+
+    def __init__(self, index, k: int = 10, batcher: Optional[MicroBatcher] = None,
+                 shadow: Optional[ShadowScorer] = None):
+        self.index = index
+        self.k = k
+        self.batcher = batcher if batcher is not None else MicroBatcher()
+        self.shadow = shadow
+        self.latency = LatencyStats()          # per micro-batch device time
+        self._pending: list[tuple[int, np.ndarray]] = []
+        self._submit_time: dict[int, float] = {}
+        self._next_id = 0
+        self.queries_served = 0
+        self.batches_served = 0
+        self.requests_served = 0
+
+    # -- request side ------------------------------------------------------
+    def submit(self, queries) -> int:
+        """Enqueue a block of queries; returns the request id."""
+        q = np.asarray(queries, dtype=np.float32)
+        if q.ndim == 1:
+            q = q[None, :]
+        if q.ndim != 2:
+            raise ValueError(f"queries must be (n, d) or (d,), got {q.shape}")
+        request_id = self._next_id
+        self._next_id += 1
+        self._pending.append((request_id, q))
+        self._submit_time[request_id] = time.perf_counter()
+        return request_id
+
+    @property
+    def pending(self) -> int:
+        return sum(q.shape[0] for _, q in self._pending)
+
+    # -- dispatch side -----------------------------------------------------
+    def drain(self) -> dict[int, ServeResult]:
+        """Serve everything pending; returns {request_id: ServeResult}."""
+        if not self._pending:
+            return {}
+        pending, self._pending = self._pending, []
+        out_scores: dict[int, np.ndarray] = {}
+        out_ids: dict[int, np.ndarray] = {}
+        for rid, q in pending:
+            n = q.shape[0]
+            out_scores[rid] = np.empty((n, 0), np.float32)
+            out_ids[rid] = np.empty((n, 0), np.int32)
+
+        for batch in self.batcher.form(pending):
+            t0 = time.perf_counter()
+            vals, ids = self.index.search(batch.queries, self.k)
+            vals, ids = np.asarray(vals), np.asarray(ids)   # blocks
+            self.latency.record(time.perf_counter() - t0)
+            self.batches_served += 1
+            self.queries_served += batch.n_valid
+            if self.shadow is not None:
+                self.shadow.observe(batch.queries[:batch.n_valid],
+                                    ids[:batch.n_valid], self.k)
+            for s in batch.slices:
+                rid, rows = s.request_id, s.stop - s.start
+                if out_scores[rid].shape[1] == 0:
+                    k_out = vals.shape[1]
+                    out_scores[rid] = np.empty(
+                        (out_scores[rid].shape[0], k_out), np.float32)
+                    out_ids[rid] = np.empty(
+                        (out_ids[rid].shape[0], k_out), np.int32)
+                out_scores[rid][s.req_start: s.req_start + rows] = \
+                    vals[s.start: s.stop]
+                out_ids[rid][s.req_start: s.req_start + rows] = \
+                    ids[s.start: s.stop]
+
+        done = time.perf_counter()
+        results = {}
+        for rid, _ in pending:
+            results[rid] = ServeResult(
+                request_id=rid, scores=out_scores[rid], ids=out_ids[rid],
+                latency_s=done - self._submit_time.pop(rid))
+        self.requests_served += len(results)
+        return results
+
+    # -- observability -----------------------------------------------------
+    def stats(self) -> dict:
+        s = {"requests_served": self.requests_served,
+             "queries_served": self.queries_served,
+             "batches_served": self.batches_served,
+             **self.latency.summary()}
+        if self.shadow is not None:
+            s["shadow_overlap"] = self.shadow.mean_overlap
+            s["shadow_batches"] = len(self.shadow.overlaps)
+        return s

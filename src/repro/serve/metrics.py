@@ -1,0 +1,47 @@
+"""Streaming serving metrics (host-side, numpy only)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class LatencyStats:
+    """Collects latency samples; reports percentiles in milliseconds.
+
+    Keeps a sliding window of the most recent ``window`` samples so a
+    long-lived serving engine neither grows without bound nor pays
+    O(uptime) per percentile query; ``count`` still reports the total
+    recorded.
+    """
+
+    def __init__(self, window: int = 8192) -> None:
+        if window < 1:
+            raise ValueError("window must be ≥ 1")
+        self.window = window
+        self.total_recorded = 0
+        self._samples: list[float] = []
+
+    def record(self, seconds: float) -> None:
+        self._samples.append(float(seconds))
+        self.total_recorded += 1
+        if len(self._samples) > self.window:
+            del self._samples[: len(self._samples) - self.window]
+
+    def __len__(self) -> int:
+        return self.total_recorded
+
+    def percentile(self, p: float) -> float:
+        """p-th percentile latency in milliseconds (nan when empty)."""
+        if not self._samples:
+            return float("nan")
+        return float(np.percentile(np.asarray(self._samples) * 1000.0, p))
+
+    def summary(self) -> dict[str, float]:
+        return {
+            "count": self.total_recorded,
+            "mean_ms": (float(np.mean(self._samples) * 1000.0)
+                        if self._samples else float("nan")),
+            "p50_ms": self.percentile(50),
+            "p95_ms": self.percentile(95),
+            "p99_ms": self.percentile(99),
+        }

@@ -1,0 +1,71 @@
+"""Online shadow scoring: validate compressed-serving quality in production.
+
+A :class:`ShadowScorer` holds an exact-search index over the float view of
+the corpus and re-scores a sampled fraction of served batches, tracking the
+running top-k overlap between the production (quantized) rankings and the
+exact ones — the standard deployment-validation pattern: quality regressions
+(a bad codebook refresh, a corrupted shard) surface as an overlap drop
+within minutes, without doubling serving cost.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.retrieval.index import CompressedIndex, DenseIndex
+
+
+class ShadowScorer:
+    """Samples 1/``every`` batches; re-scores them on an exact index.
+
+    ``encode`` maps raw request queries into the shadow index's space
+    (identity for a dense shadow over raw embeddings; the float pipeline
+    stages for a compressed production index).
+    """
+
+    def __init__(self, index: DenseIndex, every: int = 5,
+                 encode: Optional[Callable] = None):
+        if every < 1:
+            raise ValueError("every must be ≥ 1")
+        self.index = index
+        self.every = every
+        self.encode = encode
+        self._batches_seen = 0
+        self.overlaps: list[float] = []
+
+    @classmethod
+    def for_compressed(cls, index: CompressedIndex, docs, every: int = 5
+                       ) -> "ShadowScorer":
+        """Shadow for a compressed index: exact search in its float space.
+
+        The asymmetric oracle — documents through the pipeline's float
+        stages (doc statistics), queries through the same stages (query
+        statistics), scored at full precision.
+        """
+        from repro.retrieval.scorers import apply_float_stages
+        x = apply_float_stages(index.float_stages, docs, "docs")
+        return cls(DenseIndex(x, sim=index.sim), every=every,
+                   encode=index.encode_queries)
+
+    def observe(self, queries: np.ndarray, ids: np.ndarray, k: int
+                ) -> Optional[float]:
+        """Maybe shadow-score one served batch; returns overlap if sampled."""
+        self._batches_seen += 1
+        if (self._batches_seen - 1) % self.every != 0:
+            return None
+        q = self.encode(queries) if self.encode is not None else queries
+        _, want = self.index.search(q, k)
+        want = np.asarray(want)
+        got = np.asarray(ids)
+        k_eff = min(k, got.shape[1], want.shape[1])  # search clamps k to n_docs
+        overlap = float(np.mean([
+            len(set(g.tolist()) & set(w.tolist())) / k_eff
+            for g, w in zip(got, want)]))
+        self.overlaps.append(overlap)
+        return overlap
+
+    @property
+    def mean_overlap(self) -> float:
+        return float(np.mean(self.overlaps)) if self.overlaps else float("nan")

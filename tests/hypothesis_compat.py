@@ -1,0 +1,43 @@
+"""Optional-hypothesis shim: property tests skip cleanly when it is absent.
+
+``from hypothesis import ...`` at module scope makes *collection* fail on
+machines without the package, taking every non-property test in the module
+down with it.  Import ``given / settings / st`` from here instead: with
+hypothesis installed they are the real thing; without it, ``@given`` turns
+the test into an individual skip and the rest of the module still runs.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover - env dependent
+    HAS_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # plain zero-arg wrapper: pytest must not see the original
+            # signature, or it would hunt for fixtures named like the
+            # hypothesis-drawn parameters
+            def skipped():
+                pytest.skip("hypothesis not installed")
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        """st.<anything>(...) placeholder; only consumed by the stub given."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+__all__ = ["HAS_HYPOTHESIS", "given", "settings", "st"]

@@ -90,10 +90,10 @@ def test_compressed_grad_exchange_error_feedback():
                     mean, res = exchange(g, res)
                     acc = acc + mean["w"]
                 return acc[None]
-            fn = jax.shard_map(one_host, mesh=mesh,
-                               in_specs=P(None, "data", None),
-                               out_specs=P("data", None),
-                               check_vma=False)
+            from repro.parallel.compat import shard_map
+            fn = shard_map(one_host, mesh=mesh,
+                           in_specs=P(None, "data", None),
+                           out_specs=P("data", None))
             return np.asarray(fn(grads_steps))[0]
 
         exact = run("none")
@@ -124,6 +124,8 @@ def test_small_mesh_dryrun_lm():
         with mesh:
             compiled = bundle.lower(mesh).compile()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):   # older jax: one dict per device
+            cost = cost[0]
         assert cost.get("flops", 0) > 0
         hlo = compiled.as_text()
         assert any(c in hlo for c in ("all-reduce", "all-gather")), \

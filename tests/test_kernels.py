@@ -8,7 +8,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.core import CenterNorm, CompressionPipeline, Int8Quantizer, PCA
 from repro.core.quantization import pack_bits

@@ -3,7 +3,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="purely property-based module; needs hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import CenterNorm, OneBitQuantizer, PCA
 from repro.core.quantization import pack_bits, unpack_bits

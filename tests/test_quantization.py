@@ -1,7 +1,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.core.quantization import (FloatCast, Int8Quantizer,
                                      OneBitQuantizer, compression_ratio,

@@ -1,0 +1,187 @@
+"""Scorer backend layer: registry, kernel-path equivalence, index wiring."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CenterNorm, CompressionPipeline, FloatCast,
+                        Int8Quantizer, OneBitQuantizer, PCA)
+from repro.data import make_dpr_like_kb
+from repro.retrieval import CompressedIndex, scorer_names
+from repro.retrieval.scorers import (FloatCastScorer, Int8Scorer,
+                                     OneBitScorer, Scorer, get_scorer,
+                                     scorer_for_pipeline, split_pipeline)
+from repro.retrieval.topk import similarity, topk_search
+
+
+@pytest.fixture(scope="module")
+def kb():
+    return make_dpr_like_kb(n_queries=64, n_docs=2000, d=64, r_eff=32)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_names():
+    assert set(scorer_names()) >= {"float", "fp16", "int8", "onebit"}
+
+
+def test_get_scorer_unknown_raises():
+    with pytest.raises(KeyError):
+        get_scorer("nope")
+
+
+@pytest.mark.parametrize("tail,cls", [
+    ([], Scorer),
+    ([FloatCast()], FloatCastScorer),
+    ([Int8Quantizer()], Int8Scorer),
+    ([OneBitQuantizer(0.5)], OneBitScorer),
+])
+def test_scorer_for_pipeline_dispatch(tail, cls):
+    pipe = CompressionPipeline([CenterNorm(), PCA(16)] + tail)
+    float_stages, scorer = scorer_for_pipeline(pipe)
+    assert type(scorer) is cls
+    assert len(float_stages) == 2
+
+
+def test_trailing_float_stage_means_no_quantizer():
+    # post-processing AFTER the quantizer → storage is the float output of
+    # the full chain (the paper's evaluation representation)
+    pipe = CompressionPipeline([CenterNorm(), Int8Quantizer(), CenterNorm()])
+    float_stages, quantizer = split_pipeline(pipe)
+    assert quantizer is None
+    assert len(float_stages) == 3
+
+
+# ---------------------------------------------------------------------------
+# per-scorer score equivalence (jnp oracle path)
+# ---------------------------------------------------------------------------
+
+
+def _fit_stages(kb, stages):
+    docs, queries = kb.docs, kb.queries
+    for t in stages:
+        t.fit(docs, queries)
+        docs, queries = t(docs, "docs"), t(queries, "queries")
+    return docs, queries
+
+
+def test_int8_scorer_matches_dequantized_gemm(kb):
+    quant = Int8Quantizer().fit(kb.docs)
+    scorer = Int8Scorer(quant, backend="jnp")
+    storage = scorer.encode_docs(kb.docs)
+    got = scorer.scores(kb.queries[:8], storage)
+    want = similarity(kb.queries[:8], quant.decode(storage), "ip")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_onebit_scorer_matches_symmetric_oracle(kb):
+    quant = OneBitQuantizer(0.5).fit(kb.docs)
+    scorer = OneBitScorer(quant, backend="jnp")
+    storage = scorer.encode_docs(kb.docs)
+    q_enc = scorer.encode_queries(kb.queries[:8])
+    got = scorer.scores(q_enc, storage)
+    want = similarity(quant(kb.queries[:8], "queries"),
+                      quant(kb.docs, "docs"), "ip")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_fp16_scorer_roundtrip(kb):
+    scorer = FloatCastScorer(FloatCast(), backend="jnp")
+    storage = scorer.encode_docs(kb.docs)
+    assert storage.dtype == jnp.float16
+    got = scorer.scores(kb.queries[:8], storage)
+    want = similarity(kb.queries[:8], storage.astype(jnp.float32), "ip")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_scorer_params_are_explicit(kb):
+    """params() must carry everything scores() reads (shard_map contract)."""
+    quant = Int8Quantizer().fit(kb.docs)
+    scorer = Int8Scorer(quant, backend="jnp")
+    storage = scorer.encode_docs(kb.docs)
+    params = {k: jnp.asarray(v) for k, v in scorer.params().items()}
+    got = scorer.scores(kb.queries[:4], storage, params=params)
+    want = scorer.scores(kb.queries[:4], storage)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# CompressedIndex orchestration
+# ---------------------------------------------------------------------------
+
+
+def test_index_fused_search_matches_manual_pipeline(kb):
+    pipe = CompressionPipeline([CenterNorm(), PCA(32), CenterNorm(),
+                                Int8Quantizer()])
+    idx = CompressedIndex.build(kb.docs, kb.queries, pipe, backend="jnp")
+    _, ids = idx.search(kb.queries[:16], 8)
+    d = pipe.transform(kb.docs, "docs")          # quant→dequant oracle
+    q = idx.encode_queries(kb.queries[:16])
+    _, want = topk_search(q, d, 8)
+    overlap = np.mean([len(set(np.asarray(ids)[i].tolist()) &
+                           set(np.asarray(want)[i].tolist())) / 8
+                       for i in range(16)])
+    assert overlap > 0.97
+
+
+def test_index_fp16_decode_cached(kb):
+    pipe = CompressionPipeline([CenterNorm(), FloatCast()])
+    idx = CompressedIndex.build(kb.docs, kb.queries, pipe, backend="jnp")
+    assert idx.storage.dtype == jnp.float16
+    _, i1 = idx.search(kb.queries[:4], 5)
+    cached = idx._decoded_cache
+    assert cached is not None and cached.dtype == jnp.float32
+    _, i2 = idx.search(kb.queries[:4], 5)
+    assert idx._decoded_cache is cached          # no per-call re-decode
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    idx.add(kb.docs[:32])
+    assert idx._decoded_cache is None            # invalidated by add
+
+
+def test_index_add_after_build_grows_search_space(kb):
+    pipe = CompressionPipeline([CenterNorm(), OneBitQuantizer(0.5)])
+    idx = CompressedIndex.build(kb.docs[:1000], kb.queries, pipe,
+                                backend="jnp")
+    assert len(idx) == 1000
+    idx.add(kb.docs[1000:2000])
+    assert len(idx) == 2000
+    _, ids = idx.search(kb.queries[:8], 10)
+    assert int(np.asarray(ids).max()) >= 1000 or ids.shape == (8, 10)
+
+
+# ---------------------------------------------------------------------------
+# pipeline state-dict validation (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_load_state_dict_roundtrip(kb):
+    pipe = CompressionPipeline([CenterNorm(), PCA(16)])
+    pipe.fit(kb.docs, kb.queries)
+    sd = pipe.state_dict()
+    other = CompressionPipeline([CenterNorm(), PCA(16)])
+    other.load_state_dict(sd)
+    np.testing.assert_array_equal(
+        np.asarray(pipe.transform(kb.docs[:8], "docs")),
+        np.asarray(other.transform(kb.docs[:8], "docs")))
+
+
+def test_load_state_dict_rejects_mismatched_stage_types(kb):
+    pipe = CompressionPipeline([CenterNorm(), PCA(16)])
+    pipe.fit(kb.docs, kb.queries)
+    sd = pipe.state_dict()
+    wrong = CompressionPipeline([CenterNorm(), Int8Quantizer()])
+    with pytest.raises(ValueError, match="mismatch"):
+        wrong.load_state_dict(sd)
+
+
+def test_load_state_dict_rejects_wrong_length(kb):
+    pipe = CompressionPipeline([CenterNorm(), PCA(16)])
+    pipe.fit(kb.docs, kb.queries)
+    sd = pipe.state_dict()
+    del sd["types"]                        # legacy dict without types
+    short = CompressionPipeline([CenterNorm()])
+    with pytest.raises(ValueError, match="length mismatch"):
+        short.load_state_dict(sd)

@@ -1,0 +1,154 @@
+"""repro.serve: micro-batcher, engine, shadow scoring, metrics."""
+
+import numpy as np
+import pytest
+
+from repro.core import CenterNorm, CompressionPipeline, Int8Quantizer, PCA
+from repro.data import make_dpr_like_kb
+from repro.retrieval import CompressedIndex, DenseIndex
+from repro.serve import (LatencyStats, MicroBatcher, ServeEngine,
+                         ShadowScorer)
+from repro.serve.batcher import bucket_rows
+
+
+@pytest.fixture(scope="module")
+def kb():
+    return make_dpr_like_kb(n_queries=256, n_docs=2000, d=64, r_eff=32)
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_rows_powers_of_two():
+    assert [bucket_rows(n, 64) for n in (1, 2, 3, 5, 8, 9, 33, 64)] == \
+        [1, 2, 4, 8, 8, 16, 64, 64]
+    assert bucket_rows(100, 64) == 64          # capped at max_batch
+
+
+def test_batcher_coalesces_small_requests():
+    b = MicroBatcher(max_batch=32)
+    pending = [(i, np.ones((5, 8), np.float32) * i) for i in range(4)]
+    batches = b.form(pending)
+    assert len(batches) == 1                   # 20 rows fit one micro-batch
+    (mb,) = batches
+    assert mb.n_valid == 20
+    assert mb.queries.shape[0] == 32           # padded to the next bucket
+    # rows land where the slices claim
+    for s in mb.slices:
+        np.testing.assert_array_equal(mb.queries[s.start: s.stop],
+                                      s.request_id)
+
+
+def test_batcher_splits_large_request():
+    b = MicroBatcher(max_batch=16)
+    batches = b.form([(7, np.arange(40 * 4, dtype=np.float32).reshape(40, 4))])
+    assert [mb.n_valid for mb in batches] == [16, 16, 8]
+    # reassembly covers every source row exactly once, in order
+    rows = []
+    for mb in batches:
+        for s in mb.slices:
+            assert s.request_id == 7
+            rows.extend(range(s.req_start, s.req_start + s.stop - s.start))
+    assert rows == list(range(40))
+
+
+def test_batcher_no_padding_mode():
+    b = MicroBatcher(max_batch=32, pad_batches=False)
+    (mb,) = b.form([(0, np.ones((5, 4), np.float32))])
+    assert mb.queries.shape[0] == mb.n_valid == 5
+
+
+def test_batcher_1d_query_promoted():
+    b = MicroBatcher(max_batch=8)
+    (mb,) = b.form([(0, np.ones(4, np.float32))])
+    assert mb.queries.shape == (1, 4)
+    assert mb.n_valid == 1
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+
+def test_engine_results_match_direct_search(kb):
+    idx = DenseIndex(kb.docs)
+    engine = ServeEngine(idx, k=5, batcher=MicroBatcher(max_batch=64))
+    queries = np.asarray(kb.queries)
+    sizes = [1, 3, 32, 7, 64, 17]              # mixed request shapes
+    rids, offs = [], []
+    off = 0
+    for n in sizes:
+        rids.append(engine.submit(queries[off: off + n]))
+        offs.append(off)
+        off += n
+    results = engine.drain()
+    assert set(results) == set(rids)
+    _, want_all = idx.search(queries[:off], 5)
+    want_all = np.asarray(want_all)
+    for rid, o, n in zip(rids, offs, sizes):
+        got = results[rid]
+        assert got.ids.shape == (n, 5)
+        np.testing.assert_array_equal(got.ids, want_all[o: o + n])
+        assert got.latency_s >= 0
+
+
+def test_engine_50_request_stream_with_shadow(kb):
+    pipe = CompressionPipeline([CenterNorm(), PCA(32), Int8Quantizer()])
+    idx = CompressedIndex.build(kb.docs, kb.queries[:64], pipe,
+                                backend="jnp")
+    shadow = ShadowScorer.for_compressed(idx, kb.docs, every=5)
+    engine = ServeEngine(idx, k=10, batcher=MicroBatcher(max_batch=16),
+                         shadow=shadow)
+    queries = np.asarray(kb.queries)
+    for r in range(50):
+        engine.submit(queries[(r * 5) % 200: (r * 5) % 200 + 4])
+        engine.drain()
+    stats = engine.stats()
+    assert stats["requests_served"] == 50
+    assert stats["queries_served"] == 200
+    for key in ("p50_ms", "p95_ms", "p99_ms"):
+        assert np.isfinite(stats[key]) and stats[key] >= 0
+    assert stats["shadow_batches"] == 10       # every=5 of 50 batches
+    assert stats["shadow_overlap"] > 0.9       # int8 ≈ exact on this KB
+
+
+def test_engine_coalesced_drain_fewer_batches(kb):
+    idx = DenseIndex(kb.docs)
+    engine = ServeEngine(idx, k=5, batcher=MicroBatcher(max_batch=64))
+    queries = np.asarray(kb.queries)
+    for r in range(8):
+        engine.submit(queries[r * 8: (r + 1) * 8])   # 64 rows pending
+    results = engine.drain()
+    assert len(results) == 8
+    assert engine.batches_served == 1          # one fused micro-batch
+    assert engine.pending == 0
+
+
+def test_engine_rejects_bad_shapes(kb):
+    engine = ServeEngine(DenseIndex(kb.docs), k=5)
+    with pytest.raises(ValueError):
+        engine.submit(np.ones((2, 3, 4), np.float32))
+
+
+def test_latency_stats_empty_and_filled():
+    ls = LatencyStats()
+    assert np.isnan(ls.percentile(50))
+    for v in (0.001, 0.002, 0.003):
+        ls.record(v)
+    s = ls.summary()
+    assert s["count"] == 3
+    assert s["p50_ms"] == pytest.approx(2.0)
+    assert s["p99_ms"] <= 3.0 + 1e-6
+
+
+def test_shadow_sampling_cadence(kb):
+    idx = DenseIndex(kb.docs)
+    shadow = ShadowScorer(DenseIndex(kb.docs), every=3)
+    q = np.asarray(kb.queries[:4])
+    _, ids = idx.search(q, 5)
+    seen = [shadow.observe(q, np.asarray(ids), 5) for _ in range(7)]
+    assert [o is not None for o in seen] == [True, False, False,
+                                             True, False, False, True]
+    assert shadow.mean_overlap == 1.0          # identical indexes

@@ -1,0 +1,64 @@
+"""ShardedCompressedIndex ≡ CompressedIndex on a 1×N CPU mesh, per backend.
+
+Runs in a subprocess with forced host devices (same pattern as
+tests/test_distributed.py) so the main test process keeps its single-device
+jax.  One subprocess checks every scorer backend; the parametrized tests
+assert on its per-backend verdict lines.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+BACKENDS = ("float", "fp16", "int8", "onebit")
+
+_CHECK_ALL = """
+    import copy
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import (CenterNorm, CompressionPipeline, FloatCast,
+                            Int8Quantizer, OneBitQuantizer, PCA)
+    from repro.launch.mesh import make_test_mesh
+    from repro.retrieval import CompressedIndex, ShardedCompressedIndex
+
+    rng = np.random.default_rng(0)
+    docs = jnp.asarray(rng.standard_normal((515, 64)), jnp.float32)
+    queries = jnp.asarray(rng.standard_normal((16, 64)), jnp.float32)
+    mesh = make_test_mesh(8, model=8)          # 1 x 8: pure doc sharding
+
+    tails = {"float": [], "fp16": [FloatCast()],
+             "int8": [Int8Quantizer()], "onebit": [OneBitQuantizer(0.5)]}
+    for name, tail in tails.items():
+        p1 = CompressionPipeline([CenterNorm(), PCA(32)] + copy.deepcopy(tail))
+        p2 = CompressionPipeline([CenterNorm(), PCA(32)] + copy.deepcopy(tail))
+        single = CompressedIndex.build(docs, queries, p1, backend="jnp")
+        sharded = ShardedCompressedIndex.build(docs, queries, p2, mesh,
+                                               backend="jnp")
+        v1, i1 = single.search(queries, 10)
+        v2, i2 = sharded.search(queries, 10)
+        ids_equal = np.array_equal(np.asarray(i1), np.asarray(i2))
+        vals_close = np.allclose(np.asarray(v1), np.asarray(v2),
+                                 rtol=1e-5, atol=1e-5)
+        print(f"BACKEND {name} ids={ids_equal} vals={vals_close}")
+"""
+
+
+@pytest.fixture(scope="module")
+def parity_output():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(_CHECK_ALL)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sharded_matches_single_host(parity_output, backend):
+    assert f"BACKEND {backend} ids=True vals=True" in parity_output
