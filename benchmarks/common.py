@@ -66,10 +66,11 @@ def _fmt(v) -> str:
     return str(v)
 
 
-def base_parser(desc: str) -> argparse.ArgumentParser:
+def base_parser(desc: str, datasets: tuple[str, ...] = ("hotpot-like",
+                                                        "nq-like")
+                ) -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(description=desc)
-    ap.add_argument("--dataset", default="hotpot-like",
-                    choices=("hotpot-like", "nq-like"))
+    ap.add_argument("--dataset", default=datasets[0], choices=datasets)
     ap.add_argument("--n-docs", type=int, default=20_000)
     ap.add_argument("--n-queries", type=int, default=400)
     ap.add_argument("--fast", "--quick", action="store_true", dest="fast",

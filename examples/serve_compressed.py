@@ -38,6 +38,12 @@ def main(argv=None) -> None:
     ap.add_argument("--drain-every", type=int, default=1,
                     help="submit N requests between drains (N>1 shows the "
                          "micro-batcher coalescing requests)")
+    ap.add_argument("--ivf-nlist", type=int, default=0,
+                    help="promote the index to IVF with this many lists "
+                         "(0 = exact search)")
+    ap.add_argument("--ivf-nprobe", type=int, default=0,
+                    help="default probe width (0 = nlist/2); every 4th "
+                         "request overrides it per-request to nlist")
     args = ap.parse_args(argv)
 
     dim = 245 if args.method == "pca_onebit" else args.dim
@@ -53,6 +59,14 @@ def main(argv=None) -> None:
           f"{human_bytes(shadow.index.nbytes)} "
           f"({shadow.index.nbytes / idx.nbytes:.0f}x)")
 
+    full_probe = None
+    if args.ivf_nlist:
+        nprobe = args.ivf_nprobe or max(1, args.ivf_nlist // 2)
+        idx = idx.to_ivf(nlist=args.ivf_nlist, nprobe=nprobe)
+        full_probe = idx.nlist
+        print(f"  IVF: nlist={idx.nlist} nprobe={nprobe} "
+              f"(every 4th request forces nprobe={full_probe})")
+
     engine = ServeEngine(idx, k=args.k,
                          batcher=MicroBatcher(max_batch=args.max_batch),
                          shadow=shadow)
@@ -60,7 +74,11 @@ def main(argv=None) -> None:
     queries = np.asarray(kb.queries)
     served = 0
     for r in range(args.requests):
-        engine.submit(queries[r * args.batch: (r + 1) * args.batch])
+        # recall-sensitive traffic widens its probe per request; the engine
+        # batches each nprobe group through its own compiled graph
+        nprobe = full_probe if (full_probe and r % 4 == 3) else None
+        engine.submit(queries[r * args.batch: (r + 1) * args.batch],
+                      nprobe=nprobe)
         if (r + 1) % args.drain_every == 0:
             served += len(engine.drain())
     served += len(engine.drain())

@@ -1,19 +1,22 @@
 """Dense retrieval substrate: exact & approximate top-k, metrics, sharding."""
 
 from repro.retrieval.index import CompressedIndex, DenseIndex
-from repro.retrieval.ivf import IVFFlatIndex
+from repro.retrieval.ivf import IVFFlatIndex, IVFIndex
 from repro.retrieval.rprecision import (make_dim_drop_scorer, r_precision,
+                                        recall_at_k,
                                         retrieved_relevant_counts)
-from repro.retrieval.scorers import (Scorer, get_scorer, register_scorer,
-                                     scorer_for_pipeline, scorer_names)
-from repro.retrieval.sharded import ShardedCompressedIndex
+from repro.retrieval.scorers import (Scorer, backend_tail_stages, get_scorer,
+                                     register_scorer, scorer_for_pipeline,
+                                     scorer_names)
+from repro.retrieval.sharded import ShardedCompressedIndex, ShardedIVFIndex
 from repro.retrieval.topk import topk_search
 
 __all__ = [
-    "CompressedIndex", "DenseIndex", "IVFFlatIndex",
-    "ShardedCompressedIndex",
-    "Scorer", "get_scorer", "register_scorer", "scorer_for_pipeline",
-    "scorer_names",
-    "make_dim_drop_scorer", "r_precision", "retrieved_relevant_counts",
+    "CompressedIndex", "DenseIndex", "IVFFlatIndex", "IVFIndex",
+    "ShardedCompressedIndex", "ShardedIVFIndex",
+    "Scorer", "backend_tail_stages", "get_scorer", "register_scorer",
+    "scorer_for_pipeline", "scorer_names",
+    "make_dim_drop_scorer", "r_precision", "recall_at_k",
+    "retrieved_relevant_counts",
     "topk_search",
 ]

@@ -14,6 +14,7 @@ so repeated calls pay no per-call Python dispatch or storage decode.
 
 from __future__ import annotations
 
+import copy
 import functools
 from typing import Optional
 
@@ -69,6 +70,7 @@ class CompressedIndex:
         self.storage: Optional[jax.Array] = None
         self._n_docs = 0
         self._dim = 0
+        self._version = 0      # bumped on add; to_ivf promotions check it
         self._decoded_cache: Optional[jax.Array] = None
         self._search_fn = None
 
@@ -91,6 +93,7 @@ class CompressedIndex:
         else:
             self.storage = jnp.concatenate([self.storage, enc], axis=0)
         self._n_docs = int(self.storage.shape[0])
+        self._version += 1
         self._decoded_cache = None     # storage changed: drop the float view
         return self
 
@@ -139,6 +142,50 @@ class CompressedIndex:
 
             self._search_fn = _search
         return self._search_fn
+
+    def to_ivf(self, nlist: int = 200, nprobe: int = 100,
+               docs: Optional[jax.Array] = None, kmeans_iters: int = 15,
+               rng=None, train_size: int = 100_000):
+        """Promote this index to approximate (IVF) search for free.
+
+        The fitted pipeline, scorer backend, and encoded storage are shared
+        with the returned :class:`~repro.retrieval.ivf.IVFIndex` — nothing
+        is re-encoded.  The k-means router is fitted on the float *decode*
+        of the stored representation (routing and scoring then agree on
+        what the index actually contains); pass the original ``docs`` (same
+        corpus, same order) to route on exact float vectors instead.
+        """
+        from repro.retrieval.ivf import IVFIndex
+
+        if self.storage is None:
+            raise ValueError("index is empty — add docs before to_ivf")
+        ivf = IVFIndex(self.pipeline, nlist=nlist, nprobe=nprobe,
+                       sim=self.sim, backend=self.backend,
+                       kmeans_iters=kmeans_iters)
+        # carry over the already-fitted stages and scorer state (recorded
+        # dims/codebooks) rather than the fresh ones __init__ derived; the
+        # scorer is deep-copied because encode_docs mutates it — a later
+        # ivf.fit()/add() on a different corpus must not corrupt ours
+        ivf.float_stages = self.float_stages
+        ivf.scorer = copy.deepcopy(self.scorer)
+        if docs is not None:
+            x_route = apply_float_stages(self.float_stages, docs, "docs")
+            if int(x_route.shape[0]) != self._n_docs:
+                raise ValueError("docs must be the indexed corpus "
+                                 f"({self._n_docs} rows), got "
+                                 f"{int(x_route.shape[0])}")
+        elif self.scorer.name in ("float", "fp16"):
+            x_route = self.decoded_docs()   # exact search reuses this cache
+        else:
+            # int8/1-bit exact search never reads the float view — keep the
+            # full-corpus decode a k-means-lifetime temporary, not a cache
+            x_route = self.scorer.decode(self.storage)
+        ivf._install(self.storage, x_route, rng=rng, train_size=train_size)
+        # the promotion shares this index's storage: a later add() here
+        # would silently miss from the IVF view, so pin our version and
+        # let IVFIndex.search fail loudly instead
+        ivf._source = (self, self._version)
+        return ivf
 
     def search(self, queries: jax.Array, k: int,
                doc_chunk: int = 131072) -> tuple[jax.Array, jax.Array]:

@@ -1,17 +1,31 @@
-"""IVF-Flat approximate nearest-neighbour index (our FAISS analogue).
+"""IVF approximate nearest-neighbour search over quantized storage.
 
 Reproduces the paper's Figure-1 retrieval condition (FAISS ``IndexIVFFlat``,
-nlist=200, nprobe=100): a k-means coarse quantizer partitions the index into
-``nlist`` inverted lists; search scores only the ``nprobe`` lists nearest to
-each query.  The paper's finding — a small *systematic* loss vs exact search
-across all embedding models — is reproduced in
-``benchmarks/fig1_models_faiss.py``.
+nlist=200, nprobe=100) and extends it to the compressed-serving path: a
+k-means coarse quantizer partitions the index into ``nlist`` inverted lists;
+search scores only the ``nprobe`` lists nearest to each query.
+
+Unlike the seed implementation (full float32 docs, bespoke einsum scoring),
+:class:`IVFIndex` stores the inverted lists in *scorer-backend storage*
+(float / fp16 / int8 codes / bit-packed 1-bit words, via the
+:mod:`repro.retrieval.scorers` registry) and scores probed candidates through
+the same kernel paths as exact search — so ANN search compounds with the
+paper's compression instead of forfeiting it.  The whole query path is one
+jit graph per (k, nprobe): float stages → coarse routing → list gather →
+``scorer.scores_gathered`` → masked top-k.
 
 Implementation notes (TPU/JAX adaptation): inverted lists are stored as one
-padded (nlist, max_len) id matrix so probing is a dense gather; masked scoring
-keeps everything jit-compatible.  For the production multi-pod path the lists
-are sharded over devices (see retrieval/sharded.py) — IVF then reduces
-per-device compute by nprobe/nlist while the collective schedule is unchanged.
+padded (nlist, max_len) id matrix so probing is a dense gather; masked
+scoring keeps everything jit-compatible.  For the production multi-pod path
+the lists are partitioned over devices (:class:`repro.retrieval.sharded.
+ShardedIVFIndex`) — IVF then reduces per-device compute by nprobe/nlist
+while the collective schedule is unchanged.
+
+Degenerate corpora are handled explicitly: ``fit`` clamps the effective
+``nlist`` to the number of documents (a k-means run can still leave a
+cluster empty — those lists are simply padded), and ``search`` always
+returns ``min(k, n_docs)`` columns, padding truly-unreachable slots (fewer
+than k candidates probed) with score ``-inf`` and id ``-1``.
 """
 
 from __future__ import annotations
@@ -23,74 +37,288 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.pipeline import CompressionPipeline
 from repro.retrieval.kmeans import assign, kmeans_fit
+from repro.retrieval.scorers import (Scorer, apply_float_stages,
+                                     scorer_for_pipeline)
 from repro.retrieval.topk import similarity
 
 
-class IVFFlatIndex:
-    def __init__(self, nlist: int = 200, nprobe: int = 100, sim: str = "ip",
-                 kmeans_iters: int = 15):
-        self.nlist = nlist
-        self.nprobe = min(nprobe, nlist)
-        self.sim = sim
-        self.kmeans_iters = kmeans_iters
-        self.centroids: Optional[jax.Array] = None
-        self.lists: Optional[jax.Array] = None       # (nlist, max_len) ids, −1 pad
-        self.docs: Optional[jax.Array] = None
+def topk_score_then_id(s: jax.Array, ids: jax.Array, k: int
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Top-k by (score desc, doc id asc) — a strict total order.
 
-    def fit(self, docs: jax.Array, rng=None, train_size: int = 100_000,
-            ) -> "IVFFlatIndex":
-        docs = jnp.asarray(docs, jnp.float32)
-        self.docs = docs
+    Exact search breaks score ties by document id implicitly (candidates
+    are scanned in id order and ``lax.top_k`` keeps the first occurrence);
+    IVF candidates arrive in probe order and sharded IVF candidates in
+    shard order, so ties must be broken *explicitly* on the id for the
+    three paths to produce identical rankings.  Matters most for the 1-bit
+    backend, whose integer sign-dot scores tie constantly.
+    """
+    order = jnp.lexsort((ids, -s), axis=-1)[..., :k]
+    return (jnp.take_along_axis(s, order, axis=-1),
+            jnp.take_along_axis(ids, order, axis=-1))
+
+
+def masked_topk_by_id(s: jax.Array, ids: jax.Array, k: int
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Top-``k`` by (score desc, id asc), normalising unreachable slots.
+
+    ``-inf`` scores come back with id ``-1``; when fewer than ``k``
+    candidate columns exist the output is padded out to ``k`` with
+    ``(-inf, -1)``.  Shared by the single-host IVF search and both halves
+    (shard-local and post-gather merge) of the sharded search, so the
+    three paths cannot drift apart.
+    """
+    kk = min(k, s.shape[1])
+    vals, out = topk_score_then_id(s, ids, kk)
+    out = jnp.where(jnp.isfinite(vals), out, -1)
+    if kk < k:
+        pad = k - kk
+        vals = jnp.pad(vals, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+        out = jnp.pad(out, ((0, 0), (0, pad)), constant_values=-1)
+    return vals, out
+
+
+def probe_and_score(q: jax.Array, centroids: jax.Array, lists: jax.Array,
+                    storage: jax.Array, scorer: Scorer, params, sim: str,
+                    nprobe: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Coarse-route ``q`` to ``nprobe`` lists, gather and score candidates.
+
+    Returns ``(scores, cand, valid)``: scores ``(Q, C)`` with pad slots at
+    ``-inf``, the gathered candidate row ids ``(Q, C)`` (−1 pads), and the
+    validity mask.  The caller maps ``cand`` to output ids (global ids on
+    the single host, shard-local → global via a gids table when sharded).
+    """
+    cscores = similarity(q, centroids, sim)
+    _, probe = jax.lax.top_k(cscores, nprobe)          # (Q, nprobe)
+    cand = lists[probe].reshape(q.shape[0], -1)        # (Q, C)
+    valid = cand >= 0
+    gathered = storage[jnp.maximum(cand, 0)]           # (Q, C, w)
+    qe = scorer.encode_queries(q)
+    s = scorer.scores_gathered(qe, gathered, params=params)
+    return jnp.where(valid, s, -jnp.inf), cand, valid
+
+
+def build_padded_lists(labels: np.ndarray, nlist: int) -> np.ndarray:
+    """(n_docs,) cluster labels → (nlist, max_len) id matrix, −1 padded.
+
+    Empty clusters become all-pad rows (the ``nlist > n_docs`` /
+    empty-bucket case), never a crash.  One stable argsort buckets every
+    doc — O(n log n + nlist), not a per-cluster scan — and keeps doc ids
+    ascending within each list (the tie order the search paths rely on).
+    """
+    order = np.argsort(labels, kind="stable").astype(np.int32)
+    counts = np.bincount(labels, minlength=nlist)
+    max_len = max(1, int(counts.max(initial=0)))
+    lists = np.full((nlist, max_len), -1, np.int32)
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    for c in range(nlist):
+        b = order[starts[c]: starts[c + 1]]
+        lists[c, : len(b)] = b
+    return lists
+
+
+class IVFIndex:
+    """Quantized IVF index: coarse k-means router over scorer-backend storage.
+
+    ``pipeline`` follows :class:`~repro.retrieval.index.CompressedIndex`
+    semantics: float stages transform docs/queries, a trailing quantizer (if
+    any) selects the scorer backend that owns the stored representation.
+    ``pipeline=None`` stores plain float (the classic IVF-Flat).
+
+    ``fit`` clamps the effective ``nlist`` to the corpus size; ``nprobe``
+    is clamped to ``nlist`` at search time and can be overridden per call
+    (and per request through :class:`repro.serve.ServeEngine`).
+    """
+
+    def __init__(self, pipeline: Optional[CompressionPipeline] = None,
+                 nlist: int = 200, nprobe: int = 100, sim: str = "ip",
+                 backend: str = "auto", kmeans_iters: int = 15):
+        if nlist < 1:
+            raise ValueError("nlist must be ≥ 1")
+        self.pipeline = pipeline if pipeline is not None \
+            else CompressionPipeline([])
+        self.nlist = nlist
+        self._nlist_requested = nlist  # clamp is per-fit, never sticky
+        self.nprobe = nprobe
+        self.sim = sim
+        self.backend = backend
+        self.kmeans_iters = kmeans_iters
+        self.float_stages, self.scorer = scorer_for_pipeline(
+            self.pipeline, sim=sim, backend=backend)
+        self.centroids: Optional[jax.Array] = None   # (nlist, d) float routing
+        self.lists: Optional[jax.Array] = None       # (nlist, max_len), −1 pad
+        self.storage: Optional[jax.Array] = None     # scorer-encoded rows
+        self._labels: Optional[np.ndarray] = None    # (n_docs,) cluster ids
+        self._n_docs = 0
+        self._dim = 0
+        self._version = 0      # bumped on every fit/add; snapshots check it
+        self._source = None    # (CompressedIndex, version) when promoted
+        self._search_fn = None
+
+    # -- construction -----------------------------------------------------
+    @classmethod
+    def build(cls, docs: jax.Array,
+              queries_sample: Optional[jax.Array] = None,
+              pipeline: Optional[CompressionPipeline] = None, *,
+              nlist: int = 200, nprobe: int = 100, sim: str = "ip",
+              backend: str = "auto", kmeans_iters: int = 15,
+              rng=None) -> "IVFIndex":
+        """Fit the pipeline on ``docs`` then fit the IVF structure."""
+        pipeline = pipeline if pipeline is not None else CompressionPipeline([])
+        pipeline.fit(docs, queries_sample, rng=rng)
+        idx = cls(pipeline, nlist=nlist, nprobe=nprobe, sim=sim,
+                  backend=backend, kmeans_iters=kmeans_iters)
+        return idx.fit(docs, rng=rng)
+
+    def fit(self, docs: jax.Array, rng=None,
+            train_size: int = 100_000) -> "IVFIndex":
+        """Encode ``docs`` through the (already fitted) pipeline and build
+        the coarse router + inverted lists."""
+        x = apply_float_stages(self.float_stages, docs, "docs")
+        storage = self.scorer.encode_docs(x)
+        return self._install(storage, x, rng=rng, train_size=train_size)
+
+    def _install(self, storage: jax.Array, x_route: jax.Array, rng=None,
+                 train_size: int = 100_000) -> "IVFIndex":
+        """Install pre-encoded ``storage`` with routing vectors ``x_route``
+        (float, same row order) — shared by ``fit`` and
+        :meth:`CompressedIndex.to_ivf <repro.retrieval.index.CompressedIndex.to_ivf>`."""
+        n_docs = int(storage.shape[0])
+        if n_docs == 0:
+            raise ValueError("cannot fit an IVF index on an empty corpus")
         if rng is None:
             rng = jax.random.PRNGKey(0)
-        train = docs
-        if docs.shape[0] > train_size:
-            sel = jax.random.choice(rng, docs.shape[0], (train_size,),
-                                    replace=False)
-            train = docs[sel]
+        x_route = jnp.asarray(x_route, jnp.float32)
+        # clamp to this corpus, from the *requested* nlist — a refit on a
+        # larger corpus gets the configured list count back
+        self.nlist = max(1, min(self._nlist_requested, n_docs))
+        train = x_route
+        if n_docs > train_size:
+            sel = jax.random.choice(rng, n_docs, (train_size,), replace=False)
+            train = x_route[sel]
         self.centroids = kmeans_fit(train, self.nlist, self.kmeans_iters, rng)
-        labels = np.asarray(assign(docs, self.centroids))
-        buckets = [np.where(labels == c)[0] for c in range(self.nlist)]
-        max_len = max(1, max(len(b) for b in buckets))
-        lists = np.full((self.nlist, max_len), -1, np.int32)
-        for c, b in enumerate(buckets):
-            lists[c, : len(b)] = b
-        self.lists = jnp.asarray(lists)
+        self._labels = np.asarray(assign(x_route, self.centroids))
+        self.lists = jnp.asarray(build_padded_lists(self._labels, self.nlist))
+        self.storage = storage
+        self._n_docs = n_docs
+        self._dim = int(x_route.shape[-1])
+        self._version += 1
+        self._source = None    # fresh fit: no longer a shared-storage view
+        self._search_fn = None
+        return self
+
+    def add(self, docs: jax.Array) -> "IVFIndex":
+        """Append docs, routing them to the *existing* centroids (no refit)."""
+        if self.centroids is None:
+            return self.fit(docs)
+        x = apply_float_stages(self.float_stages, docs, "docs")
+        enc = self.scorer.encode_docs(x)
+        labels = np.asarray(assign(jnp.asarray(x, jnp.float32),
+                                   self.centroids))
+        self.storage = jnp.concatenate([self.storage, enc], axis=0)
+        self._labels = np.concatenate([self._labels, labels])
+        self.lists = jnp.asarray(build_padded_lists(self._labels, self.nlist))
+        self._n_docs = int(self.storage.shape[0])
+        self._version += 1
+        self._source = None    # storage was copied on append: now our own
+        self._search_fn = None
         return self
 
     def __len__(self) -> int:
-        return int(self.docs.shape[0]) if self.docs is not None else 0
+        return self._n_docs
 
-    def search(self, queries: jax.Array, k: int, query_chunk: int = 64,
+    @property
+    def nbytes(self) -> int:
+        """Bytes of the quantized document storage (the paper's metric)."""
+        assert self.storage is not None
+        return int(self.storage.size * self.storage.dtype.itemsize)
+
+    @property
+    def aux_nbytes(self) -> int:
+        """Routing overhead: centroids + padded inverted lists."""
+        aux = 0
+        for a in (self.centroids, self.lists):
+            if a is not None:
+                aux += int(a.size * a.dtype.itemsize)
+        return aux
+
+    # -- search ------------------------------------------------------------
+    def encode_queries(self, queries: jax.Array) -> jax.Array:
+        """Queries through the float stages (no query-side quantization)."""
+        return apply_float_stages(self.float_stages, queries, "queries")
+
+    def _resolve_nprobe(self, nprobe: Optional[int]) -> int:
+        nprobe = self.nprobe if nprobe is None else nprobe
+        if nprobe < 1:
+            raise ValueError("nprobe must be ≥ 1")
+        return min(nprobe, self.nlist)
+
+    def _fused_search_fn(self):
+        """jit'd probe→gather→score→masked-top-k over the whole query path."""
+        stages = tuple(self.float_stages)
+        scorer = self.scorer
+        sim = self.sim
+
+        @functools.partial(jax.jit, static_argnames=("k", "nprobe"))
+        def _search(queries, centroids, lists, storage, params, *, k, nprobe):
+            q = queries
+            for t in stages:
+                q = t(q, "queries")
+            s, cand, valid = probe_and_score(q, centroids, lists, storage,
+                                             scorer, params, sim, nprobe)
+            return masked_topk_by_id(s, jnp.where(valid, cand, -1), k)
+
+        return _search
+
+    def search(self, queries: jax.Array, k: int,
+               nprobe: Optional[int] = None, query_chunk: int = 64,
                ) -> tuple[jax.Array, jax.Array]:
-        queries = jnp.asarray(queries, jnp.float32)
+        """Top-``min(k, n_docs)`` over the probed lists.
+
+        Slots with no reachable candidate (probed pool < k) come back with
+        score ``-inf`` and id ``-1``; with ``nprobe == nlist`` every stored
+        doc is reachable and the ranking matches exact search.
+        """
+        if self.storage is None:
+            raise ValueError("IVFIndex is not fitted")
+        if self._source is not None and \
+                self._source[0]._version != self._source[1]:
+            raise ValueError(
+                "source CompressedIndex changed since to_ivf (add was "
+                "called); the promoted IVF view shares its old storage — "
+                "re-promote with to_ivf()")
+        nprobe = self._resolve_nprobe(nprobe)
+        k = min(k, self._n_docs)
+        # k / nprobe are static_argnames: one jit wrapper specializes per
+        # (k, nprobe) in its own trace cache
+        if self._search_fn is None:
+            self._search_fn = self._fused_search_fn()
+        fn = self._search_fn
+        queries = jnp.asarray(queries)
+        params = self.scorer.params()
         vals_out, idx_out = [], []
         for s in range(0, queries.shape[0], query_chunk):
-            v, i = _ivf_search_chunk(queries[s: s + query_chunk],
-                                     self.centroids, self.lists, self.docs,
-                                     k, self.nprobe, self.sim)
+            v, i = fn(queries[s: s + query_chunk], self.centroids,
+                      self.lists, self.storage, params, k=k, nprobe=nprobe)
             vals_out.append(v)
             idx_out.append(i)
         return jnp.concatenate(vals_out), jnp.concatenate(idx_out)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "nprobe", "sim"))
-def _ivf_search_chunk(queries, centroids, lists, docs, k, nprobe, sim):
-    # 1) coarse: nearest nprobe centroids per query
-    cscores = similarity(queries, centroids, sim)
-    _, probe = jax.lax.top_k(cscores, nprobe)              # (Q, nprobe)
-    # 2) candidates: gather inverted lists
-    cand = lists[probe].reshape(queries.shape[0], -1)      # (Q, C)
-    valid = cand >= 0
-    docs_c = docs[jnp.maximum(cand, 0)]                    # (Q, C, d)
-    # 3) fine scoring
-    if sim == "ip":
-        s = jnp.einsum("qd,qcd->qc", queries, docs_c)
-    else:  # l2
-        diff = queries[:, None, :] - docs_c
-        s = -jnp.sum(diff * diff, axis=-1)
-    s = jnp.where(valid, s, -jnp.inf)
-    kk = min(k, s.shape[1])
-    vals, pos = jax.lax.top_k(s, kk)
-    return vals, jnp.take_along_axis(cand, pos, axis=1)
+class IVFFlatIndex(IVFIndex):
+    """Float-storage IVF (the seed's FAISS ``IndexIVFFlat`` analogue).
+
+    Thin facade over :class:`IVFIndex` with no compression pipeline — kept
+    for the Figure-1 benchmarks and as the uncompressed ANN baseline.
+    """
+
+    def __init__(self, nlist: int = 200, nprobe: int = 100, sim: str = "ip",
+                 kmeans_iters: int = 15):
+        super().__init__(None, nlist=nlist, nprobe=nprobe, sim=sim,
+                         backend="jnp", kmeans_iters=kmeans_iters)
+
+    @property
+    def docs(self) -> Optional[jax.Array]:
+        return self.storage

@@ -19,6 +19,18 @@ import numpy as np
 from repro.retrieval.topk import similarity, topk_search
 
 
+def recall_at_k(got, want) -> float:
+    """Mean per-query overlap of retrieved ids with a reference top-k.
+
+    ``want`` (Q, k) defines the reference set; ``got`` may have any column
+    count (extra columns are extra chances, −1 pads never match).
+    """
+    got, want = np.asarray(got), np.asarray(want)
+    k = want.shape[1]
+    return float(np.mean([len(set(got[i]) & set(want[i])) / k
+                          for i in range(want.shape[0])]))
+
+
 def _hits_from_topk(idx: jax.Array, relevant: jax.Array) -> jax.Array:
     """Count relevant docs among the first r(q) retrieved, per query.
 

@@ -79,6 +79,23 @@ class Scorer:
                params: Optional[dict] = None) -> jax.Array:
         return similarity(q, storage, self.sim)
 
+    def scores_gathered(self, q: jax.Array, gathered: jax.Array,
+                        params: Optional[dict] = None) -> jax.Array:
+        """Per-query candidate scoring: (Q, d) × (Q, C, w) → (Q, C).
+
+        The IVF path gathers each query's probed inverted lists into its own
+        candidate block; scoring vmaps the backend's regular ``scores``
+        kernel over the query axis, so every storage format reuses the same
+        kernel code for approximate search.  Pure and traceable, like
+        ``scores``.
+        """
+        p = params if params is not None else self.params()
+
+        def _one(qi, gi):
+            return self.scores(qi[None, :], gi, params=p)[0]
+
+        return jax.vmap(_one)(q, gathered)
+
     # -- float view -------------------------------------------------------
     def decode(self, storage: jax.Array) -> jax.Array:
         return storage
@@ -209,6 +226,17 @@ register_scorer("onebit", OneBitQuantizer,
 
 def scorer_names() -> tuple[str, ...]:
     return tuple(_SCORER_BY_NAME)
+
+
+def backend_tail_stages() -> dict[str, list[Transform]]:
+    """Canonical {backend name: trailing pipeline stages} sweep table.
+
+    One place for tests and benchmarks that cover every scorer backend;
+    stages are stateful once fitted, so each call returns fresh instances
+    (never share them across pipelines).
+    """
+    return {"float": [], "fp16": [FloatCast()],
+            "int8": [Int8Quantizer()], "onebit": [OneBitQuantizer(0.5)]}
 
 
 def get_scorer(name: str, quantizer: Optional[Transform] = None,

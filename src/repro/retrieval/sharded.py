@@ -31,10 +31,13 @@ from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.pipeline import CompressionPipeline
 from repro.parallel.compat import shard_map
+from repro.retrieval.ivf import (IVFIndex, masked_topk_by_id,
+                                 probe_and_score)
 from repro.retrieval.scorers import (Scorer, apply_float_stages,
                                      scorer_for_pipeline)
 from repro.retrieval.topk import similarity
@@ -243,3 +246,188 @@ class ShardedCompressedIndex:
         q = self.scorer.encode_queries(self.encode_queries(queries))
         return self._search_fns[k](q, self._placed_storage(),
                                    self.scorer.params())
+
+
+# ---------------------------------------------------------------------------
+# sharded IVF: inverted lists partitioned over the doc shards
+# ---------------------------------------------------------------------------
+
+
+def make_sharded_ivf_search(mesh: Mesh, scorer: Scorer, *, sim: str,
+                            k: int, nprobe: int,
+                            doc_axis: AxisName = "model",
+                            query_axis: Optional[AxisName] = None):
+    """shard_map'd IVF search.
+
+    ``(q_float, centroids, lists, storage, gids, params) → (vals, ids)``
+    where ``lists`` holds *shard-local* row indices (−1 for pad / lists the
+    shard does not own), ``storage`` the shard-local encoded rows, and
+    ``gids`` the local-row → global-doc-id map.  Every shard routes the
+    (replicated) queries identically on the replicated centroids, scores
+    only the probed lists it owns, and the per-shard top-k candidates merge
+    through the same constant-volume all-gather as the flat sharded search.
+    """
+    doc_axes = _as_tuple(doc_axis)
+    q_axes = _as_tuple(query_axis)
+    if not doc_axes:
+        raise ValueError("doc_axis must name at least one mesh axis")
+
+    def local_search(q, centroids, lists, storage, gids, params):
+        # coarse routing is identical on every shard (replicated inputs);
+        # the shard scores only the probed lists it owns
+        s, cand, valid = probe_and_score(q, centroids, lists, storage,
+                                         scorer, params, sim, nprobe)
+        g = jnp.where(valid, gids[jnp.maximum(cand, 0)], -1)
+        # (score desc, id asc) everywhere — same strict total order as the
+        # single-host IVF, so the shard merge cannot reorder ties
+        vals, ids = masked_topk_by_id(s, g, k)
+        for a in doc_axes:
+            vals = jax.lax.all_gather(vals, a, axis=1, tiled=True)
+            ids = jax.lax.all_gather(ids, a, axis=1, tiled=True)
+        return masked_topk_by_id(vals, ids, k)
+
+    q_spec = P(_axis_spec(q_axes), None)
+    doc_spec = P(_axis_spec(doc_axes), None)
+    in_specs = (q_spec, P(), doc_spec, doc_spec, P(_axis_spec(doc_axes)), P())
+    out_specs = (q_spec,) * 2
+    fn = shard_map(local_search, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs)
+    return jax.jit(fn)
+
+
+def partition_ivf_lists(lists: np.ndarray, storage: np.ndarray,
+                        n_shards: int
+                        ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Partition inverted lists over shards, greedily balancing doc counts.
+
+    ``lists`` is the (nlist, max_len) global-doc-id matrix (−1 padded);
+    ``storage`` the (n_docs, …) encoded rows.  Returns stacked per-shard
+    arrays splittable along axis 0 by ``shard_map``:
+
+    * ``lists_stacked``   (n_shards·nlist, max_len) — local row ids, −1 for
+      pad *and* for lists the shard does not own;
+    * ``storage_stacked`` (n_shards·rows_max, …)    — shard-local rows;
+    * ``gids_stacked``    (n_shards·rows_max,)      — global doc ids, −1 pad.
+    """
+    nlist, max_len = lists.shape
+    sizes = (lists >= 0).sum(axis=1)
+    owner = np.zeros(nlist, np.int32)
+    loads = np.zeros(n_shards, np.int64)
+    for c in np.argsort(-sizes, kind="stable"):   # biggest list first
+        s = int(np.argmin(loads))
+        owner[c] = s
+        loads[s] += sizes[c]
+    rows_max = max(1, int(loads.max()))
+
+    lists_stacked = np.full((n_shards * nlist, max_len), -1, np.int32)
+    storage_stacked = np.zeros((n_shards * rows_max,) + storage.shape[1:],
+                               storage.dtype)
+    gids_stacked = np.full((n_shards * rows_max,), -1, np.int32)
+    for s in range(n_shards):
+        r = 0
+        for c in np.flatnonzero(owner == s):
+            ids = lists[c][lists[c] >= 0]
+            storage_stacked[s * rows_max + r: s * rows_max + r + len(ids)] = \
+                storage[ids]
+            gids_stacked[s * rows_max + r: s * rows_max + r + len(ids)] = ids
+            lists_stacked[s * nlist + c, : len(ids)] = \
+                np.arange(r, r + len(ids), dtype=np.int32)
+            r += len(ids)
+    return lists_stacked, storage_stacked, gids_stacked
+
+
+class ShardedIVFIndex:
+    """IVF index with inverted lists partitioned over the mesh's doc shards.
+
+    Each shard owns a balanced subset of the lists *and* the quantized
+    storage rows of exactly those lists, so adding devices grows KB
+    capacity linearly while per-query compute stays at the probed fraction.
+    Wraps a fitted :class:`~repro.retrieval.ivf.IVFIndex` (centroids and
+    list assignment are taken as-is, so rankings match the single-host
+    index exactly; see tests/test_sharded_ivf.py).
+    """
+
+    def __init__(self, ivf: IVFIndex, mesh: Mesh,
+                 doc_axis: AxisName = "model",
+                 query_axis: Optional[AxisName] = None):
+        if ivf.storage is None:
+            raise ValueError("IVFIndex must be fitted before sharding")
+        self.ivf = ivf
+        self.mesh = mesh
+        self.doc_axes = _as_tuple(doc_axis)
+        self.query_axis = query_axis
+        self.scorer = ivf.scorer
+        self.float_stages = ivf.float_stages
+        self.sim = ivf.sim
+        self._snapshot_version = ivf._version   # partition frozen at this fit
+        lists_s, storage_s, gids_s = partition_ivf_lists(
+            np.asarray(ivf.lists), np.asarray(ivf.storage),
+            self.n_doc_shards)
+        self._lists = shard_index(jnp.asarray(lists_s), mesh, self.doc_axes)
+        self._storage = shard_index(jnp.asarray(storage_s), mesh,
+                                    self.doc_axes)
+        spec = P(_axis_spec(self.doc_axes))
+        self._gids = jax.device_put(jnp.asarray(gids_s),
+                                    NamedSharding(mesh, spec))
+        self._search_fns: dict[tuple[int, int], object] = {}
+
+    # -- construction -----------------------------------------------------
+    @classmethod
+    def build(cls, docs: jax.Array,
+              queries_sample: Optional[jax.Array] = None,
+              pipeline: Optional[CompressionPipeline] = None, *,
+              mesh: Mesh, nlist: int = 200, nprobe: int = 100,
+              sim: str = "ip", backend: str = "auto",
+              kmeans_iters: int = 15, doc_axis: AxisName = "model",
+              query_axis: Optional[AxisName] = None,
+              rng=None) -> "ShardedIVFIndex":
+        ivf = IVFIndex.build(docs, queries_sample, pipeline, nlist=nlist,
+                             nprobe=nprobe, sim=sim, backend=backend,
+                             kmeans_iters=kmeans_iters, rng=rng)
+        return cls(ivf, mesh, doc_axis=doc_axis, query_axis=query_axis)
+
+    @property
+    def n_doc_shards(self) -> int:
+        n = 1
+        for a in self.doc_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def __len__(self) -> int:
+        return len(self.ivf)
+
+    @property
+    def nbytes(self) -> int:
+        return self.ivf.nbytes
+
+    @property
+    def nlist(self) -> int:
+        return self.ivf.nlist
+
+    @property
+    def nprobe(self) -> int:
+        return self.ivf.nprobe
+
+    # -- search ------------------------------------------------------------
+    def encode_queries(self, queries: jax.Array) -> jax.Array:
+        return apply_float_stages(self.float_stages, queries, "queries")
+
+    def search(self, queries: jax.Array, k: int,
+               nprobe: Optional[int] = None
+               ) -> tuple[jax.Array, jax.Array]:
+        if self.ivf._version != self._snapshot_version:
+            raise ValueError(
+                "wrapped IVFIndex changed since sharding (fit/add was "
+                "called); the list partition is frozen at construction — "
+                "rebuild the ShardedIVFIndex")
+        nprobe = self.ivf._resolve_nprobe(nprobe)
+        k = min(k, len(self.ivf))
+        key = (k, nprobe)
+        if key not in self._search_fns:
+            self._search_fns[key] = make_sharded_ivf_search(
+                self.mesh, self.scorer, sim=self.sim, k=k, nprobe=nprobe,
+                doc_axis=self.doc_axes, query_axis=self.query_axis)
+        q = self.encode_queries(queries)
+        return self._search_fns[key](q, self.ivf.centroids, self._lists,
+                                     self._storage, self._gids,
+                                     self.scorer.params())

@@ -2,21 +2,31 @@
 
 :class:`ServeEngine` fronts any index exposing ``search(queries, k)`` —
 :class:`~repro.retrieval.index.DenseIndex`,
-:class:`~repro.retrieval.index.CompressedIndex`, or
-:class:`~repro.retrieval.sharded.ShardedCompressedIndex` — so the same
-engine serves a laptop demo and a mesh-sharded production deployment.
+:class:`~repro.retrieval.index.CompressedIndex`,
+:class:`~repro.retrieval.ivf.IVFIndex`, or the sharded variants
+(:mod:`repro.retrieval.sharded`) — so the same engine serves a laptop demo
+and a mesh-sharded production deployment.
 
 Model: callers ``submit()`` query blocks (any row count) and receive a
 request id; ``drain()`` coalesces everything pending through the
 micro-batcher, dispatches each padded batch in one device call, and
-returns completed :class:`ServeResult`\\ s.  The synchronous queue keeps
-the engine deterministic and testable; an async front-end would call
-``drain`` from its event loop at the cadence the hardware sustains.
+returns completed :class:`ServeResult`\\ s.  ``submit`` is thread-safe, so
+any number of producer threads can feed one drain loop (the standard
+accelerator-serving topology: many frontends, one dispatcher).
+
+IVF indexes accept a per-request ``nprobe`` override: latency-sensitive
+traffic probes fewer lists, recall-sensitive traffic more, against the
+same storage.  Requests are micro-batched per ``nprobe`` value (a batch
+must share one compiled search graph).  Each distinct override value
+compiles — and permanently retains — its own search graph, so frontends
+should offer a small fixed menu of probe widths (e.g. fast/default/full),
+not a continuous per-user knob.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Optional
 
@@ -45,7 +55,8 @@ class ServeEngine:
         self.batcher = batcher if batcher is not None else MicroBatcher()
         self.shadow = shadow
         self.latency = LatencyStats()          # per micro-batch device time
-        self._pending: list[tuple[int, np.ndarray]] = []
+        self._lock = threading.Lock()
+        self._pending: list[tuple[int, np.ndarray, Optional[int]]] = []
         self._submit_time: dict[int, float] = {}
         self._next_id = 0
         self.queries_served = 0
@@ -53,65 +64,89 @@ class ServeEngine:
         self.requests_served = 0
 
     # -- request side ------------------------------------------------------
-    def submit(self, queries) -> int:
-        """Enqueue a block of queries; returns the request id."""
+    def submit(self, queries, nprobe: Optional[int] = None) -> int:
+        """Enqueue a block of queries; returns the request id.
+
+        Thread-safe.  ``nprobe`` overrides the index's probe width for this
+        request only (IVF indexes; rejected for indexes without one).
+        """
         q = np.asarray(queries, dtype=np.float32)
         if q.ndim == 1:
             q = q[None, :]
         if q.ndim != 2:
             raise ValueError(f"queries must be (n, d) or (d,), got {q.shape}")
-        request_id = self._next_id
-        self._next_id += 1
-        self._pending.append((request_id, q))
-        self._submit_time[request_id] = time.perf_counter()
+        if nprobe is not None:
+            if getattr(self.index, "nprobe", None) is None:
+                raise ValueError("per-request nprobe needs an IVF index; "
+                                 f"{type(self.index).__name__} has none")
+            if nprobe < 1:
+                raise ValueError("nprobe must be ≥ 1")
+        now = time.perf_counter()
+        with self._lock:
+            request_id = self._next_id
+            self._next_id += 1
+            self._pending.append((request_id, q, nprobe))
+            self._submit_time[request_id] = now
         return request_id
 
     @property
     def pending(self) -> int:
-        return sum(q.shape[0] for _, q in self._pending)
+        with self._lock:
+            return sum(q.shape[0] for _, q, _ in self._pending)
 
     # -- dispatch side -----------------------------------------------------
     def drain(self) -> dict[int, ServeResult]:
         """Serve everything pending; returns {request_id: ServeResult}."""
-        if not self._pending:
-            return {}
-        pending, self._pending = self._pending, []
+        with self._lock:
+            if not self._pending:
+                return {}
+            pending, self._pending = self._pending, []
+            submit_time = {rid: self._submit_time.pop(rid)
+                           for rid, _, _ in pending}
         out_scores: dict[int, np.ndarray] = {}
         out_ids: dict[int, np.ndarray] = {}
-        for rid, q in pending:
+        for rid, q, _ in pending:
             n = q.shape[0]
             out_scores[rid] = np.empty((n, 0), np.float32)
             out_ids[rid] = np.empty((n, 0), np.int32)
 
-        for batch in self.batcher.form(pending):
-            t0 = time.perf_counter()
-            vals, ids = self.index.search(batch.queries, self.k)
-            vals, ids = np.asarray(vals), np.asarray(ids)   # blocks
-            self.latency.record(time.perf_counter() - t0)
-            self.batches_served += 1
-            self.queries_served += batch.n_valid
-            if self.shadow is not None:
-                self.shadow.observe(batch.queries[:batch.n_valid],
-                                    ids[:batch.n_valid], self.k)
-            for s in batch.slices:
-                rid, rows = s.request_id, s.stop - s.start
-                if out_scores[rid].shape[1] == 0:
-                    k_out = vals.shape[1]
-                    out_scores[rid] = np.empty(
-                        (out_scores[rid].shape[0], k_out), np.float32)
-                    out_ids[rid] = np.empty(
-                        (out_ids[rid].shape[0], k_out), np.int32)
-                out_scores[rid][s.req_start: s.req_start + rows] = \
-                    vals[s.start: s.stop]
-                out_ids[rid][s.req_start: s.req_start + rows] = \
-                    ids[s.start: s.stop]
+        # micro-batch per nprobe group: one compiled graph per batch.
+        # FIFO order is preserved within each group.
+        groups: dict[Optional[int], list[tuple[int, np.ndarray]]] = {}
+        for rid, q, nprobe in pending:
+            groups.setdefault(nprobe, []).append((rid, q))
+
+        for nprobe, items in groups.items():
+            kwargs = {} if nprobe is None else {"nprobe": nprobe}
+            for batch in self.batcher.form(items):
+                t0 = time.perf_counter()
+                vals, ids = self.index.search(batch.queries, self.k, **kwargs)
+                vals, ids = np.asarray(vals), np.asarray(ids)   # blocks
+                self.latency.record(time.perf_counter() - t0)
+                self.batches_served += 1
+                self.queries_served += batch.n_valid
+                if self.shadow is not None:
+                    self.shadow.observe(batch.queries[:batch.n_valid],
+                                        ids[:batch.n_valid], self.k)
+                for s in batch.slices:
+                    rid, rows = s.request_id, s.stop - s.start
+                    if out_scores[rid].shape[1] == 0:
+                        k_out = vals.shape[1]
+                        out_scores[rid] = np.empty(
+                            (out_scores[rid].shape[0], k_out), np.float32)
+                        out_ids[rid] = np.empty(
+                            (out_ids[rid].shape[0], k_out), np.int32)
+                    out_scores[rid][s.req_start: s.req_start + rows] = \
+                        vals[s.start: s.stop]
+                    out_ids[rid][s.req_start: s.req_start + rows] = \
+                        ids[s.start: s.stop]
 
         done = time.perf_counter()
         results = {}
-        for rid, _ in pending:
+        for rid, _, _ in pending:
             results[rid] = ServeResult(
                 request_id=rid, scores=out_scores[rid], ids=out_ids[rid],
-                latency_s=done - self._submit_time.pop(rid))
+                latency_s=done - submit_time[rid])
         self.requests_served += len(results)
         return results
 

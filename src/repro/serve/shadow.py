@@ -15,6 +15,7 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.retrieval.index import CompressedIndex, DenseIndex
+from repro.retrieval.rprecision import recall_at_k
 
 
 class ShadowScorer:
@@ -60,9 +61,7 @@ class ShadowScorer:
         want = np.asarray(want)
         got = np.asarray(ids)
         k_eff = min(k, got.shape[1], want.shape[1])  # search clamps k to n_docs
-        overlap = float(np.mean([
-            len(set(g.tolist()) & set(w.tolist())) / k_eff
-            for g, w in zip(got, want)]))
+        overlap = recall_at_k(got[:, :k_eff], want[:, :k_eff])
         self.overlaps.append(overlap)
         return overlap
 

@@ -12,7 +12,7 @@ from __future__ import annotations
 import pytest
 
 try:
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import assume, given, settings, strategies as st
     HAS_HYPOTHESIS = True
 except ImportError:                      # pragma: no cover - env dependent
     HAS_HYPOTHESIS = False
@@ -32,6 +32,9 @@ except ImportError:                      # pragma: no cover - env dependent
     def settings(*_args, **_kwargs):
         return lambda fn: fn
 
+    def assume(*_args, **_kwargs):
+        return True
+
     class _AnyStrategy:
         """st.<anything>(...) placeholder; only consumed by the stub given."""
 
@@ -40,4 +43,4 @@ except ImportError:                      # pragma: no cover - env dependent
 
     st = _AnyStrategy()
 
-__all__ = ["HAS_HYPOTHESIS", "given", "settings", "st"]
+__all__ = ["HAS_HYPOTHESIS", "assume", "given", "settings", "st"]

@@ -1,0 +1,138 @@
+"""Golden-ranking regressions: frozen top-k ids for every search path.
+
+A fixed-seed corpus is searched through exact float, int8, 1-bit, and IVF
+paths; the resulting top-k ids (and scores) are frozen in
+``tests/golden/rankings.json``.  Any ranking drift from a future kernel or
+refactor PR fails these tests loudly instead of silently shifting quality.
+
+Regenerate (only when a ranking change is *intended*)::
+
+    PYTHONPATH=src python tests/test_golden_rankings.py --regen
+
+Regeneration refuses corpora whose score gaps at the k-boundary are inside
+float noise, so the frozen ids stay stable across BLAS/XLA versions.
+"""
+
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "rankings.json")
+K = 5
+N_QUERIES = 8
+
+
+def _kb():
+    from repro.data import make_dpr_like_kb
+    return make_dpr_like_kb(n_queries=16, n_docs=800, d=64, r_eff=32,
+                            seed=2026)
+
+
+def _probe_margin(ivf, q) -> float:
+    """Min gap between the last-probed and first-unprobed centroid score —
+    the routing decision's distance from float noise."""
+    from repro.retrieval.topk import similarity
+    cs = np.asarray(similarity(ivf.encode_queries(q), ivf.centroids,
+                               ivf.sim), np.float64)
+    cs = np.sort(cs, axis=1)[:, ::-1]
+    return float(np.min(cs[:, ivf.nprobe - 1] - cs[:, ivf.nprobe]))
+
+
+def _build_cases():
+    """({case: (scores (Q, K), ids (Q, K))}, {ivf case: probe margin})."""
+    from repro.core import (CenterNorm, CompressionPipeline, Int8Quantizer,
+                            OneBitQuantizer, PCA)
+    from repro.retrieval import CompressedIndex, DenseIndex, IVFFlatIndex
+
+    kb = _kb()
+    q = kb.queries[:N_QUERIES]
+    out = {}
+    margins = {}
+
+    idx = DenseIndex(kb.docs)
+    out["exact_float"] = idx.search(q, K)
+
+    pipe = CompressionPipeline([CenterNorm(), PCA(32), Int8Quantizer()])
+    int8 = CompressedIndex.build(kb.docs, kb.queries, pipe, backend="jnp")
+    out["exact_int8"] = int8.search(q, K)
+
+    pipe = CompressionPipeline([CenterNorm(), OneBitQuantizer(0.5)])
+    onebit = CompressedIndex.build(kb.docs, kb.queries, pipe, backend="jnp")
+    out["exact_onebit"] = onebit.search(q, K)
+
+    ivf = IVFFlatIndex(nlist=16, nprobe=8, kmeans_iters=10).fit(kb.docs)
+    out["ivf_float"] = ivf.search(q, K)
+    margins["ivf_float"] = _probe_margin(ivf, q)
+
+    onebit_ivf = onebit.to_ivf(nlist=16, nprobe=8, kmeans_iters=10)
+    out["ivf_onebit"] = onebit_ivf.search(q, K)
+    margins["ivf_onebit"] = _probe_margin(onebit_ivf, q)
+
+    return ({name: (np.asarray(v, np.float64), np.asarray(i, np.int64))
+             for name, (v, i) in out.items()}, margins)
+
+
+def _load_golden() -> dict:
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def built_cases():
+    return _build_cases()[0]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("case", ["exact_float", "exact_int8",
+                                  "exact_onebit", "ivf_float",
+                                  "ivf_onebit"])
+def test_golden_ranking(built_cases, case):
+    golden = _load_golden()["cases"][case]
+    vals, ids = built_cases[case]
+    np.testing.assert_array_equal(
+        ids, np.asarray(golden["ids"]),
+        err_msg=f"{case}: top-{K} ids drifted from tests/golden/ — if the "
+                "ranking change is intended, regenerate with "
+                "`python tests/test_golden_rankings.py --regen`")
+    np.testing.assert_allclose(vals, np.asarray(golden["scores"]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def _regen() -> None:
+    cases, margins = _build_cases()
+    payload = {"corpus": {"n_docs": 800, "d": 64, "seed": 2026,
+                          "n_queries": N_QUERIES, "k": K},
+               "cases": {}}
+    for name, margin in margins.items():
+        # IVF probe sets must also clear noise, or a BLAS/XLA upgrade could
+        # flip which lists are probed and shift ids with no intended change
+        assert margin > 1e-4, f"{name}: probe boundary inside float noise"
+    for name, (vals, ids) in cases.items():
+        if name in ("exact_float", "ivf_float"):
+            # float-GEMM boundary gaps must clear cross-platform noise
+            # (int8/sign-dot scores live on coarse discrete grids and are
+            # covered by the probe-margin check above instead)
+            finite = vals[np.isfinite(vals)]
+            gaps = np.abs(np.diff(np.sort(finite)))
+            assert np.min(gaps[gaps > 0]) > 1e-4, f"{name}: tie-prone corpus"
+        payload["cases"][name] = {
+            "ids": ids.tolist(),
+            "scores": [[round(float(v), 6) for v in row] for row in vals]}
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"wrote {GOLDEN_PATH} ({len(cases)} cases)")
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        print(__doc__)

@@ -1,0 +1,200 @@
+"""Quantized IVF search: backend parity, nprobe semantics, degenerate
+corpora, and property-based invariants (hypothesis optional)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import assume, given, settings, st
+
+from repro.core import CenterNorm, CompressionPipeline, OneBitQuantizer, PCA
+from repro.data import make_dpr_like_kb
+from repro.retrieval import (CompressedIndex, DenseIndex, IVFFlatIndex,
+                             IVFIndex, backend_tail_stages,
+                             recall_at_k as _recall)
+
+BACKENDS = tuple(backend_tail_stages())
+
+
+@pytest.fixture(scope="module")
+def kb():
+    return make_dpr_like_kb(n_queries=64, n_docs=1500, d=64, r_eff=32)
+
+
+# ---------------------------------------------------------------------------
+# full-probe == exact, per scorer backend
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_full_probe_matches_exact_search(kb, backend):
+    """nprobe == nlist scores every stored doc: rankings must equal the
+    backend's exact search bit-for-bit (ties break on doc id in both)."""
+    tail = backend_tail_stages()[backend]
+    pipe = CompressionPipeline([CenterNorm(), PCA(32)] + tail)
+    idx = CompressedIndex.build(kb.docs, kb.queries, pipe, backend="jnp")
+    _, want = idx.search(kb.queries[:16], 10)
+    ivf = idx.to_ivf(nlist=16, nprobe=16, kmeans_iters=8)
+    vals, got = ivf.search(kb.queries[:16], 10)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert np.all(np.asarray(got) >= 0)
+
+
+@pytest.mark.slow
+def test_onebit_ivf_recall_acceptance():
+    """1-bit IVF at nprobe = nlist/2 keeps ≥ 0.9 recall@10 vs exact 1-bit
+    search (the PR's acceptance bar) on the synthetic DPR-like corpus."""
+    kb = make_dpr_like_kb(n_queries=64, n_docs=4000, d=128, r_eff=48)
+    pipe = CompressionPipeline([CenterNorm(), OneBitQuantizer(0.5)])
+    idx = CompressedIndex.build(kb.docs, kb.queries, pipe, backend="jnp")
+    _, want = idx.search(kb.queries[:32], 10)
+    ivf = idx.to_ivf(nlist=32, nprobe=16)
+    _, got = ivf.search(kb.queries[:32], 10)
+    assert _recall(got, want) >= 0.9
+    # the promotion shares storage — no re-encode, no extra copy
+    assert ivf.storage is idx.storage
+    assert ivf.nbytes == idx.nbytes
+
+
+# ---------------------------------------------------------------------------
+# nprobe semantics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_per_call_nprobe_override(kb):
+    exact = DenseIndex(kb.docs)
+    _, want = exact.search(kb.queries[:32], 10)
+    ivf = IVFIndex(nlist=32, nprobe=4, kmeans_iters=8).fit(kb.docs)
+    recalls = [_recall(ivf.search(kb.queries[:32], 10, nprobe=p)[1], want)
+               for p in (1, 8, 32)]
+    assert recalls == sorted(recalls)          # wider probe never hurts
+    assert recalls[-1] == 1.0                  # nprobe == nlist is exact
+    # the constructor default is used when no override is given
+    _, d4 = ivf.search(kb.queries[:32], 10)
+    _, e4 = ivf.search(kb.queries[:32], 10, nprobe=4)
+    np.testing.assert_array_equal(np.asarray(d4), np.asarray(e4))
+
+
+def test_bad_nprobe_rejected(kb):
+    ivf = IVFFlatIndex(nlist=4, nprobe=2, kmeans_iters=2).fit(kb.docs[:64])
+    with pytest.raises(ValueError):
+        ivf.search(kb.queries[:4], 3, nprobe=0)
+    with pytest.raises(ValueError):
+        IVFIndex(nlist=0)
+
+
+# ---------------------------------------------------------------------------
+# degenerate corpora (the seed's empty-bucket / padding crash path)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_docs", [1, 2, 5])
+def test_small_corpus_nlist_exceeds_docs(n_docs):
+    """nlist > n_docs must fit cleanly (effective nlist clamps to the
+    corpus) and full-probe search must return every doc, no −1 ids."""
+    rng = np.random.default_rng(3)
+    docs = jnp.asarray(rng.standard_normal((n_docs, 32)), jnp.float32)
+    queries = jnp.asarray(rng.standard_normal((4, 32)), jnp.float32)
+    ivf = IVFFlatIndex(nlist=16, nprobe=16, kmeans_iters=3).fit(docs)
+    assert ivf.nlist == n_docs                 # clamped
+    vals, ids = ivf.search(queries, 10)
+    assert ids.shape == (4, n_docs)            # min(k, n_docs) columns
+    assert np.all(np.asarray(ids) >= 0)
+    _, want = DenseIndex(docs).search(queries, 10)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(want))
+
+
+def test_mutating_source_index_after_to_ivf_is_rejected():
+    """to_ivf shares the source index's storage: growing the source
+    afterwards must fail loudly, not silently miss the new docs."""
+    rng = np.random.default_rng(11)
+    docs = jnp.asarray(rng.standard_normal((100, 16)), jnp.float32)
+    pipe = CompressionPipeline([CenterNorm(), OneBitQuantizer(0.5)])
+    idx = CompressedIndex.build(docs, docs[:8], pipe)
+    ivf = idx.to_ivf(nlist=4, nprobe=4, kmeans_iters=3)
+    ivf.search(docs[:2], 3)                    # fine while in sync
+    idx.add(jnp.asarray(rng.standard_normal((5, 16)), jnp.float32))
+    with pytest.raises(ValueError, match="changed since to_ivf"):
+        ivf.search(docs[:2], 3)
+    ivf.fit(docs)                              # refit owns fresh storage
+    ivf.search(docs[:2], 3)
+
+
+def test_refit_on_larger_corpus_restores_requested_nlist():
+    """The per-fit nlist clamp must not stick: a small first fit followed
+    by a refit on a big corpus gets the configured list count back."""
+    rng = np.random.default_rng(9)
+    ivf = IVFFlatIndex(nlist=16, nprobe=16, kmeans_iters=3)
+    ivf.fit(jnp.asarray(rng.standard_normal((3, 8)), jnp.float32))
+    assert ivf.nlist == 3
+    ivf.fit(jnp.asarray(rng.standard_normal((200, 8)), jnp.float32))
+    assert ivf.nlist == 16
+
+
+def test_partial_probe_pads_unreachable_slots():
+    """With a deliberately narrow probe the candidate pool can be smaller
+    than k: those slots must come back as (−inf, −1), not garbage."""
+    rng = np.random.default_rng(4)
+    docs = jnp.asarray(rng.standard_normal((40, 16)), jnp.float32)
+    queries = jnp.asarray(rng.standard_normal((3, 16)), jnp.float32)
+    ivf = IVFFlatIndex(nlist=20, nprobe=1, kmeans_iters=5).fit(docs)
+    vals, ids = ivf.search(queries, 10)
+    vals, ids = np.asarray(vals), np.asarray(ids)
+    assert ids.shape == (3, 10)
+    assert np.all((ids >= 0) == np.isfinite(vals))
+    assert np.all(np.isneginf(vals[ids < 0]))
+
+
+def test_empty_corpus_raises():
+    with pytest.raises(ValueError):
+        IVFFlatIndex(nlist=4).fit(jnp.zeros((0, 8), jnp.float32))
+
+
+def test_add_routes_to_existing_centroids(kb):
+    docs = kb.docs[:600]
+    ivf = IVFFlatIndex(nlist=8, nprobe=8, kmeans_iters=5).fit(docs[:500])
+    ivf.add(docs[500:])
+    assert len(ivf) == 600
+    _, want = DenseIndex(docs).search(kb.queries[:8], 5)
+    _, got = ivf.search(kb.queries[:8], 5)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# property-based invariants (skip cleanly without hypothesis)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000))
+def test_recall_monotone_in_nprobe(seed):
+    """recall@k vs exact is non-decreasing in nprobe: probe sets are nested
+    (stable top-k prefix) and the (score, id) ranking is a total order."""
+    rng = np.random.default_rng(seed)
+    docs = jnp.asarray(rng.standard_normal((300, 32)), jnp.float32)
+    queries = jnp.asarray(rng.standard_normal((8, 32)), jnp.float32)
+    _, want = DenseIndex(docs).search(queries, 5)
+    ivf = IVFIndex(nlist=8, nprobe=8, kmeans_iters=5).fit(docs)
+    recalls = [_recall(ivf.search(queries, 5, nprobe=p)[1], want)
+               for p in (1, 2, 4, 8)]
+    assert recalls == sorted(recalls)
+
+
+@pytest.mark.slow
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000))
+def test_full_probe_reproduces_exact_rankings(seed):
+    """nprobe == nlist equals exact search on ties-free inputs."""
+    rng = np.random.default_rng(seed)
+    docs = jnp.asarray(rng.standard_normal((200, 24)), jnp.float32)
+    queries = jnp.asarray(rng.standard_normal((6, 24)), jnp.float32)
+    scores = np.asarray(queries @ docs.T)
+    top = -np.sort(-scores, axis=1)[:, :7]
+    assume(float(np.min(np.abs(np.diff(top, axis=1)))) > 1e-4)  # ties-free
+    _, want = DenseIndex(docs).search(queries, 6)
+    ivf = IVFIndex(nlist=6, nprobe=6, kmeans_iters=5).fit(docs)
+    _, got = ivf.search(queries, 6)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

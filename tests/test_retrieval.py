@@ -94,6 +94,7 @@ def test_compressed_index_pallas_backend_agrees(kb):
     np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
 
 
+@pytest.mark.slow
 def test_ivf_recall(kb):
     exact = DenseIndex(kb.docs)
     _, want = exact.search(kb.queries[:32], 10)
@@ -104,6 +105,7 @@ def test_ivf_recall(kb):
     assert recall > 0.8
 
 
+@pytest.mark.slow
 def test_ivf_full_probe_is_exact(kb):
     exact = DenseIndex(kb.docs)
     _, want = exact.search(kb.queries[:16], 5)

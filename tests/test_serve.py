@@ -1,11 +1,14 @@
 """repro.serve: micro-batcher, engine, shadow scoring, metrics."""
 
+import threading
+from collections import Counter
+
 import numpy as np
 import pytest
 
 from repro.core import CenterNorm, CompressionPipeline, Int8Quantizer, PCA
 from repro.data import make_dpr_like_kb
-from repro.retrieval import CompressedIndex, DenseIndex
+from repro.retrieval import CompressedIndex, DenseIndex, IVFFlatIndex
 from repro.serve import (LatencyStats, MicroBatcher, ServeEngine,
                          ShadowScorer)
 from repro.serve.batcher import bucket_rows
@@ -130,6 +133,79 @@ def test_engine_rejects_bad_shapes(kb):
     engine = ServeEngine(DenseIndex(kb.docs), k=5)
     with pytest.raises(ValueError):
         engine.submit(np.ones((2, 3, 4), np.float32))
+
+
+def test_engine_concurrent_producers_lose_nothing(kb):
+    """Many producer threads submit while the main thread drains: every
+    request must come back exactly once and the counters must balance."""
+    idx = DenseIndex(kb.docs)
+    engine = ServeEngine(idx, k=5, batcher=MicroBatcher(max_batch=32))
+    queries = np.asarray(kb.queries)
+    n_threads, per_thread = 8, 25
+    submitted: list[dict[int, int]] = [dict() for _ in range(n_threads)]
+
+    def producer(t):
+        rng = np.random.default_rng(t)
+        for _ in range(per_thread):
+            n = int(rng.integers(1, 5))
+            off = int(rng.integers(0, 200))
+            rid = engine.submit(queries[off: off + n])
+            submitted[t][rid] = n
+
+    threads = [threading.Thread(target=producer, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    seen: Counter = Counter()
+    results = {}
+    while any(th.is_alive() for th in threads) or engine.pending:
+        out = engine.drain()
+        seen.update(out.keys())
+        results.update(out)
+    for th in threads:
+        th.join()
+    out = engine.drain()                       # anything racing the last check
+    seen.update(out.keys())
+    results.update(out)
+
+    want = {}
+    for d in submitted:
+        want.update(d)
+    assert len(want) == n_threads * per_thread          # ids never collided
+    assert set(results) == set(want)                    # nothing lost
+    assert all(c == 1 for c in seen.values())           # nothing duplicated
+    for rid, n in want.items():
+        assert results[rid].ids.shape == (n, 5)
+    total_rows = sum(want.values())
+    stats = engine.stats()
+    assert stats["requests_served"] == n_threads * per_thread
+    assert stats["queries_served"] == total_rows
+    assert stats["count"] == stats["batches_served"]    # LatencyStats agrees
+    assert engine.pending == 0
+
+
+def test_engine_ivf_per_request_nprobe(kb):
+    """An IVF-backed engine honours a per-request probe-width override and
+    batches per nprobe value (one compiled graph per batch)."""
+    ivf = IVFFlatIndex(nlist=16, nprobe=16, kmeans_iters=5).fit(kb.docs)
+    engine = ServeEngine(ivf, k=5, batcher=MicroBatcher(max_batch=64))
+    q = np.asarray(kb.queries[:8])
+    r_default = engine.submit(q)
+    r_narrow = engine.submit(q, nprobe=1)
+    results = engine.drain()
+    assert engine.batches_served == 2          # nprobe groups never coalesce
+    _, want_default = ivf.search(q, 5)
+    _, want_narrow = ivf.search(q, 5, nprobe=1)
+    np.testing.assert_array_equal(results[r_default].ids,
+                                  np.asarray(want_default))
+    np.testing.assert_array_equal(results[r_narrow].ids,
+                                  np.asarray(want_narrow))
+
+
+def test_engine_rejects_nprobe_on_non_ivf_index(kb):
+    engine = ServeEngine(DenseIndex(kb.docs), k=5)
+    with pytest.raises(ValueError):
+        engine.submit(np.ones(64, np.float32), nprobe=4)
 
 
 def test_latency_stats_empty_and_filled():

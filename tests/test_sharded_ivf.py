@@ -1,0 +1,85 @@
+"""ShardedIVFIndex ≡ IVFIndex on a 1×8 CPU mesh, per backend and nprobe.
+
+Same subprocess pattern as tests/test_sharded_index.py: forced host devices
+in a child process, one run checks every scorer backend at several probe
+widths, parametrized tests assert on the per-backend verdict lines.  Exact
+id equality is required — the (score desc, id asc) total order makes the
+shard merge deterministic even for the tie-heavy 1-bit backend.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, SRC)
+
+from repro.retrieval import backend_tail_stages  # noqa: E402
+
+BACKENDS = tuple(backend_tail_stages())
+
+_CHECK_ALL = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import CenterNorm, CompressionPipeline, PCA
+    from repro.launch.mesh import make_test_mesh
+    from repro.retrieval import (IVFIndex, ShardedIVFIndex,
+                                 backend_tail_stages)
+
+    rng = np.random.default_rng(0)
+    docs = jnp.asarray(rng.standard_normal((515, 64)), jnp.float32)
+    queries = jnp.asarray(rng.standard_normal((16, 64)), jnp.float32)
+    mesh = make_test_mesh(8, model=8)          # 1 x 8: pure doc sharding
+
+    for name, tail in backend_tail_stages().items():
+        pipe = CompressionPipeline([CenterNorm(), PCA(32)] + tail)
+        single = IVFIndex.build(docs, queries, pipe, nlist=12, nprobe=6,
+                                kmeans_iters=8, backend="jnp")
+        sharded = ShardedIVFIndex(single, mesh)
+        ok_ids = ok_vals = True
+        for nprobe in (3, 6, 12):
+            v1, i1 = single.search(queries, 10, nprobe=nprobe)
+            v2, i2 = sharded.search(queries, 10, nprobe=nprobe)
+            ok_ids &= np.array_equal(np.asarray(i1), np.asarray(i2))
+            ok_vals &= np.allclose(np.asarray(v1), np.asarray(v2),
+                                   rtol=1e-5, atol=1e-5)
+        print(f"BACKEND {name} ids={ok_ids} vals={ok_vals}")
+"""
+
+
+@pytest.fixture(scope="module")
+def parity_output():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(_CHECK_ALL)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sharded_ivf_matches_single_host(parity_output, backend):
+    assert f"BACKEND {backend} ids=True vals=True" in parity_output
+
+
+def test_mutating_wrapped_ivf_is_rejected():
+    """The list partition is frozen at construction: growing the wrapped
+    IVFIndex afterwards must fail loudly, not silently drop the new docs."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.launch.mesh import make_test_mesh
+    from repro.retrieval import IVFIndex, ShardedIVFIndex
+
+    rng = np.random.default_rng(3)
+    docs = jnp.asarray(rng.standard_normal((64, 16)), jnp.float32)
+    ivf = IVFIndex(nlist=4, nprobe=4, kmeans_iters=3).fit(docs)
+    sharded = ShardedIVFIndex(ivf, make_test_mesh(1, model=1))
+    ivf.add(jnp.asarray(rng.standard_normal((8, 16)), jnp.float32))
+    with pytest.raises(ValueError, match="changed since sharding"):
+        sharded.search(docs[:2], 3)
