@@ -1,26 +1,41 @@
-"""Quickstart: compress a KB index 24× and serve queries from it.
+"""Quickstart: compress a KB index 24×, save the artifact, serve from it.
 
     PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py --n-docs 2000 --n-queries 64
 
 Builds a DPR-like synthetic KB, fits the paper's best practical pipeline
-(center+norm → PCA-128 → center+norm → int8), and compares retrieval
-quality + storage against the uncompressed index.
+(center+norm → PCA-128 → center+norm → int8) through the declarative
+:class:`IndexSpec` / :func:`build_index` API, compares retrieval quality +
+storage against the uncompressed index, then round-trips the full index
+artifact through ``save``/``load_index`` — the cold-start path a serve
+process uses (no raw corpus, no re-fit).
 """
 
+import argparse
+import os
 import sys
+import tempfile
 import time
 
 import numpy as np
 
-from repro.core import (CenterNorm, CompressionPipeline, Int8Quantizer, PCA)
+from repro.core import CenterNorm
 from repro.data import make_dpr_like_kb
-from repro.retrieval import CompressedIndex, DenseIndex, r_precision
+from repro.retrieval import (DenseIndex, IndexSpec, build_index, load_index,
+                             r_precision)
 from repro.utils import human_bytes
 
 
-def main() -> None:
-    print("1) synthesizing DPR-like KB (50k docs × 768 dims) ...")
-    kb = make_dpr_like_kb(n_queries=1000, n_docs=50_000)
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-docs", type=int, default=50_000)
+    ap.add_argument("--n-queries", type=int, default=1000)
+    ap.add_argument("--dim", type=int, default=128,
+                    help="PCA target dimensionality")
+    args = ap.parse_args(argv)
+
+    print(f"1) synthesizing DPR-like KB ({args.n_docs} docs x 768 dims) ...")
+    kb = make_dpr_like_kb(n_queries=args.n_queries, n_docs=args.n_docs)
     print(f"   doc L2 norm  {kb.meta['doc_l2']:.1f} "
           f"(paper: 12.3)   query L2 {kb.meta['query_l2']:.1f} (paper: 9.3)")
 
@@ -32,17 +47,29 @@ def main() -> None:
     print(f"   R-Precision {base_rp:.3f}   index size "
           f"{human_bytes(exact.nbytes)}")
 
-    print("3) fitting the 24x pipeline (center+norm → PCA-128 → "
-          "center+norm → int8) ...")
-    pipe = CompressionPipeline([CenterNorm(), PCA(128), CenterNorm(),
-                                Int8Quantizer()])
+    print(f"3) building the 24x index from a declarative spec "
+          f"(center+norm → PCA-{args.dim} → center+norm → int8) ...")
+    # the paper's exact stage order: post-processing *before* the trailing
+    # quantizer, so storage is real int8 codes (24x) on the kernel path
+    spec = IndexSpec(stages=(("CenterNorm", {}), ("PCA", {"dim": args.dim}),
+                             ("CenterNorm", {}), ("Int8Quantizer", {})))
     t0 = time.time()
-    idx = CompressedIndex.build(kb.docs, kb.queries, pipe)
+    idx = build_index(spec, kb.docs, kb.queries)
     print(f"   fitted + encoded in {time.time() - t0:.1f}s; "
           f"index size {human_bytes(idx.nbytes)} "
           f"({exact.nbytes / idx.nbytes:.0f}x smaller)")
 
-    print("4) serving queries from the compressed index ...")
+    print("4) save artifact, cold-start reload (no corpus, no re-fit) ...")
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "kb_index.npz")
+        idx.save(path)
+        t0 = time.time()
+        idx = load_index(path)
+        stages = " -> ".join(n for n, _ in idx.spec.stages)
+        print(f"   artifact {human_bytes(os.path.getsize(path))}, "
+              f"loaded in {time.time() - t0:.2f}s ({stages})")
+
+    print("5) serving queries from the reloaded compressed index ...")
     t0 = time.time()
     _, ids = idx.search(kb.queries, k=2)
     dt = time.time() - t0

@@ -1,23 +1,28 @@
 """End-to-end serving driver: a request stream against a compressed,
-(optionally sharded) KB index through the :mod:`repro.serve` engine.
+(optionally IVF) KB index artifact through the :mod:`repro.serve` engine.
 
     PYTHONPATH=src python examples/serve_compressed.py --requests 50
     PYTHONPATH=src python examples/serve_compressed.py --method pca_onebit
 
-Simulates a request stream (blocks of queries submitted to the engine),
-which coalesces them into padded micro-batches, dispatches to the index,
-measures latency percentiles, and validates quality online against an
-exact-search shadow index (the standard "shadow scoring" pattern).
+The index is described declaratively (:class:`IndexSpec`), built once with
+:func:`build_index`, saved to a single ``.npz`` artifact, and the engine
+cold-starts from that artifact (``ServeEngine.from_artifact``) exactly like
+a production serve process would — no raw corpus, no re-fit.  The driver
+then simulates a request stream (blocks of queries submitted to the
+engine), which coalesces them into padded micro-batches, dispatches to the
+index, measures latency percentiles, and validates quality online against
+an exact-search shadow index (the standard "shadow scoring" pattern).
 """
 
 import argparse
+import os
 import sys
+import tempfile
 
 import numpy as np
 
-from repro.core import build_method
 from repro.data import make_dpr_like_kb
-from repro.retrieval import CompressedIndex
+from repro.retrieval import IndexSpec, build_index
 from repro.serve import MicroBatcher, ServeEngine, ShadowScorer
 from repro.utils import human_bytes
 
@@ -39,7 +44,7 @@ def main(argv=None) -> None:
                     help="submit N requests between drains (N>1 shows the "
                          "micro-batcher coalescing requests)")
     ap.add_argument("--ivf-nlist", type=int, default=0,
-                    help="promote the index to IVF with this many lists "
+                    help="build an IVF index with this many lists "
                          "(0 = exact search)")
     ap.add_argument("--ivf-nprobe", type=int, default=0,
                     help="default probe width (0 = nlist/2); every 4th "
@@ -50,26 +55,35 @@ def main(argv=None) -> None:
     kb = make_dpr_like_kb(n_queries=args.requests * args.batch,
                           n_docs=args.n_docs)
 
-    print(f"building compressed index [{args.method}] ...")
-    pipe = build_method(args.method, dim, post=not args.no_post)
-    idx = CompressedIndex.build(kb.docs, kb.queries[:512], pipe)
+    ivf = None
+    full_probe = None
+    if args.ivf_nlist:
+        nprobe = args.ivf_nprobe or max(1, args.ivf_nlist // 2)
+        ivf = (args.ivf_nlist, nprobe)
+
+    spec = IndexSpec(method=args.method, dim=dim, post=not args.no_post,
+                     ivf=ivf)
+    print(f"building index from spec [{args.method}"
+          f"{', ivf=' + str(ivf) if ivf else ''}] ...")
+    idx = build_index(spec, kb.docs, kb.queries[:512])
     print(f"  scorer backend: {idx.scorer.name}")
     shadow = ShadowScorer.for_compressed(idx, kb.docs, every=5)
     print(f"  index {human_bytes(idx.nbytes)} vs shadow "
           f"{human_bytes(shadow.index.nbytes)} "
           f"({shadow.index.nbytes / idx.nbytes:.0f}x)")
-
-    full_probe = None
-    if args.ivf_nlist:
-        nprobe = args.ivf_nprobe or max(1, args.ivf_nlist // 2)
-        idx = idx.to_ivf(nlist=args.ivf_nlist, nprobe=nprobe)
+    if ivf:
         full_probe = idx.nlist
-        print(f"  IVF: nlist={idx.nlist} nprobe={nprobe} "
+        print(f"  IVF: nlist={idx.nlist} nprobe={idx.nprobe} "
               f"(every 4th request forces nprobe={full_probe})")
 
-    engine = ServeEngine(idx, k=args.k,
-                         batcher=MicroBatcher(max_batch=args.max_batch),
-                         shadow=shadow)
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "kb_index.npz")
+        idx.save(path)
+        print(f"  artifact {human_bytes(os.path.getsize(path))}; engine "
+              "cold-starts from it (no corpus, no re-fit)")
+        engine = ServeEngine.from_artifact(
+            path, k=args.k, batcher=MicroBatcher(max_batch=args.max_batch),
+            shadow=shadow)
 
     queries = np.asarray(kb.queries)
     served = 0

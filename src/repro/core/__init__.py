@@ -20,7 +20,10 @@ from repro.core.quantization import (FloatCast, Int8Quantizer,
 from repro.core.random_projection import (DimensionDrop, GaussianProjection,
                                           GreedyDimensionDrop,
                                           SparseProjection)
-from repro.core.registry import METHODS, build_method, method_compression_ratio
+from repro.core.registry import (METHODS, TRANSFORMS, build_method,
+                                 build_pipeline_from_spec, build_transform,
+                                 method_compression_ratio, pipeline_spec,
+                                 register_transform, transform_spec)
 
 __all__ = [
     "Autoencoder", "AutoencoderConfig", "PAPER_L1",
@@ -34,4 +37,6 @@ __all__ = [
     "DimensionDrop", "GaussianProjection", "GreedyDimensionDrop",
     "SparseProjection",
     "METHODS", "build_method", "method_compression_ratio",
+    "TRANSFORMS", "build_pipeline_from_spec", "build_transform",
+    "pipeline_spec", "register_transform", "transform_spec",
 ]

@@ -124,6 +124,9 @@ class Autoencoder(Transform):
         self.params: Optional[dict] = None
         self.loss_history: list[float] = []
 
+    def init_config(self):
+        return dataclasses.asdict(self.config)
+
     # -- fitting ------------------------------------------------------------
     def _fit_set(self, docs, queries):
         cfg = self.config
@@ -185,6 +188,12 @@ class Autoencoder(Transform):
             dec.append({"w": self.state[f"dec{i}_w"],
                         "b": self.state[f"dec{i}_b"]})
             i += 1
+        if self.fitted and not enc:
+            # layer count varies with the variant, so the static state_keys
+            # check can't cover it — a fitted AE must have ≥ 1 encoder layer
+            raise ValueError("Autoencoder.load_state: fitted state has no "
+                             f"enc0_w/enc0_b layers (keys: "
+                             f"{sorted(self.state)})")
         self.params = {"enc": enc, "dec": dec}
         return self
 

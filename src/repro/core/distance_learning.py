@@ -42,9 +42,20 @@ class SimilarityPreservingProjection(Transform):
 
     name = "distance_learning"
 
+    state_keys = ("w1", "b1")
+
     def __init__(self, config: DistanceLearnerConfig | None = None, **kw):
         super().__init__()
         self.config = config or DistanceLearnerConfig(**kw)
+        self.params = None
+
+    def init_config(self):
+        return dataclasses.asdict(self.config)
+
+    def load_state(self, sd):
+        super().load_state(sd)
+        self.params = dict(self.state) if self.fitted else None
+        return self
 
     def _apply(self, params, x):
         if "w2" in params:
@@ -115,6 +126,7 @@ class ContrastiveProjection(Transform):
     """InfoNCE over original-space nearest neighbours (paper §5.4, ¶2)."""
 
     name = "contrastive"
+    state_keys = ("w",)
 
     def __init__(self, dim: int = 128, lr: float = 1e-3, steps: int = 1000,
                  batch_size: int = 128, n_neighbors: int = 4,
@@ -123,6 +135,18 @@ class ContrastiveProjection(Transform):
         self.dim, self.lr, self.steps = dim, lr, steps
         self.batch_size, self.n_neighbors = batch_size, n_neighbors
         self.temperature, self.seed = temperature, seed
+        self.params = None
+
+    def init_config(self):
+        return {"dim": self.dim, "lr": self.lr, "steps": self.steps,
+                "batch_size": self.batch_size,
+                "n_neighbors": self.n_neighbors,
+                "temperature": self.temperature, "seed": self.seed}
+
+    def load_state(self, sd):
+        super().load_state(sd)
+        self.params = {"w": self.state["w"]} if self.fitted else None
+        return self
 
     def fit(self, docs, queries=None, rng=None):
         x = jnp.asarray(docs, jnp.float32)

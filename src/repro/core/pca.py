@@ -80,6 +80,7 @@ class PCA(Transform):
     """
 
     name = "pca"
+    state_keys = ("mean", "components", "eigenvalues")
 
     def __init__(self, dim: int, fit_on: str = "docs",
                  scale_components=None, max_fit_samples: Optional[int] = None):
@@ -94,6 +95,13 @@ class PCA(Transform):
             tuple(float(s) for s in scale_components)
             if scale_components is not None else None)
         self.max_fit_samples = max_fit_samples
+
+    def init_config(self):
+        return {"dim": self.dim, "fit_on": self.fit_on,
+                "scale_components": (list(self.scale_components)
+                                     if self.scale_components is not None
+                                     else None),
+                "max_fit_samples": self.max_fit_samples}
 
     # -- fitting -----------------------------------------------------------
     def _fit_set(self, docs, queries):

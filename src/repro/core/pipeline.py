@@ -25,7 +25,6 @@ from __future__ import annotations
 from typing import Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import quantization as quant
@@ -105,20 +104,34 @@ class CompressionPipeline:
         np.savez(path, **flat)
 
     def load(self, path: str) -> "CompressionPipeline":
+        """Load ``save`` output, routed through :meth:`load_state_dict`.
+
+        Every stage goes through its own ``load_state`` so per-stage
+        validation runs: a stateful stage whose keys are incomplete in the
+        file raises instead of coming back half-fitted.  (Stages with no
+        state in the file — Normalize, quantizer-style stateless transforms
+        — are loaded as fitted with empty state, which their ``state_keys``
+        check accepts only when they truly need none.)
+        """
         data = np.load(path)
+        per_stage: list[dict] = [{} for _ in self.transforms]
         for key in data.files:
             i_str, tname, k = key.split(":", 2)
             i = int(i_str)
-            if type(self.transforms[i]).__name__ != tname:
+            if not 0 <= i < len(self.transforms):
+                raise ValueError(
+                    f"pipeline file has stage index {i}, object has only "
+                    f"{len(self.transforms)} stages")
+            have = type(self.transforms[i]).__name__
+            if have != tname:
                 raise ValueError(
                     f"pipeline stage {i} mismatch: file has {tname}, "
-                    f"object has {type(self.transforms[i]).__name__}")
-            self.transforms[i].state[k] = jnp.asarray(data[key])
-            self.transforms[i].fitted = True
-        for t in self.transforms:
-            if hasattr(t, "load_state"):
-                t.load_state({"state": t.state, "fitted": True})
-        return self
+                    f"object has {have}")
+            per_stage[i][k] = data[key]
+        sd = {"types": [type(t).__name__ for t in self.transforms],
+              "stages": [{"name": t.name, "state": st, "fitted": True}
+                         for t, st in zip(self.transforms, per_stage)]}
+        return self.load_state_dict(sd)
 
     def __repr__(self) -> str:
         inner = ", ".join(type(t).__name__ for t in self.transforms)

@@ -26,9 +26,25 @@ class Transform:
 
     name: str = "identity"
 
+    #: state keys that must be present once fitted — ``load_state`` refuses
+    #: an incomplete dict instead of silently producing a broken transform.
+    state_keys: tuple[str, ...] = ()
+
     def __init__(self) -> None:
         self.state: dict[str, jax.Array] = {}
         self.fitted = False
+
+    # -- declarative reconstruction ----------------------------------------
+    def init_config(self) -> dict:
+        """Constructor kwargs that rebuild an equivalent (unfitted) instance.
+
+        Everything the transform needs *besides* fitted state — used by the
+        index artifact format (:mod:`repro.retrieval.api`) to reconstruct a
+        pipeline skeleton before loading state into it.  Values must be
+        JSON-serializable.  (Named ``init_config`` because several
+        transforms keep their config dataclass in ``self.config``.)
+        """
+        return {}
 
     # -- fitting ----------------------------------------------------------
     def fit(self, docs: jax.Array, queries: Optional[jax.Array] = None,
@@ -53,8 +69,16 @@ class Transform:
                 "fitted": self.fitted}
 
     def load_state(self, sd: dict) -> "Transform":
+        fitted = bool(sd["fitted"])
+        if fitted:
+            missing = set(self.state_keys) - set(sd["state"])
+            if missing:
+                raise ValueError(
+                    f"{type(self).__name__}.load_state: fitted state is "
+                    f"missing keys {sorted(missing)} "
+                    f"(have {sorted(sd['state'])})")
         self.state = {k: jnp.asarray(v) for k, v in sd["state"].items()}
-        self.fitted = bool(sd["fitted"])
+        self.fitted = fitted
         return self
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
@@ -73,6 +97,7 @@ class Center(Transform):
     """x ← x − mean;   means estimated separately for docs and queries."""
 
     name = "center"
+    state_keys = ("mean_docs", "mean_queries")
 
     def fit(self, docs, queries=None, rng=None):
         self.state["mean_docs"] = _mean(docs)
@@ -104,6 +129,7 @@ class ZScore(Transform):
     """x ← (x − mean) / std  (per-dimension; includes centering, App. A)."""
 
     name = "zscore"
+    state_keys = ("mean_docs", "std_docs", "mean_queries", "std_queries")
 
     def fit(self, docs, queries=None, rng=None):
         self.state["mean_docs"] = _mean(docs)
@@ -129,6 +155,7 @@ class CenterNorm(Transform):
     """
 
     name = "center_norm"
+    state_keys = ("mean_docs", "mean_queries")
 
     def fit(self, docs, queries=None, rng=None):
         self.state["mean_docs"] = _mean(docs)

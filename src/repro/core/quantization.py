@@ -66,6 +66,9 @@ class FloatCast(Transform):
         super().__init__()
         self.dtype = jnp.dtype(dtype)
 
+    def init_config(self):
+        return {"dtype": self.dtype.name}
+
     def fit(self, docs, queries=None, rng=None):
         self.fitted = True
         return self
@@ -92,11 +95,15 @@ class Int8Quantizer(Transform):
     """
 
     name = "int8"
+    state_keys = ("scale", "zero")
 
     def __init__(self, percentile: float = 100.0):
         super().__init__()
         # percentile < 100 clips outliers before fitting the range
         self.percentile = float(percentile)
+
+    def init_config(self):
+        return {"percentile": self.percentile}
 
     def fit(self, docs, queries=None, rng=None):
         x = docs.astype(jnp.float32)
@@ -140,6 +147,9 @@ class OneBitQuantizer(Transform):
     def __init__(self, offset: float = 0.5):
         super().__init__()
         self.offset = float(offset)
+
+    def init_config(self):
+        return {"offset": self.offset}
 
     def fit(self, docs, queries=None, rng=None):
         self.fitted = True

@@ -27,10 +27,14 @@ class DimensionDrop(Transform):
     """Keep a random subset of d' coordinates (paper f_drop)."""
 
     name = "dim_drop"
+    state_keys = ("keep",)
 
     def __init__(self, dim: int):
         super().__init__()
         self.dim = int(dim)
+
+    def init_config(self):
+        return {"dim": self.dim}
 
     def fit(self, docs, queries=None, rng=None):
         d = docs.shape[-1]
@@ -58,6 +62,7 @@ class GreedyDimensionDrop(Transform):
     """
 
     name = "greedy_dim_drop"
+    state_keys = ("keep",)
 
     def __init__(self, dim: int,
                  scorer: Optional[Callable[[jax.Array, jax.Array], float]] = None,
@@ -67,6 +72,12 @@ class GreedyDimensionDrop(Transform):
         self.scorer = scorer
         self.max_eval_queries = max_eval_queries
         self.max_eval_docs = max_eval_docs
+
+    def init_config(self):
+        # scorer is a callable, not serializable — a reloaded instance can
+        # apply its fitted "keep" but needs a fresh scorer to re-fit
+        return {"dim": self.dim, "max_eval_queries": self.max_eval_queries,
+                "max_eval_docs": self.max_eval_docs}
 
     def fit(self, docs, queries=None, rng=None):
         if self.scorer is None:
@@ -90,10 +101,14 @@ class GaussianProjection(Transform):
     """x ↦ x @ R,  R_ij ~ N(0, 1/d')."""
 
     name = "gaussian_projection"
+    state_keys = ("matrix",)
 
     def __init__(self, dim: int):
         super().__init__()
         self.dim = int(dim)
+
+    def init_config(self):
+        return {"dim": self.dim}
 
     def fit(self, docs, queries=None, rng=None):
         d = docs.shape[-1]
@@ -119,11 +134,15 @@ class SparseProjection(Transform):
     """
 
     name = "sparse_projection"
+    state_keys = ("matrix",)
 
     def __init__(self, dim: int, s: float = 3.0):
         super().__init__()
         self.dim = int(dim)
         self.s = float(s)
+
+    def init_config(self):
+        return {"dim": self.dim, "s": self.s}
 
     def fit(self, docs, queries=None, rng=None):
         d = docs.shape[-1]

@@ -15,7 +15,8 @@ from repro.core.distance_learning import (ContrastiveProjection,
                                           SimilarityPreservingProjection)
 from repro.core.pca import PCA
 from repro.core.pipeline import CompressionPipeline
-from repro.core.preprocess import CenterNorm, Transform
+from repro.core.preprocess import (Center, CenterNorm, Normalize, Transform,
+                                   ZScore)
 from repro.core.quantization import (FloatCast, Int8Quantizer,
                                      OneBitQuantizer)
 from repro.core.random_projection import (DimensionDrop, GaussianProjection,
@@ -105,3 +106,53 @@ def build_method(name: str, dim: int = 128, *, pre: bool = True,
 def method_compression_ratio(name: str, dim: int, input_dim: int = 768) -> float:
     pipe = build_method(name, dim, pre=False, post=False)
     return pipe.compression_ratio(input_dim)
+
+
+# ---------------------------------------------------------------------------
+# transform registry: declarative (name, config) ↔ Transform instances
+# ---------------------------------------------------------------------------
+
+#: class name → class, for every pipeline stage the repo ships.  The index
+#: artifact format (:mod:`repro.retrieval.api`) records each stage as
+#: ``(type name, init_config())`` and rebuilds the skeleton through this
+#: table before loading fitted state into it.
+TRANSFORMS: dict[str, type] = {}
+
+
+def register_transform(cls: type) -> type:
+    """Register a :class:`Transform` subclass for declarative rebuild."""
+    TRANSFORMS[cls.__name__] = cls
+    return cls
+
+
+for _cls in (Center, CenterNorm, Normalize, ZScore, PCA, FloatCast,
+             Int8Quantizer, OneBitQuantizer, DimensionDrop,
+             GreedyDimensionDrop, GaussianProjection, SparseProjection,
+             Autoencoder, SimilarityPreservingProjection,
+             ContrastiveProjection):
+    register_transform(_cls)
+
+
+def transform_spec(t: Transform) -> tuple[str, dict]:
+    """``(type name, constructor kwargs)`` descriptor for one stage."""
+    return type(t).__name__, t.init_config()
+
+
+def build_transform(name: str, config: Optional[dict] = None) -> Transform:
+    """Rebuild an (unfitted) transform from its :func:`transform_spec`."""
+    if name not in TRANSFORMS:
+        raise KeyError(f"unknown transform {name!r}; registered: "
+                       f"{sorted(TRANSFORMS)} — register_transform() custom "
+                       "stages before loading artifacts that use them")
+    return TRANSFORMS[name](**(config or {}))
+
+
+def pipeline_spec(pipeline: CompressionPipeline) -> list[tuple[str, dict]]:
+    """Stage descriptors for a whole pipeline (see :func:`transform_spec`)."""
+    return [transform_spec(t) for t in pipeline.transforms]
+
+
+def build_pipeline_from_spec(stages) -> CompressionPipeline:
+    """Rebuild an unfitted pipeline from :func:`pipeline_spec` output."""
+    return CompressionPipeline(
+        [build_transform(name, dict(cfg)) for name, cfg in stages])

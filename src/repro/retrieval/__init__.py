@@ -1,5 +1,14 @@
-"""Dense retrieval substrate: exact & approximate top-k, metrics, sharding."""
+"""Dense retrieval substrate: exact & approximate top-k, metrics, sharding.
 
+The declarative front door is :mod:`repro.retrieval.api`::
+
+    spec = IndexSpec(method="pca_int8", dim=128, ivf=(200, 100))
+    index = build_index(spec, docs, queries_sample)
+    index.save("kb.npz");  index = load_index("kb.npz")
+"""
+
+from repro.retrieval.api import (Index, IndexSpec, ShardSpec, build_index,
+                                 load_index, save_index)
 from repro.retrieval.index import CompressedIndex, DenseIndex
 from repro.retrieval.ivf import IVFFlatIndex, IVFIndex
 from repro.retrieval.rprecision import (make_dim_drop_scorer, r_precision,
@@ -9,14 +18,16 @@ from repro.retrieval.scorers import (Scorer, backend_tail_stages, get_scorer,
                                      register_scorer, scorer_for_pipeline,
                                      scorer_names)
 from repro.retrieval.sharded import ShardedCompressedIndex, ShardedIVFIndex
-from repro.retrieval.topk import topk_search
+from repro.retrieval.topk import resolve_k, topk_search
 
 __all__ = [
+    "Index", "IndexSpec", "ShardSpec", "build_index", "load_index",
+    "save_index",
     "CompressedIndex", "DenseIndex", "IVFFlatIndex", "IVFIndex",
     "ShardedCompressedIndex", "ShardedIVFIndex",
     "Scorer", "backend_tail_stages", "get_scorer", "register_scorer",
     "scorer_for_pipeline", "scorer_names",
     "make_dim_drop_scorer", "r_precision", "recall_at_k",
     "retrieved_relevant_counts",
-    "topk_search",
+    "resolve_k", "topk_search",
 ]

@@ -1,0 +1,506 @@
+"""One Index API: declarative specs, a unified protocol, full persistence.
+
+Three pieces turn the five index classes into a single surface:
+
+* :class:`Index` — the protocol every index implements
+  (:class:`~repro.retrieval.index.DenseIndex`,
+  :class:`~repro.retrieval.index.CompressedIndex`,
+  :class:`~repro.retrieval.ivf.IVFIndex`, and both sharded wrappers), with
+  one strict ``(score desc, id asc)`` ranking contract and uniform
+  ``k > len(index)`` clamping (:func:`repro.retrieval.topk.resolve_k`).
+* :class:`IndexSpec` — a frozen, JSON-serializable description of an index
+  recipe (compression method or explicit stage list, similarity, scorer
+  backend, optional IVF routing, optional sharding) and
+  :func:`build_index`, the one factory that composes registry → pipeline →
+  scorer → IVF promotion → sharding from it.
+* :func:`save_index` / :func:`load_index` — a single ``.npz`` artifact
+  holding the spec, pipeline/scorer state, encoded storage (bit-packed
+  words included), IVF router + list layout, and version counters, so
+  ``load_index(path)`` round-trips to bit-identical rankings on every
+  backend and a serve process cold-starts without touching the raw corpus.
+
+Typical life cycle::
+
+    spec = IndexSpec(method="pca_int8", dim=128, ivf=(200, 100))
+    index = build_index(spec, docs, queries_sample)
+    index.save("kb.npz")            # ship the small artifact
+    ...
+    index = load_index("kb.npz")    # cold start: no corpus, no re-fit
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Optional, Protocol, Sequence, Tuple, Union, \
+    runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import CompressionPipeline
+from repro.core.registry import (build_method, build_pipeline_from_spec,
+                                 pipeline_spec)
+from repro.retrieval.index import CompressedIndex, DenseIndex
+from repro.retrieval.ivf import IVFFlatIndex, IVFIndex
+from repro.retrieval.sharded import (ShardedCompressedIndex, ShardedIVFIndex)
+
+ARTIFACT_FORMAT = "repro-index"
+ARTIFACT_VERSION = 1
+
+#: stage-descriptor type: ``(transform class name, constructor kwargs)``
+StageSpec = Tuple[str, dict]
+
+
+# ---------------------------------------------------------------------------
+# the protocol
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class Index(Protocol):
+    """What every index class exposes — the one API serving grows on.
+
+    ``search`` returns ``(scores, ids)`` of shape ``(Q, min(k, len(self)))``
+    ranked by ``(score desc, id asc)``; ``k < 1`` raises.  ``save`` writes
+    the full artifact (see :func:`save_index`); the matching ``load``
+    classmethod (sharded classes additionally take ``mesh``) restores it to
+    bit-identical rankings without the raw corpus.
+    """
+
+    spec: Optional["IndexSpec"]
+
+    def search(self, queries: jax.Array, k: int
+               ) -> tuple[jax.Array, jax.Array]: ...
+
+    def add(self, docs: jax.Array) -> "Index": ...
+
+    def __len__(self) -> int: ...
+
+    @property
+    def nbytes(self) -> int: ...
+
+    def state_dict(self) -> dict: ...
+
+    def save(self, path: str) -> None: ...
+
+
+# ---------------------------------------------------------------------------
+# declarative specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """Mesh placement for the sharded wrappers.
+
+    ``doc_axis`` names the mesh axis (or axes) the document storage is
+    row-sharded over; ``query_axis`` optionally batch-shards queries.  The
+    mesh itself is a runtime resource — pass it to :func:`build_index` /
+    :func:`load_index`, not the spec.
+    """
+
+    doc_axis: Union[str, Tuple[str, ...]] = "model"
+    query_axis: Optional[str] = None
+
+    def to_dict(self) -> dict:
+        axis = (list(self.doc_axis) if isinstance(self.doc_axis, tuple)
+                else self.doc_axis)
+        return {"doc_axis": axis, "query_axis": self.query_axis}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ShardSpec":
+        axis = d.get("doc_axis", "model")
+        if isinstance(axis, list):
+            axis = tuple(axis)
+        return cls(doc_axis=axis, query_axis=d.get("query_axis"))
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSpec:
+    """Declarative index recipe — everything :func:`build_index` needs.
+
+    Exactly one of ``method`` / ``stages`` selects the compression recipe:
+
+    * ``method`` — a registry name (:data:`repro.core.registry.METHODS`,
+      e.g. ``"pca_int8"``), expanded through
+      :func:`repro.core.registry.build_method` with ``dim``/``pre``/``post``;
+      the special name ``"dense"`` means no pipeline at all (float index).
+    * ``stages`` — an explicit ordered tuple of
+      ``(transform class name, constructor kwargs)`` descriptors, resolved
+      through the transform registry (``dim``/``pre``/``post`` are ignored).
+
+    ``ivf=(nlist, nprobe)`` promotes to approximate search;
+    ``shard=ShardSpec(...)`` wraps the result over a device mesh.
+    Specs are frozen, hashable, and JSON round-trippable
+    (:meth:`to_json` / :meth:`from_json`) — the artifact format embeds them.
+    """
+
+    method: Optional[str] = None
+    stages: Optional[Tuple[StageSpec, ...]] = None
+    dim: int = 128
+    sim: str = "ip"
+    backend: str = "auto"
+    pre: bool = True
+    post: bool = True
+    ivf: Optional[Tuple[int, int]] = None
+    shard: Optional[ShardSpec] = None
+    kmeans_iters: int = 15
+
+    def __post_init__(self):
+        if (self.method is None) == (self.stages is None):
+            raise ValueError("IndexSpec needs exactly one of method= "
+                             "(registry name) or stages= (descriptor list)")
+        if self.stages is not None:
+            # normalise to hashable nested tuples (accepts dict configs from
+            # users/JSON and already-frozen configs from dataclasses.replace)
+            object.__setattr__(
+                self, "stages",
+                tuple((str(n), _freeze(c if isinstance(c, dict)
+                                       else _thaw(c)))
+                      for n, c in self.stages))
+        if self.ivf is not None:
+            nlist, nprobe = self.ivf
+            if nlist < 1 or nprobe < 1:
+                raise ValueError(f"ivf=(nlist, nprobe) must be ≥ 1, "
+                                 f"got {self.ivf}")
+            object.__setattr__(self, "ivf", (int(nlist), int(nprobe)))
+        if self.sim not in ("ip", "l2", "cos"):
+            raise ValueError(f"unknown sim {self.sim!r}")
+        if self.backend not in ("auto", "jnp", "pallas"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+
+    # -- pipeline ----------------------------------------------------------
+    def build_pipeline(self) -> Optional[CompressionPipeline]:
+        """Unfitted pipeline for this recipe; ``None`` for a dense index."""
+        if self.stages is not None:
+            return build_pipeline_from_spec(
+                [(n, _thaw(c)) for n, c in self.stages])
+        if self.method == "dense":
+            return None
+        return build_method(self.method, self.dim, pre=self.pre,
+                            post=self.post)
+
+    # -- serialization -----------------------------------------------------
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        if self.shard is not None:
+            d["shard"] = self.shard.to_dict()
+        if self.stages is not None:
+            d["stages"] = [[n, _thaw(c)] for n, c in self.stages]
+        if self.ivf is not None:
+            d["ivf"] = list(self.ivf)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "IndexSpec":
+        d = dict(d)
+        if d.get("shard") is not None:
+            d["shard"] = ShardSpec.from_dict(d["shard"])
+        if d.get("stages") is not None:
+            d["stages"] = tuple((n, c) for n, c in d["stages"])
+        if d.get("ivf") is not None:
+            d["ivf"] = tuple(d["ivf"])
+        return cls(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "IndexSpec":
+        return cls.from_dict(json.loads(s))
+
+
+# dicts freeze to a tagged tuple so that thawing is unambiguous (an empty
+# dict and an empty list must round-trip to themselves, not each other)
+_DICT_TAG = "__frozen_dict__"
+
+
+def _freeze(obj: Any):
+    """dict/list → nested hashable tuples (so specs stay hashable)."""
+    if isinstance(obj, dict):
+        return (_DICT_TAG,
+                tuple(sorted((k, _freeze(v)) for k, v in obj.items())))
+    if isinstance(obj, (list, tuple)):
+        return tuple(_freeze(v) for v in obj)
+    return obj
+
+
+def _thaw(obj: Any):
+    """Inverse of :func:`_freeze`."""
+    if (isinstance(obj, tuple) and len(obj) == 2 and obj[0] == _DICT_TAG):
+        return {k: _thaw(v) for k, v in obj[1]}
+    if isinstance(obj, tuple):
+        return [_thaw(v) for v in obj]
+    return obj
+
+
+# ---------------------------------------------------------------------------
+# the factory
+# ---------------------------------------------------------------------------
+
+
+def build_index(spec: IndexSpec, docs: jax.Array,
+                queries_sample: Optional[jax.Array] = None, *,
+                mesh=None, rng=None) -> Index:
+    """Compose registry → pipeline → scorer → IVF promotion → sharding.
+
+    One entry point for every index kind the repo can build:
+
+    ========================  =======================================
+    spec                      result
+    ========================  =======================================
+    plain                     :class:`CompressedIndex` (or
+                              :class:`DenseIndex` for ``method="dense"``)
+    ``ivf=(nlist, nprobe)``   :class:`IVFIndex`
+    ``shard=ShardSpec(...)``  :class:`ShardedCompressedIndex`
+    both                      :class:`ShardedIVFIndex`
+    ========================  =======================================
+
+    ``queries_sample`` feeds the two-population statistics (center/norm,
+    PCA fit-on choices); ``mesh`` is required iff ``spec.shard`` is set.
+    """
+    if spec.shard is not None and mesh is None:
+        raise ValueError("spec.shard is set — build_index needs mesh=")
+    pipeline = spec.build_pipeline()
+
+    if spec.shard is not None:
+        shard = spec.shard
+        pipe = pipeline if pipeline is not None else CompressionPipeline([])
+        if spec.ivf is not None:
+            nlist, nprobe = spec.ivf
+            idx = ShardedIVFIndex.build(
+                docs, queries_sample, pipe, mesh=mesh, nlist=nlist,
+                nprobe=nprobe, sim=spec.sim, backend=spec.backend,
+                kmeans_iters=spec.kmeans_iters, doc_axis=shard.doc_axis,
+                query_axis=shard.query_axis, rng=rng)
+        else:
+            idx = ShardedCompressedIndex.build(
+                docs, queries_sample, pipe, mesh, sim=spec.sim,
+                backend=spec.backend, doc_axis=shard.doc_axis,
+                query_axis=shard.query_axis, rng=rng)
+    elif spec.ivf is not None:
+        nlist, nprobe = spec.ivf
+        idx = IVFIndex.build(docs, queries_sample, pipeline, nlist=nlist,
+                             nprobe=nprobe, sim=spec.sim,
+                             backend=spec.backend,
+                             kmeans_iters=spec.kmeans_iters, rng=rng)
+    elif pipeline is None:
+        idx = DenseIndex(docs, sim=spec.sim)
+    else:
+        idx = CompressedIndex.build(docs, queries_sample, pipeline,
+                                    sim=spec.sim, backend=spec.backend,
+                                    rng=rng)
+    idx.spec = spec
+    return idx
+
+
+# ---------------------------------------------------------------------------
+# persistence: one .npz artifact per index
+# ---------------------------------------------------------------------------
+
+
+def _pipeline_of(index) -> Optional[CompressionPipeline]:
+    if isinstance(index, ShardedIVFIndex):
+        return index.ivf.pipeline
+    return getattr(index, "pipeline", None)
+
+
+def _flatten_pipeline_sd(pipe_sd: dict, arrays: dict) -> list[bool]:
+    """Stage states → ``pipeline:{i}:{key}`` arrays; returns fitted flags."""
+    fitted = []
+    for i, stage in enumerate(pipe_sd["stages"]):
+        fitted.append(bool(stage["fitted"]))
+        for k, v in stage["state"].items():
+            arrays[f"pipeline:{i}:{k}"] = np.asarray(v)
+    return fitted
+
+
+def _gather_pipeline_sd(data, types: Sequence[str],
+                        fitted: Sequence[bool]) -> dict:
+    per_stage: list[dict] = [{} for _ in types]
+    for key in data.files:
+        if not key.startswith("pipeline:"):
+            continue
+        _, i_str, k = key.split(":", 2)
+        per_stage[int(i_str)][k] = data[key]
+    return {"types": list(types),
+            "stages": [{"name": t, "state": st, "fitted": bool(f)}
+                       for t, st, f in zip(types, per_stage, fitted)]}
+
+
+def save_index(index, path: str) -> None:
+    """Write the full index artifact (spec + state) to one ``.npz``.
+
+    The artifact is self-contained: :func:`load_index` reconstructs a
+    bit-identically-ranking index from it with no access to the raw corpus
+    and no re-fit — encoded storage, scorer codebooks, IVF centroids and
+    list layout, and the version counter are all inside.
+    """
+    kind = type(index).__name__
+    arrays: dict[str, np.ndarray] = {}
+    meta: dict[str, Any] = {
+        "format": ARTIFACT_FORMAT, "format_version": ARTIFACT_VERSION,
+        "kind": kind,
+        "spec": index.spec.to_dict() if index.spec is not None else None,
+    }
+
+    pipeline = _pipeline_of(index)
+    meta["stages"] = pipeline_spec(pipeline) if pipeline is not None else []
+
+    sd = index.state_dict()
+    if isinstance(index, DenseIndex):
+        if len(index) == 0:
+            raise ValueError("cannot save an empty index")
+        arrays["storage"] = np.asarray(sd["docs"])
+        meta["index"] = {"sim": index.sim, "n_docs": len(index)}
+        meta["stage_fitted"] = []
+    elif isinstance(index, (IVFIndex, ShardedIVFIndex)):
+        ivf = index.ivf if isinstance(index, ShardedIVFIndex) else index
+        ivf_sd = sd["ivf"] if isinstance(index, ShardedIVFIndex) else sd
+        if ivf_sd["storage"] is None:
+            raise ValueError("cannot save an empty index")
+        meta["stage_fitted"] = _flatten_pipeline_sd(ivf_sd["pipeline"],
+                                                    arrays)
+        arrays["storage"] = np.asarray(ivf_sd["storage"])
+        arrays["centroids"] = np.asarray(ivf_sd["centroids"])
+        arrays["lists"] = np.asarray(ivf_sd["lists"])
+        if ivf_sd["labels"] is not None:
+            arrays["labels"] = np.asarray(ivf_sd["labels"])
+        meta["index"] = {
+            "sim": ivf.sim, "backend": ivf.backend,
+            "n_docs": int(ivf_sd["n_docs"]), "dim": int(ivf_sd["dim"]),
+            "version": int(ivf_sd["version"]),
+            "scorer_extra": ivf_sd["scorer_extra"],
+            "nlist": int(ivf_sd["nlist"]),
+            "nlist_requested": int(ivf_sd["nlist_requested"]),
+            "nprobe": int(ivf_sd["nprobe"]),
+            "kmeans_iters": int(ivf.kmeans_iters),
+        }
+        if isinstance(index, ShardedIVFIndex):
+            meta["index"]["doc_axis"] = list(index.doc_axes)
+            meta["index"]["query_axis"] = index.query_axis
+    elif isinstance(index, (CompressedIndex, ShardedCompressedIndex)):
+        if sd["storage"] is None:
+            raise ValueError("cannot save an empty index")
+        meta["stage_fitted"] = _flatten_pipeline_sd(sd["pipeline"], arrays)
+        arrays["storage"] = np.asarray(sd["storage"])
+        meta["index"] = {
+            "sim": index.sim, "backend": index.backend,
+            "n_docs": int(sd["n_docs"]), "dim": int(sd["dim"]),
+            "version": int(sd.get("version", 0)),
+            "scorer_extra": sd["scorer_extra"],
+        }
+        if isinstance(index, ShardedCompressedIndex):
+            meta["index"]["doc_axis"] = list(index.doc_axes)
+            meta["index"]["query_axis"] = index.query_axis
+    else:
+        raise TypeError(f"don't know how to save {kind}")
+
+    arrays["__meta__"] = np.asarray(json.dumps(meta, sort_keys=True))
+    np.savez(path, **arrays)
+
+
+def _rebuild_ivf(meta: dict, data, pipeline: CompressionPipeline,
+                 backend: Optional[str], kind: str) -> IVFIndex:
+    m = meta["index"]
+    if kind == "IVFFlatIndex":
+        ivf = IVFFlatIndex(nlist=m["nlist_requested"], nprobe=m["nprobe"],
+                           sim=m["sim"], kmeans_iters=m["kmeans_iters"])
+    else:
+        ivf = IVFIndex(pipeline, nlist=m["nlist_requested"],
+                       nprobe=m["nprobe"], sim=m["sim"],
+                       backend=backend or m["backend"],
+                       kmeans_iters=m["kmeans_iters"])
+    ivf.load_state_dict({
+        "pipeline": _gather_pipeline_sd(data, [n for n, _ in meta["stages"]],
+                                        meta["stage_fitted"]),
+        "storage": data["storage"],
+        "centroids": data["centroids"],
+        "lists": data["lists"],
+        "labels": data["labels"] if "labels" in data.files else None,
+        "scorer_extra": m.get("scorer_extra", {}),
+        "nlist": m["nlist"], "nlist_requested": m["nlist_requested"],
+        "nprobe": m["nprobe"], "n_docs": m["n_docs"], "dim": m["dim"],
+        "version": m.get("version", 0)})
+    return ivf
+
+
+def load_index(path: str, *, mesh=None, backend: Optional[str] = None,
+               expect: Optional[type] = None):
+    """Reconstruct an index from a :func:`save_index` artifact.
+
+    Cold-start path: no raw corpus, no re-fit, no re-encode — rankings are
+    bit-identical to the index that was saved.  ``mesh`` is required for
+    sharded artifacts (placement is a runtime concern, not an artifact
+    one); ``backend`` optionally overrides the stored scorer backend
+    (e.g. load a TPU-built artifact with ``backend="jnp"`` on a host).
+    ``expect`` asserts the artifact kind (used by the per-class ``load``
+    classmethods).
+    """
+    with np.load(path, allow_pickle=False) as data:
+        return _load_index_from(data, path, mesh=mesh, backend=backend,
+                                expect=expect)
+
+
+def _load_index_from(data, path: str, *, mesh, backend, expect):
+    if "__meta__" not in data.files:
+        raise ValueError(f"{path} is not a {ARTIFACT_FORMAT} artifact "
+                         "(no __meta__ entry)")
+    meta = json.loads(data["__meta__"].item())
+    if meta.get("format") != ARTIFACT_FORMAT:
+        raise ValueError(f"{path}: unknown artifact format "
+                         f"{meta.get('format')!r}")
+    if meta.get("format_version", 0) > ARTIFACT_VERSION:
+        raise ValueError(
+            f"{path}: artifact version {meta['format_version']} is newer "
+            f"than this build ({ARTIFACT_VERSION})")
+    kind = meta["kind"]
+    m = meta["index"]
+
+    pipeline = (build_pipeline_from_spec(meta["stages"])
+                if meta["stages"] else CompressionPipeline([]))
+
+    if kind == "DenseIndex":
+        idx = DenseIndex(jnp.asarray(data["storage"]), sim=m["sim"])
+    elif kind == "CompressedIndex":
+        idx = CompressedIndex(pipeline, sim=m["sim"],
+                              backend=backend or m["backend"])
+        idx.load_state_dict({
+            "pipeline": _gather_pipeline_sd(
+                data, [n for n, _ in meta["stages"]], meta["stage_fitted"]),
+            "storage": data["storage"],
+            "scorer_extra": m.get("scorer_extra", {}),
+            "n_docs": m["n_docs"], "dim": m["dim"],
+            "version": m.get("version", 0)})
+    elif kind in ("IVFIndex", "IVFFlatIndex"):
+        idx = _rebuild_ivf(meta, data, pipeline, backend, kind)
+    elif kind == "ShardedCompressedIndex":
+        if mesh is None:
+            raise ValueError(f"{kind} artifact needs mesh= to load")
+        idx = ShardedCompressedIndex(
+            pipeline, mesh, sim=m["sim"], backend=backend or m["backend"],
+            doc_axis=tuple(m["doc_axis"]), query_axis=m.get("query_axis"))
+        idx.load_state_dict({
+            "pipeline": _gather_pipeline_sd(
+                data, [n for n, _ in meta["stages"]], meta["stage_fitted"]),
+            "storage": data["storage"],
+            "scorer_extra": m.get("scorer_extra", {}),
+            "n_docs": m["n_docs"], "dim": m["dim"]})
+    elif kind == "ShardedIVFIndex":
+        if mesh is None:
+            raise ValueError(f"{kind} artifact needs mesh= to load")
+        ivf = _rebuild_ivf(meta, data, pipeline, backend, "IVFIndex")
+        idx = ShardedIVFIndex(ivf, mesh, doc_axis=tuple(m["doc_axis"]),
+                              query_axis=m.get("query_axis"))
+    else:
+        raise ValueError(f"{path}: unknown index kind {kind!r}")
+
+    if meta.get("spec") is not None:
+        idx.spec = IndexSpec.from_dict(meta["spec"])
+    if expect is not None and not isinstance(idx, expect):
+        raise TypeError(f"{path} holds a {kind}, expected "
+                        f"{expect.__name__} — use api.load_index for "
+                        "kind-dispatching loads")
+    return idx

@@ -25,7 +25,7 @@ import numpy as np
 from repro.core.pipeline import CompressionPipeline
 from repro.retrieval.scorers import (Scorer, apply_float_stages,
                                      scorer_for_pipeline)
-from repro.retrieval.topk import topk_search
+from repro.retrieval.topk import resolve_k, topk_search
 
 
 class DenseIndex:
@@ -34,6 +34,7 @@ class DenseIndex:
     def __init__(self, docs: jax.Array, sim: str = "ip"):
         self.docs = jnp.asarray(docs)
         self.sim = sim
+        self.spec = None               # set by api.build_index / api.load_index
 
     def __len__(self) -> int:
         return int(self.docs.shape[0])
@@ -44,12 +45,30 @@ class DenseIndex:
 
     def search(self, queries: jax.Array, k: int,
                doc_chunk: int = 131072) -> tuple[jax.Array, jax.Array]:
+        k = resolve_k(k, len(self))
         return topk_search(queries, self.docs, k, sim=self.sim,
                            doc_chunk=doc_chunk)
 
     def add(self, docs: jax.Array) -> "DenseIndex":
         self.docs = jnp.concatenate([self.docs, jnp.asarray(docs)], axis=0)
         return self
+
+    # -- persistence -------------------------------------------------------
+    def state_dict(self) -> dict:
+        return {"docs": self.docs}
+
+    def load_state_dict(self, sd: dict) -> "DenseIndex":
+        self.docs = jnp.asarray(sd["docs"])
+        return self
+
+    def save(self, path: str) -> None:
+        from repro.retrieval.api import save_index
+        save_index(self, path)
+
+    @classmethod
+    def load(cls, path: str) -> "DenseIndex":
+        from repro.retrieval.api import load_index
+        return load_index(path, expect=cls)
 
 
 class CompressedIndex:
@@ -68,6 +87,7 @@ class CompressedIndex:
         self.float_stages, self.scorer = scorer_for_pipeline(
             pipeline, sim=sim, backend=backend)
         self.storage: Optional[jax.Array] = None
+        self.spec = None               # set by api.build_index / api.load_index
         self._n_docs = 0
         self._dim = 0
         self._version = 0      # bumped on add; to_ivf promotions check it
@@ -79,6 +99,13 @@ class CompressedIndex:
     def build(cls, docs: jax.Array, queries_sample: Optional[jax.Array],
               pipeline: CompressionPipeline, sim: str = "ip",
               backend: str = "auto", rng=None) -> "CompressedIndex":
+        """Fit ``pipeline`` on the corpus, then encode it into an index.
+
+        Note: prefer the declarative front door,
+        :func:`repro.retrieval.api.build_index` — one entry point for every
+        index kind, with save/load built in.  ``build`` stays supported for
+        hand-assembled pipelines.
+        """
         pipeline.fit(docs, queries_sample, rng=rng)
         idx = cls(pipeline, sim=sim, backend=backend)
         idx.add(docs)
@@ -189,13 +216,47 @@ class CompressedIndex:
 
     def search(self, queries: jax.Array, k: int,
                doc_chunk: int = 131072) -> tuple[jax.Array, jax.Array]:
+        k = resolve_k(k, self._n_docs)
         if self.scorer.name not in ("float", "fp16"):
             # quantized storage: one fused graph, no host-side dispatch
             fn = self._fused_search_fn()
             return fn(jnp.asarray(queries), self.storage,
-                      self.scorer.params(), k=min(k, self._n_docs))
+                      self.scorer.params(), k=k)
         # float / fp16 storage: stream the (cached) float view in chunks so
         # arbitrarily large indexes never materialise a full score matrix
         q = self.encode_queries(queries)
         return topk_search(q, self.decoded_docs(), k, sim=self.sim,
                            doc_chunk=doc_chunk)
+
+    # -- persistence -------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Everything needed to reconstruct searches without the corpus:
+        pipeline state (incl. scorer codebooks), the encoded storage, and
+        the bookkeeping counters."""
+        return {"pipeline": self.pipeline.state_dict(),
+                "storage": self.storage,
+                "scorer_extra": self.scorer.extra_state(),
+                "n_docs": self._n_docs, "dim": self._dim,
+                "version": self._version}
+
+    def load_state_dict(self, sd: dict) -> "CompressedIndex":
+        self.pipeline.load_state_dict(sd["pipeline"])
+        # the scorer holds the *same* quantizer object as the pipeline's
+        # trailing stage, so its codebooks are now loaded too
+        self.storage = jnp.asarray(sd["storage"])
+        self.scorer.load_extra_state(sd.get("scorer_extra", {}))
+        self._n_docs = int(sd["n_docs"])
+        self._dim = int(sd["dim"])
+        self._version = int(sd.get("version", 0))
+        self._decoded_cache = None
+        self._search_fn = None
+        return self
+
+    def save(self, path: str) -> None:
+        from repro.retrieval.api import save_index
+        save_index(self, path)
+
+    @classmethod
+    def load(cls, path: str) -> "CompressedIndex":
+        from repro.retrieval.api import load_index
+        return load_index(path, expect=cls)

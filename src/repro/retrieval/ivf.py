@@ -41,7 +41,7 @@ from repro.core.pipeline import CompressionPipeline
 from repro.retrieval.kmeans import assign, kmeans_fit
 from repro.retrieval.scorers import (Scorer, apply_float_stages,
                                      scorer_for_pipeline)
-from repro.retrieval.topk import similarity
+from repro.retrieval.topk import resolve_k, similarity
 
 
 def topk_score_then_id(s: jax.Array, ids: jax.Array, k: int
@@ -150,6 +150,7 @@ class IVFIndex:
         self.centroids: Optional[jax.Array] = None   # (nlist, d) float routing
         self.lists: Optional[jax.Array] = None       # (nlist, max_len), −1 pad
         self.storage: Optional[jax.Array] = None     # scorer-encoded rows
+        self.spec = None               # set by api.build_index / api.load_index
         self._labels: Optional[np.ndarray] = None    # (n_docs,) cluster ids
         self._n_docs = 0
         self._dim = 0
@@ -290,7 +291,7 @@ class IVFIndex:
                 "called); the promoted IVF view shares its old storage — "
                 "re-promote with to_ivf()")
         nprobe = self._resolve_nprobe(nprobe)
-        k = min(k, self._n_docs)
+        k = resolve_k(k, self._n_docs)
         # k / nprobe are static_argnames: one jit wrapper specializes per
         # (k, nprobe) in its own trace cache
         if self._search_fn is None:
@@ -305,6 +306,49 @@ class IVFIndex:
             vals_out.append(v)
             idx_out.append(i)
         return jnp.concatenate(vals_out), jnp.concatenate(idx_out)
+
+    # -- persistence -------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Pipeline + storage + router + list layout: the full IVF artifact
+        (cold-start search needs no access to the raw corpus)."""
+        return {"pipeline": self.pipeline.state_dict(),
+                "storage": self.storage,
+                "centroids": self.centroids,
+                "lists": self.lists,
+                "labels": self._labels,
+                "scorer_extra": self.scorer.extra_state(),
+                "nlist": self.nlist,
+                "nlist_requested": self._nlist_requested,
+                "nprobe": self.nprobe,
+                "n_docs": self._n_docs, "dim": self._dim,
+                "version": self._version}
+
+    def load_state_dict(self, sd: dict) -> "IVFIndex":
+        self.pipeline.load_state_dict(sd["pipeline"])
+        self.storage = jnp.asarray(sd["storage"])
+        self.centroids = jnp.asarray(sd["centroids"])
+        self.lists = jnp.asarray(sd["lists"])
+        labels = sd.get("labels")
+        self._labels = (np.asarray(labels) if labels is not None else None)
+        self.scorer.load_extra_state(sd.get("scorer_extra", {}))
+        self.nlist = int(sd["nlist"])
+        self._nlist_requested = int(sd.get("nlist_requested", sd["nlist"]))
+        self.nprobe = int(sd["nprobe"])
+        self._n_docs = int(sd["n_docs"])
+        self._dim = int(sd["dim"])
+        self._version = int(sd.get("version", 0))
+        self._source = None            # an artifact owns its storage
+        self._search_fn = None
+        return self
+
+    def save(self, path: str) -> None:
+        from repro.retrieval.api import save_index
+        save_index(self, path)
+
+    @classmethod
+    def load(cls, path: str) -> "IVFIndex":
+        from repro.retrieval.api import load_index
+        return load_index(path, expect=cls)
 
 
 class IVFFlatIndex(IVFIndex):

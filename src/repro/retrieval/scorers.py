@@ -96,6 +96,15 @@ class Scorer:
 
         return jax.vmap(_one)(q, gathered)
 
+    # -- persistence -------------------------------------------------------
+    def extra_state(self) -> dict:
+        """Scorer-owned scalars outside the quantizer's state (artifact
+        format; codebooks live in the pipeline's stage state already)."""
+        return {}
+
+    def load_extra_state(self, sd: dict) -> None:
+        pass
+
     # -- float view -------------------------------------------------------
     def decode(self, storage: jax.Array) -> jax.Array:
         return storage
@@ -167,6 +176,13 @@ class OneBitScorer(Scorer):
         super().__init__(sim=sim, backend=backend)
         self.quantizer = quantizer
         self.dim = dim
+
+    def extra_state(self):
+        return {"dim": self.dim}
+
+    def load_extra_state(self, sd):
+        if sd.get("dim") is not None:
+            self.dim = int(sd["dim"])
 
     def encode_docs(self, x):
         self.dim = int(x.shape[-1])

@@ -40,7 +40,7 @@ from repro.retrieval.ivf import (IVFIndex, masked_topk_by_id,
                                  probe_and_score)
 from repro.retrieval.scorers import (Scorer, apply_float_stages,
                                      scorer_for_pipeline)
-from repro.retrieval.topk import similarity
+from repro.retrieval.topk import resolve_k, similarity
 
 AxisName = Union[str, Sequence[str]]
 
@@ -177,6 +177,7 @@ class ShardedCompressedIndex:
         self._storage_host: Optional[jax.Array] = None  # unpadded, unsharded
         self._placed: Optional[jax.Array] = None        # padded, mesh-sharded
         self._search_fns: dict[int, object] = {}
+        self.spec = None               # set by api.build_index / api.load_index
         self._n_docs = 0
         self._dim = 0
 
@@ -238,7 +239,7 @@ class ShardedCompressedIndex:
         return apply_float_stages(self.float_stages, queries, "queries")
 
     def search(self, queries: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
-        k = min(k, self._n_docs)
+        k = resolve_k(k, self._n_docs)
         if k not in self._search_fns:
             self._search_fns[k] = make_sharded_scorer_search(
                 self.mesh, self.scorer, k=k, n_docs=self._n_docs,
@@ -246,6 +247,35 @@ class ShardedCompressedIndex:
         q = self.scorer.encode_queries(self.encode_queries(queries))
         return self._search_fns[k](q, self._placed_storage(),
                                    self.scorer.params())
+
+    # -- persistence -------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Single-host state: the *unsharded* encoded storage plus pipeline
+        state.  Mesh placement is reconstructed at load time (pass the
+        mesh to :func:`repro.retrieval.api.load_index`)."""
+        return {"pipeline": self.pipeline.state_dict(),
+                "storage": self._storage_host,
+                "scorer_extra": self.scorer.extra_state(),
+                "n_docs": self._n_docs, "dim": self._dim}
+
+    def load_state_dict(self, sd: dict) -> "ShardedCompressedIndex":
+        self.pipeline.load_state_dict(sd["pipeline"])
+        self._storage_host = jnp.asarray(sd["storage"])
+        self.scorer.load_extra_state(sd.get("scorer_extra", {}))
+        self._n_docs = int(sd["n_docs"])
+        self._dim = int(sd["dim"])
+        self._placed = None
+        self._search_fns.clear()
+        return self
+
+    def save(self, path: str) -> None:
+        from repro.retrieval.api import save_index
+        save_index(self, path)
+
+    @classmethod
+    def load(cls, path: str, mesh: Mesh) -> "ShardedCompressedIndex":
+        from repro.retrieval.api import load_index
+        return load_index(path, mesh=mesh, expect=cls)
 
 
 # ---------------------------------------------------------------------------
@@ -366,10 +396,11 @@ class ShardedIVFIndex:
         self._lists = shard_index(jnp.asarray(lists_s), mesh, self.doc_axes)
         self._storage = shard_index(jnp.asarray(storage_s), mesh,
                                     self.doc_axes)
-        spec = P(_axis_spec(self.doc_axes))
+        gid_spec = P(_axis_spec(self.doc_axes))
         self._gids = jax.device_put(jnp.asarray(gids_s),
-                                    NamedSharding(mesh, spec))
+                                    NamedSharding(mesh, gid_spec))
         self._search_fns: dict[tuple[int, int], object] = {}
+        self.spec = None               # set by api.build_index / api.load_index
 
     # -- construction -----------------------------------------------------
     @classmethod
@@ -396,6 +427,13 @@ class ShardedIVFIndex:
     def __len__(self) -> int:
         return len(self.ivf)
 
+    def add(self, docs: jax.Array) -> "ShardedIVFIndex":
+        """The list partition is frozen at construction — grow the wrapped
+        :class:`IVFIndex` and rebuild the wrapper instead."""
+        raise NotImplementedError(
+            "ShardedIVFIndex cannot add in place; call ivf.add(docs) and "
+            "re-wrap with ShardedIVFIndex(ivf, mesh)")
+
     @property
     def nbytes(self) -> int:
         return self.ivf.nbytes
@@ -421,7 +459,7 @@ class ShardedIVFIndex:
                 "called); the list partition is frozen at construction — "
                 "rebuild the ShardedIVFIndex")
         nprobe = self.ivf._resolve_nprobe(nprobe)
-        k = min(k, len(self.ivf))
+        k = resolve_k(k, len(self.ivf))
         key = (k, nprobe)
         if key not in self._search_fns:
             self._search_fns[key] = make_sharded_ivf_search(
@@ -431,3 +469,25 @@ class ShardedIVFIndex:
         return self._search_fns[key](q, self.ivf.centroids, self._lists,
                                      self._storage, self._gids,
                                      self.scorer.params())
+
+    # -- persistence -------------------------------------------------------
+    def state_dict(self) -> dict:
+        """The wrapped single-host IVF state; the shard partition is a pure
+        function of (lists, storage, n_shards) and is recomputed at load."""
+        return {"ivf": self.ivf.state_dict()}
+
+    def load_state_dict(self, sd: dict) -> "ShardedIVFIndex":
+        # the partition is frozen at construction; loading state into an
+        # existing wrapper would desynchronise it — reconstruct instead
+        raise NotImplementedError(
+            "ShardedIVFIndex partitions at construction; use "
+            "ShardedIVFIndex.load(path, mesh) / api.load_index")
+
+    def save(self, path: str) -> None:
+        from repro.retrieval.api import save_index
+        save_index(self, path)
+
+    @classmethod
+    def load(cls, path: str, mesh: Mesh) -> "ShardedIVFIndex":
+        from repro.retrieval.api import load_index
+        return load_index(path, mesh=mesh, expect=cls)

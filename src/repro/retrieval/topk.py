@@ -15,6 +15,21 @@ import jax
 import jax.numpy as jnp
 
 
+def resolve_k(k: int, n_docs: int) -> int:
+    """The one ``k`` contract for every index class.
+
+    ``k`` must be ≥ 1; a ``k`` beyond the corpus clamps to ``n_docs`` (the
+    result then simply has fewer columns).  All five index classes
+    (:class:`~repro.retrieval.index.DenseIndex`,
+    :class:`~repro.retrieval.index.CompressedIndex`,
+    :class:`~repro.retrieval.ivf.IVFIndex`, and both sharded wrappers) route
+    through this guard so the clamping behaviour cannot drift.
+    """
+    if k < 1:
+        raise ValueError(f"k must be ≥ 1, got {k}")
+    return min(int(k), int(n_docs))
+
+
 def similarity(queries: jax.Array, docs: jax.Array, sim: str) -> jax.Array:
     """(Q, d) × (D, d) → (Q, D) similarity. sim ∈ {"ip", "l2", "cos"}.
 
@@ -59,7 +74,7 @@ def topk_search(queries: jax.Array, docs: jax.Array, k: int,
     Returns (scores (Q, k), indices (Q, k)), sorted by descending score.
     """
     n_docs = docs.shape[0]
-    k = min(k, n_docs)
+    k = resolve_k(k, n_docs)
 
     out_vals, out_idx = [], []
     for qs in range(0, queries.shape[0], query_chunk):

@@ -63,6 +63,23 @@ class ServeEngine:
         self.batches_served = 0
         self.requests_served = 0
 
+    @classmethod
+    def from_artifact(cls, path: str, k: int = 10, *, mesh=None,
+                      backend: Optional[str] = None,
+                      batcher: Optional[MicroBatcher] = None,
+                      shadow: Optional[ShadowScorer] = None) -> "ServeEngine":
+        """Cold-start an engine straight from a saved index artifact.
+
+        The production start-up path: the serve process never touches the
+        raw corpus or re-fits anything — it loads the compressed artifact
+        (:func:`repro.retrieval.api.load_index`) and begins serving.
+        ``mesh`` is required for sharded artifacts; ``backend`` optionally
+        overrides the stored scorer backend.
+        """
+        from repro.retrieval.api import load_index
+        index = load_index(path, mesh=mesh, backend=backend)
+        return cls(index, k=k, batcher=batcher, shadow=shadow)
+
     # -- request side ------------------------------------------------------
     def submit(self, queries, nprobe: Optional[int] = None) -> int:
         """Enqueue a block of queries; returns the request id.

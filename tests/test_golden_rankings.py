@@ -44,36 +44,37 @@ def _probe_margin(ivf, q) -> float:
     return float(np.min(cs[:, ivf.nprobe - 1] - cs[:, ivf.nprobe]))
 
 
-def _build_cases():
-    """({case: (scores (Q, K), ids (Q, K))}, {ivf case: probe margin})."""
+def _build_indexes():
+    """{case: fitted index} — every frozen search path, one object each."""
     from repro.core import (CenterNorm, CompressionPipeline, Int8Quantizer,
                             OneBitQuantizer, PCA)
     from repro.retrieval import CompressedIndex, DenseIndex, IVFFlatIndex
 
     kb = _kb()
-    q = kb.queries[:N_QUERIES]
-    out = {}
-    margins = {}
-
-    idx = DenseIndex(kb.docs)
-    out["exact_float"] = idx.search(q, K)
+    indexes = {}
+    indexes["exact_float"] = DenseIndex(kb.docs)
 
     pipe = CompressionPipeline([CenterNorm(), PCA(32), Int8Quantizer()])
-    int8 = CompressedIndex.build(kb.docs, kb.queries, pipe, backend="jnp")
-    out["exact_int8"] = int8.search(q, K)
+    indexes["exact_int8"] = CompressedIndex.build(kb.docs, kb.queries, pipe,
+                                                  backend="jnp")
 
     pipe = CompressionPipeline([CenterNorm(), OneBitQuantizer(0.5)])
     onebit = CompressedIndex.build(kb.docs, kb.queries, pipe, backend="jnp")
-    out["exact_onebit"] = onebit.search(q, K)
+    indexes["exact_onebit"] = onebit
 
-    ivf = IVFFlatIndex(nlist=16, nprobe=8, kmeans_iters=10).fit(kb.docs)
-    out["ivf_float"] = ivf.search(q, K)
-    margins["ivf_float"] = _probe_margin(ivf, q)
+    indexes["ivf_float"] = IVFFlatIndex(nlist=16, nprobe=8,
+                                        kmeans_iters=10).fit(kb.docs)
+    indexes["ivf_onebit"] = onebit.to_ivf(nlist=16, nprobe=8,
+                                          kmeans_iters=10)
+    return indexes, kb.queries[:N_QUERIES]
 
-    onebit_ivf = onebit.to_ivf(nlist=16, nprobe=8, kmeans_iters=10)
-    out["ivf_onebit"] = onebit_ivf.search(q, K)
-    margins["ivf_onebit"] = _probe_margin(onebit_ivf, q)
 
+def _build_cases():
+    """({case: (scores (Q, K), ids (Q, K))}, {ivf case: probe margin})."""
+    indexes, q = _build_indexes()
+    out = {name: idx.search(q, K) for name, idx in indexes.items()}
+    margins = {name: _probe_margin(indexes[name], q)
+               for name in ("ivf_float", "ivf_onebit")}
     return ({name: (np.asarray(v, np.float64), np.asarray(i, np.int64))
              for name, (v, i) in out.items()}, margins)
 
@@ -101,6 +102,32 @@ def test_golden_ranking(built_cases, case):
                 "ranking change is intended, regenerate with "
                 "`python tests/test_golden_rankings.py --regen`")
     np.testing.assert_allclose(vals, np.asarray(golden["scores"]),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.fixture(scope="module")
+def built_indexes():
+    return _build_indexes()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("case", ["exact_int8", "exact_onebit",
+                                  "ivf_float", "ivf_onebit"])
+def test_golden_ranking_survives_save_load(tmp_path, built_indexes, case):
+    """Artifact round trip reproduces the frozen golden ids exactly —
+    persistence is held to the same regression bar as live search."""
+    from repro.retrieval import load_index
+
+    indexes, q = built_indexes
+    path = str(tmp_path / f"{case}.npz")
+    indexes[case].save(path)
+    vals, ids = load_index(path).search(q, K)
+    golden = _load_golden()["cases"][case]
+    np.testing.assert_array_equal(
+        np.asarray(ids, np.int64), np.asarray(golden["ids"]),
+        err_msg=f"{case}: reloaded index drifted from tests/golden/")
+    np.testing.assert_allclose(np.asarray(vals, np.float64),
+                               np.asarray(golden["scores"]),
                                rtol=1e-4, atol=1e-4)
 
 

@@ -1,0 +1,349 @@
+"""The unified Index API: IndexSpec, build_index, and artifact persistence.
+
+Acceptance contract (ISSUE 3): for every scorer backend and for an IVF
+promotion, ``build_index(spec, docs, qs).save(p)`` then ``load_index(p)``
+returns identical ``(scores, ids)`` to the original on a fixed query set,
+with no access to the raw corpus at load time.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CenterNorm, CompressionPipeline, Int8Quantizer,
+                        OneBitQuantizer, PCA)
+from repro.retrieval import (CompressedIndex, DenseIndex, Index, IndexSpec,
+                             IVFIndex, ShardSpec, ShardedCompressedIndex,
+                             ShardedIVFIndex, build_index, load_index,
+                             resolve_k)
+
+BACKEND_METHODS = {
+    "float": "original",   # pipeline with no quantizer → float storage
+    "fp16": "fp16",
+    "int8": "int8",
+    "onebit": "onebit",
+}
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(7)
+    docs = jnp.asarray(rng.standard_normal((600, 64)), jnp.float32)
+    queries = jnp.asarray(rng.standard_normal((16, 64)), jnp.float32)
+    return docs, queries
+
+
+def _assert_identical(a, b):
+    va, ia = a
+    vb, ib = b
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+    np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
+
+
+# ---------------------------------------------------------------------------
+# IndexSpec: validation and JSON round trip
+# ---------------------------------------------------------------------------
+
+
+def test_spec_requires_exactly_one_recipe():
+    with pytest.raises(ValueError, match="exactly one"):
+        IndexSpec()
+    with pytest.raises(ValueError, match="exactly one"):
+        IndexSpec(method="pca_int8", stages=(("PCA", {"dim": 8}),))
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="sim"):
+        IndexSpec(method="int8", sim="cosine")
+    with pytest.raises(ValueError, match="backend"):
+        IndexSpec(method="int8", backend="gpu")
+    with pytest.raises(ValueError, match="ivf"):
+        IndexSpec(method="int8", ivf=(0, 4))
+
+
+@pytest.mark.parametrize("spec", [
+    IndexSpec(method="pca_int8", dim=64, sim="cos", backend="jnp"),
+    IndexSpec(method="dense"),
+    IndexSpec(method="onebit", ivf=(32, 8), kmeans_iters=9),
+    IndexSpec(stages=(("CenterNorm", {}), ("PCA", {"dim": 16}),
+                      ("Int8Quantizer", {})), backend="jnp"),
+    IndexSpec(method="pca_int8", shard=ShardSpec(doc_axis=("pod", "model"),
+                                                 query_axis="data")),
+])
+def test_spec_json_roundtrip(spec):
+    assert IndexSpec.from_json(spec.to_json()) == spec
+    hash(spec)     # frozen specs stay hashable (usable as cache keys)
+
+
+def test_spec_stage_list_ignores_dim_knobs(corpus):
+    docs, queries = corpus
+    spec = IndexSpec(stages=(("CenterNorm", {}), ("PCA", {"dim": 16})),
+                     backend="jnp")
+    idx = build_index(spec, docs, queries)
+    assert idx.pipeline.transforms[1].dim == 16
+
+
+# ---------------------------------------------------------------------------
+# build_index: kind dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_build_index_kinds(corpus):
+    docs, queries = corpus
+    assert isinstance(build_index(IndexSpec(method="dense"), docs),
+                      DenseIndex)
+    assert isinstance(
+        build_index(IndexSpec(method="int8", backend="jnp"), docs, queries),
+        CompressedIndex)
+    idx = build_index(IndexSpec(method="int8", backend="jnp", ivf=(8, 4),
+                                kmeans_iters=4), docs, queries)
+    assert isinstance(idx, IVFIndex)
+    assert (idx.nlist, idx.nprobe) == (8, 4)
+
+
+def test_build_index_shard_needs_mesh(corpus):
+    docs, queries = corpus
+    with pytest.raises(ValueError, match="mesh"):
+        build_index(IndexSpec(method="int8", shard=ShardSpec()), docs,
+                    queries)
+
+
+def test_all_classes_satisfy_protocol(corpus):
+    docs, queries = corpus
+    idx = build_index(IndexSpec(method="int8", backend="jnp"), docs, queries)
+    assert isinstance(idx, Index)
+    assert isinstance(build_index(IndexSpec(method="dense"), docs), Index)
+
+
+# ---------------------------------------------------------------------------
+# save/load round-trip parity (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend_name", sorted(BACKEND_METHODS))
+def test_roundtrip_exact_backends(tmp_path, corpus, backend_name):
+    docs, queries = corpus
+    # post=False keeps the quantizer as the trailing stage, so storage is
+    # genuinely fp16 / int8 codes / bit-packed words (not a float view)
+    spec = IndexSpec(method=BACKEND_METHODS[backend_name], dim=32,
+                     backend="jnp", post=False)
+    idx = build_index(spec, docs, queries)
+    if backend_name != "float":
+        assert idx.scorer.name == backend_name
+    before = idx.search(queries, 10)
+    path = str(tmp_path / "idx.npz")
+    idx.save(path)
+    idx2 = load_index(path)
+    assert idx2.spec == spec
+    assert len(idx2) == len(idx) and idx2.nbytes == idx.nbytes
+    _assert_identical(before, idx2.search(queries, 10))
+
+
+def test_roundtrip_dense(tmp_path, corpus):
+    docs, queries = corpus
+    idx = build_index(IndexSpec(method="dense"), docs)
+    path = str(tmp_path / "dense.npz")
+    idx.save(path)
+    _assert_identical(idx.search(queries, 10),
+                      DenseIndex.load(path).search(queries, 10))
+
+
+def test_roundtrip_pca_recipes(tmp_path, corpus):
+    docs, queries = corpus
+    for method, dim in (("pca_int8", 32), ("pca_onebit", 37)):
+        spec = IndexSpec(method=method, dim=dim, backend="jnp", post=False)
+        idx = build_index(spec, docs, queries)
+        path = str(tmp_path / f"{method}.npz")
+        idx.save(path)
+        _assert_identical(idx.search(queries, 10),
+                          load_index(path).search(queries, 10))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend_name", sorted(BACKEND_METHODS))
+def test_roundtrip_ivf_backends(tmp_path, corpus, backend_name):
+    docs, queries = corpus
+    spec = IndexSpec(method=BACKEND_METHODS[backend_name], dim=32,
+                     backend="jnp", post=False, ivf=(16, 8), kmeans_iters=6)
+    idx = build_index(spec, docs, queries)
+    if backend_name != "float":
+        assert idx.scorer.name == backend_name
+    before = idx.search(queries, 10)
+    path = str(tmp_path / "ivf.npz")
+    idx.save(path)
+    idx2 = load_index(path)
+    assert isinstance(idx2, IVFIndex)
+    assert (idx2.nlist, idx2.nprobe) == (idx.nlist, idx.nprobe)
+    _assert_identical(before, idx2.search(queries, 10))
+    # per-call nprobe still works on the reloaded index, identically
+    _assert_identical(idx.search(queries, 10, nprobe=16),
+                      idx2.search(queries, 10, nprobe=16))
+
+
+@pytest.mark.slow
+def test_roundtrip_to_ivf_promotion(tmp_path, corpus):
+    """A promoted index (shared storage, decode-routed) persists too."""
+    docs, queries = corpus
+    pipe = CompressionPipeline([CenterNorm(), OneBitQuantizer(0.5)])
+    base = CompressedIndex.build(docs, queries, pipe, backend="jnp")
+    ivf = base.to_ivf(nlist=16, nprobe=8, kmeans_iters=6)
+    before = ivf.search(queries, 10)
+    path = str(tmp_path / "promo.npz")
+    ivf.save(path)
+    ivf2 = IVFIndex.load(path)
+    _assert_identical(before, ivf2.search(queries, 10))
+    # the artifact owns its storage: mutating the original source index
+    # must not poison the reloaded one
+    base.add(docs[:8])
+    _assert_identical(before, ivf2.search(queries, 10))
+
+
+@pytest.mark.slow
+def test_roundtrip_sharded(tmp_path, corpus):
+    docs, queries = corpus
+    mesh = jax.make_mesh((jax.device_count(),), ("model",))
+    spec = IndexSpec(method="pca_int8", dim=32, backend="jnp",
+                     shard=ShardSpec())
+    idx = build_index(spec, docs, queries, mesh=mesh)
+    before = idx.search(queries, 10)
+    path = str(tmp_path / "sharded.npz")
+    idx.save(path)
+    with pytest.raises(ValueError, match="mesh"):
+        load_index(path)
+    idx2 = ShardedCompressedIndex.load(path, mesh=mesh)
+    _assert_identical(before, idx2.search(queries, 10))
+
+
+@pytest.mark.slow
+def test_roundtrip_sharded_ivf(tmp_path, corpus):
+    docs, queries = corpus
+    mesh = jax.make_mesh((jax.device_count(),), ("model",))
+    spec = IndexSpec(method="onebit", backend="jnp", ivf=(16, 8),
+                     kmeans_iters=6, shard=ShardSpec())
+    idx = build_index(spec, docs, queries, mesh=mesh)
+    before = idx.search(queries, 10)
+    path = str(tmp_path / "sivf.npz")
+    idx.save(path)
+    idx2 = ShardedIVFIndex.load(path, mesh=mesh)
+    _assert_identical(before, idx2.search(queries, 10))
+
+
+def test_load_rejects_wrong_kind(tmp_path, corpus):
+    docs, queries = corpus
+    idx = build_index(IndexSpec(method="int8", backend="jnp"), docs, queries)
+    path = str(tmp_path / "c.npz")
+    idx.save(path)
+    with pytest.raises(TypeError, match="CompressedIndex"):
+        DenseIndex.load(path)
+
+
+def test_load_rejects_foreign_npz(tmp_path):
+    path = str(tmp_path / "foreign.npz")
+    np.savez(path, x=np.zeros(3))
+    with pytest.raises(ValueError, match="artifact"):
+        load_index(path)
+
+
+def test_save_empty_index_errors(tmp_path):
+    pipe = CompressionPipeline([Int8Quantizer()])
+    idx = CompressedIndex(pipe, backend="jnp")
+    with pytest.raises(ValueError, match="empty"):
+        idx.save(str(tmp_path / "e.npz"))
+
+
+def test_engine_cold_start_from_artifact(tmp_path, corpus):
+    from repro.serve import ServeEngine
+    docs, queries = corpus
+    idx = build_index(IndexSpec(method="int8", backend="jnp"), docs, queries)
+    want = np.asarray(idx.search(queries, 5)[1])
+    path = str(tmp_path / "engine.npz")
+    idx.save(path)
+    engine = ServeEngine.from_artifact(path, k=5)
+    rid = engine.submit(np.asarray(queries))
+    got = engine.drain()[rid].ids
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# uniform k clamping (satellite: one guard for all five classes)
+# ---------------------------------------------------------------------------
+
+
+def _five_indexes(docs, queries):
+    mesh = jax.make_mesh((jax.device_count(),), ("model",))
+    yield build_index(IndexSpec(method="dense"), docs)
+    yield build_index(IndexSpec(method="int8", backend="jnp"), docs, queries)
+    yield build_index(IndexSpec(method="int8", backend="jnp", ivf=(4, 4),
+                                kmeans_iters=3), docs, queries)
+    yield build_index(IndexSpec(method="int8", backend="jnp",
+                                shard=ShardSpec()), docs, queries, mesh=mesh)
+    yield build_index(IndexSpec(method="int8", backend="jnp", ivf=(4, 4),
+                                kmeans_iters=3, shard=ShardSpec()),
+                      docs, queries, mesh=mesh)
+
+
+@pytest.mark.slow
+def test_k_clamps_uniformly_across_all_five_classes():
+    rng = np.random.default_rng(3)
+    docs = jnp.asarray(rng.standard_normal((23, 64)), jnp.float32)
+    queries = jnp.asarray(rng.standard_normal((4, 64)), jnp.float32)
+    for idx in _five_indexes(docs, queries):
+        name = type(idx).__name__
+        assert isinstance(idx, Index), name      # protocol, all five classes
+        vals, ids = idx.search(queries, 100)     # k ≫ n_docs
+        assert vals.shape == (4, 23), name
+        assert ids.shape == (4, 23), name
+        with pytest.raises(ValueError, match="k must be"):
+            idx.search(queries, 0)
+        with pytest.raises(ValueError, match="k must be"):
+            idx.search(queries, -3)
+
+
+def test_resolve_k_contract():
+    assert resolve_k(5, 100) == 5
+    assert resolve_k(100, 5) == 5
+    with pytest.raises(ValueError):
+        resolve_k(0, 10)
+
+
+# ---------------------------------------------------------------------------
+# pipeline load validation (satellite: no half-fitted stages)
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_load_rejects_incomplete_stage(tmp_path, corpus):
+    docs, queries = corpus
+    pipe = CompressionPipeline([CenterNorm(), PCA(8), Int8Quantizer()])
+    pipe.fit(docs, queries)
+    path = str(tmp_path / "p.npz")
+    pipe.save(path)
+    data = dict(np.load(path))
+    del data["2:Int8Quantizer:zero"]
+    bad = str(tmp_path / "bad.npz")
+    np.savez(bad, **data)
+    fresh = CompressionPipeline([CenterNorm(), PCA(8), Int8Quantizer()])
+    with pytest.raises(ValueError, match="missing keys.*zero"):
+        fresh.load(bad)
+
+
+def test_pipeline_load_rejects_stage_type_mismatch(tmp_path, corpus):
+    docs, queries = corpus
+    pipe = CompressionPipeline([CenterNorm(), PCA(8)])
+    pipe.fit(docs, queries)
+    path = str(tmp_path / "p.npz")
+    pipe.save(path)
+    with pytest.raises(ValueError, match="mismatch"):
+        CompressionPipeline([PCA(8), CenterNorm()]).load(path)
+
+
+def test_pipeline_load_rejects_extra_stage_index(tmp_path, corpus):
+    docs, queries = corpus
+    pipe = CompressionPipeline([CenterNorm(), PCA(8)])
+    pipe.fit(docs, queries)
+    path = str(tmp_path / "p.npz")
+    pipe.save(path)
+    with pytest.raises(ValueError, match="stage index"):
+        CompressionPipeline([CenterNorm()]).load(path)
