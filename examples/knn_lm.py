@@ -9,8 +9,10 @@ The paper motivates index compression partly through kNN-LM-style pipelines
   2. run it over the corpus collecting (hidden state → next token) pairs —
      the datastore,
   3. compress the datastore index with PCA+int8 (24×),
-  4. decode with p = λ·p_kNN + (1−λ)·p_LM and compare perplexity
-     LM-only vs kNN-LM-compressed.
+  4. serve the kNN lookups through the :class:`RetrievalService` front
+     door (the datastore registered as a named index, queried via the
+     async handle API), then decode with p = λ·p_kNN + (1−λ)·p_LM and
+     compare perplexity LM-only vs kNN-LM-compressed.
 """
 
 import argparse
@@ -24,6 +26,7 @@ from repro.configs.base import LMConfig
 from repro.core import (CenterNorm, CompressionPipeline, Int8Quantizer, PCA)
 from repro.models import transformer as T
 from repro.retrieval import CompressedIndex
+from repro.serve import QueryOptions, RetrievalService
 from repro.train import optimizer as O
 from repro.train import trainer
 
@@ -94,7 +97,14 @@ def main(argv=None) -> None:
                                  .reshape(-1, CFG.vocab_size), -1)
     nll_lm = -np.asarray(logp_lm)[np.arange(len(targets)), targets]
 
-    dists, ids = idx.search(jnp.asarray(q), args.k)
+    # the datastore is a named index behind the serving front door; the
+    # eval loop is just another producer submitting async query blocks
+    with RetrievalService(default_k=args.k) as service:
+        service.register("datastore", idx)
+        handle = service.query(q, QueryOptions(index="datastore",
+                                               k=args.k))
+        res = handle.result(timeout=300)
+        dists, ids = res.scores, res.ids
     knn_tokens = vals[np.asarray(ids)]                      # (N, k)
     w = jax.nn.softmax(jnp.asarray(dists), -1)              # similarity IP
     p_knn = np.zeros((len(targets), CFG.vocab_size), np.float32)

@@ -1,17 +1,21 @@
-"""End-to-end serving driver: a request stream against a compressed,
-(optionally IVF) KB index artifact through the :mod:`repro.serve` engine.
+"""End-to-end serving driver: a request stream against the
+:class:`~repro.serve.RetrievalService` front door, including a mid-stream
+staged → canaried → promoted KB refresh.
 
     PYTHONPATH=src python examples/serve_compressed.py --requests 50
     PYTHONPATH=src python examples/serve_compressed.py --method pca_onebit
 
 The index is described declaratively (:class:`IndexSpec`), built once with
-:func:`build_index`, saved to a single ``.npz`` artifact, and the engine
-cold-starts from that artifact (``ServeEngine.from_artifact``) exactly like
-a production serve process would — no raw corpus, no re-fit.  The driver
-then simulates a request stream (blocks of queries submitted to the
-engine), which coalesces them into padded micro-batches, dispatches to the
-index, measures latency percentiles, and validates quality online against
-an exact-search shadow index (the standard "shadow scoring" pattern).
+:func:`build_index`, saved to a single ``.npz`` artifact, and the service
+registers that artifact as version 1 of a named index — exactly like a
+production serve process: no raw corpus, no re-fit.  Producer code then
+streams query blocks through the async API (``service.query(...) →
+QueryHandle``) while a background drain loop micro-batches and dispatches
+them.  Halfway through, a *refreshed* corpus (the nightly-rebuild
+scenario: new documents appended) is built into a second artifact, staged
+off the serving path, canaried against live traffic via shadow overlap,
+and promoted with zero downtime — requests keep flowing throughout and
+each one ranks entirely against the version it bound to.
 """
 
 import argparse
@@ -19,11 +23,12 @@ import os
 import sys
 import tempfile
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.data import make_dpr_like_kb
 from repro.retrieval import IndexSpec, build_index
-from repro.serve import MicroBatcher, ServeEngine, ShadowScorer
+from repro.serve import QueryOptions, RetrievalService
 from repro.utils import human_bytes
 
 
@@ -40,9 +45,6 @@ def main(argv=None) -> None:
     ap.add_argument("--no-post", action="store_true",
                     help="skip post-quantization CenterNorm: storage stays "
                          "quantized and scoring runs the int8/1-bit kernels")
-    ap.add_argument("--drain-every", type=int, default=1,
-                    help="submit N requests between drains (N>1 shows the "
-                         "micro-batcher coalescing requests)")
     ap.add_argument("--ivf-nlist", type=int, default=0,
                     help="build an IVF index with this many lists "
                          "(0 = exact search)")
@@ -52,61 +54,88 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     dim = 245 if args.method == "pca_onebit" else args.dim
-    kb = make_dpr_like_kb(n_queries=args.requests * args.batch,
+    kb = make_dpr_like_kb(n_queries=max(64, args.requests * args.batch),
                           n_docs=args.n_docs)
+    fresh = make_dpr_like_kb(n_queries=8, n_docs=max(64, args.n_docs // 20),
+                             seed=1)
 
     ivf = None
     full_probe = None
     if args.ivf_nlist:
         nprobe = args.ivf_nprobe or max(1, args.ivf_nlist // 2)
         ivf = (args.ivf_nlist, nprobe)
+        full_probe = args.ivf_nlist
 
     spec = IndexSpec(method=args.method, dim=dim, post=not args.no_post,
                      ivf=ivf)
-    print(f"building index from spec [{args.method}"
-          f"{', ivf=' + str(ivf) if ivf else ''}] ...")
-    idx = build_index(spec, kb.docs, kb.queries[:512])
-    print(f"  scorer backend: {idx.scorer.name}")
-    shadow = ShadowScorer.for_compressed(idx, kb.docs, every=5)
-    print(f"  index {human_bytes(idx.nbytes)} vs shadow "
-          f"{human_bytes(shadow.index.nbytes)} "
-          f"({shadow.index.nbytes / idx.nbytes:.0f}x)")
-    if ivf:
-        full_probe = idx.nlist
-        print(f"  IVF: nlist={idx.nlist} nprobe={idx.nprobe} "
-              f"(every 4th request forces nprobe={full_probe})")
-
-    with tempfile.TemporaryDirectory() as tmp:
-        path = os.path.join(tmp, "kb_index.npz")
-        idx.save(path)
-        print(f"  artifact {human_bytes(os.path.getsize(path))}; engine "
-              "cold-starts from it (no corpus, no re-fit)")
-        engine = ServeEngine.from_artifact(
-            path, k=args.k, batcher=MicroBatcher(max_batch=args.max_batch),
-            shadow=shadow)
-
     queries = np.asarray(kb.queries)
-    served = 0
-    for r in range(args.requests):
-        # recall-sensitive traffic widens its probe per request; the engine
-        # batches each nprobe group through its own compiled graph
-        nprobe = full_probe if (full_probe and r % 4 == 3) else None
-        engine.submit(queries[r * args.batch: (r + 1) * args.batch],
-                      nprobe=nprobe)
-        if (r + 1) % args.drain_every == 0:
-            served += len(engine.drain())
-    served += len(engine.drain())
+    k = args.k
 
-    stats = engine.stats()
-    print(f"\nserved {served} requests "
-          f"({stats['queries_served']} queries, "
-          f"{stats['batches_served']} micro-batches)")
-    print(f"  latency p50={stats['p50_ms']:.1f}ms "
-          f"p95={stats['p95_ms']:.1f}ms "
-          f"p99={stats['p99_ms']:.1f}ms  (CPU host)")
-    print(f"  top-{args.k} overlap vs exact shadow: "
-          f"{stats['shadow_overlap']:.3f} "
-          f"({stats['shadow_batches']} batches sampled)")
+    def build_artifact(docs, path, tag):
+        idx = build_index(spec, docs, kb.queries[:512])
+        idx.save(path)
+        print(f"  {tag}: {len(idx)} docs, scorer {idx.scorer.name}, "
+              f"artifact {human_bytes(os.path.getsize(path))}")
+        return idx
+
+    served = [0]
+
+    def stream(service, lo, hi):
+        """Submit requests [lo, hi); resolve async handles as they land."""
+        handles = []
+        for r in range(lo, hi):
+            nprobe = full_probe if (full_probe and r % 4 == 3) else None
+            off = (r * args.batch) % max(1, len(queries) - args.batch)
+            handles.append(service.query(
+                queries[off: off + args.batch],
+                QueryOptions(index="kb", k=k, nprobe=nprobe)))
+        for h in handles:
+            h.result(timeout=120)
+        served[0] += len(handles)
+
+    print(f"building v1 index from spec [{args.method}"
+          f"{', ivf=' + str(ivf) if ivf else ''}] ...")
+    with tempfile.TemporaryDirectory() as tmp:
+        path_v1 = os.path.join(tmp, "kb_v1.npz")
+        path_v2 = os.path.join(tmp, "kb_v2.npz")
+        build_artifact(kb.docs, path_v1, "v1")
+
+        with RetrievalService(default_k=k,
+                              max_batch=args.max_batch) as service:
+            service.register("kb", artifact=path_v1)
+            print("  service cold-started from the artifact "
+                  "(no corpus, no re-fit)\n")
+
+            half, three_q = args.requests // 2, (3 * args.requests) // 4
+            stream(service, 0, half)
+
+            # the nightly refresh: corpus grows, new artifact is staged off
+            # the serving path, canaried on live traffic, then promoted
+            print(f"refresh after {served[0]} requests: building v2 "
+                  f"(+{len(fresh.docs)} new docs) while serving continues")
+            docs_v2 = jnp.concatenate([kb.docs, fresh.docs], axis=0)
+            build_artifact(docs_v2, path_v2, "v2")
+            service.stage("kb", artifact=path_v2, canary_every=2)
+            stream(service, half, max(half + 1, three_q))
+            canary = service.canary("kb")
+            print(f"  canary: overlap {canary['overlap']:.3f} over "
+                  f"{canary['batches']} sampled batches")
+            live = service.promote("kb", min_overlap=0.5)
+            print(f"  promoted v{live} (rollback(\"kb\") would undo)\n")
+            stream(service, max(half + 1, three_q), args.requests)
+
+            stats = service.stats()
+            table = stats["indexes"]["kb"]
+            print(f"served {stats['requests_served']} requests "
+                  f"({stats['queries_served']} queries, "
+                  f"{stats['batches_served']} micro-batches) across "
+                  f"versions {sorted(table['versions'])}, "
+                  f"live=v{table['live']}")
+            print(f"  latency p50={stats['p50_ms']:.1f}ms "
+                  f"p95={stats['p95_ms']:.1f}ms "
+                  f"p99={stats['p99_ms']:.1f}ms  (CPU host)")
+            print(f"  admission: {stats['pending_queries']} pending, "
+                  f"{stats['requests_rejected']} rejected")
 
 
 if __name__ == "__main__":

@@ -8,7 +8,7 @@ The declarative front door is :mod:`repro.retrieval.api`::
 """
 
 from repro.retrieval.api import (Index, IndexSpec, ShardSpec, build_index,
-                                 load_index, save_index)
+                                 load_index, load_index_meta, save_index)
 from repro.retrieval.index import CompressedIndex, DenseIndex
 from repro.retrieval.ivf import IVFFlatIndex, IVFIndex
 from repro.retrieval.rprecision import (make_dim_drop_scorer, r_precision,
@@ -22,7 +22,7 @@ from repro.retrieval.topk import resolve_k, topk_search
 
 __all__ = [
     "Index", "IndexSpec", "ShardSpec", "build_index", "load_index",
-    "save_index",
+    "load_index_meta", "save_index",
     "CompressedIndex", "DenseIndex", "IVFFlatIndex", "IVFIndex",
     "ShardedCompressedIndex", "ShardedIVFIndex",
     "Scorer", "backend_tail_stages", "get_scorer", "register_scorer",

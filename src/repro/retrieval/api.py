@@ -31,6 +31,7 @@ Typical life cycle::
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 from typing import Any, Optional, Protocol, Sequence, Tuple, Union, \
     runtime_checkable
@@ -444,7 +445,8 @@ def load_index(path: str, *, mesh=None, backend: Optional[str] = None,
                                 expect=expect)
 
 
-def _load_index_from(data, path: str, *, mesh, backend, expect):
+def _parse_meta(data, path: str) -> dict:
+    """Validate and decode the artifact's JSON header."""
     if "__meta__" not in data.files:
         raise ValueError(f"{path} is not a {ARTIFACT_FORMAT} artifact "
                          "(no __meta__ entry)")
@@ -456,6 +458,36 @@ def _load_index_from(data, path: str, *, mesh, backend, expect):
         raise ValueError(
             f"{path}: artifact version {meta['format_version']} is newer "
             f"than this build ({ARTIFACT_VERSION})")
+    return meta
+
+
+def load_index_meta(path: str) -> dict:
+    """Read an artifact's identity header without materialising any arrays.
+
+    ``.npz`` members decompress lazily, so this touches only the JSON
+    header — the serving registry (:mod:`repro.serve.router`) uses it to
+    label a staged/registered version (kind, corpus size, spec) before, or
+    instead of, paying the full :func:`load_index` cost.  ``fingerprint``
+    hashes the canonical header: two artifacts agree iff their recipe,
+    shape, and scalar state agree (storage bytes are *not* hashed).
+    """
+    with np.load(path, allow_pickle=False) as data:
+        meta = _parse_meta(data, path)
+    m = meta.get("index") or {}
+    return {
+        "format_version": meta.get("format_version"),
+        "kind": meta["kind"],
+        "spec": meta.get("spec"),
+        "n_docs": m.get("n_docs"),
+        "dim": m.get("dim"),
+        "index_version": m.get("version", 0),
+        "fingerprint": hashlib.sha256(
+            json.dumps(meta, sort_keys=True).encode()).hexdigest()[:16],
+    }
+
+
+def _load_index_from(data, path: str, *, mesh, backend, expect):
+    meta = _parse_meta(data, path)
     kind = meta["kind"]
     m = meta["index"]
 

@@ -1,24 +1,36 @@
-"""Online serving layer: micro-batching request engine over any index.
+"""Online serving layer: a multi-index front door over micro-batching
+execution cores.
 
-Promoted out of ``examples/serve_compressed.py`` into a reusable subsystem:
-
+* :class:`~repro.serve.service.RetrievalService` — the front door: a
+  registry of named, versioned indexes (in-memory or lazily loaded from
+  saved artifacts), an async ``query() → QueryHandle`` API served by a
+  background drain-loop thread with admission control, and zero-downtime
+  ``stage`` / canary / ``promote`` / ``rollback`` hot-swap.
+* :class:`~repro.serve.engine.ServeEngine` — the per-index execution
+  core: ``submit``/``drain`` request queue dispatching micro-batches to
+  any index (dense / compressed / IVF / sharded), latency percentiles,
+  per-request ``k`` / ``nprobe`` overrides.
 * :class:`~repro.serve.batcher.MicroBatcher` — coalesces queued requests
   into padded micro-batches (bucketed row counts bound jit recompiles).
-* :class:`~repro.serve.engine.ServeEngine` — ``submit``/``drain`` request
-  queue dispatching micro-batches to any index (dense / compressed /
-  sharded) and tracking latency percentiles.
 * :class:`~repro.serve.shadow.ShadowScorer` — online quality validation
-  against an exact-search shadow index on a sampled fraction of traffic.
+  against a reference index on a sampled fraction of traffic (also the
+  hot-swap canary mechanism).
 * :class:`~repro.serve.metrics.LatencyStats` — streaming latency
-  percentile tracking.
+  percentile tracking, mergeable across engines for the service snapshot.
 """
 
 from repro.serve.batcher import MicroBatch, MicroBatcher
 from repro.serve.engine import ServeEngine, ServeResult
 from repro.serve.metrics import LatencyStats
+from repro.serve.router import IndexEntry, IndexRegistry, IndexVersion
+from repro.serve.service import (CanaryFailed, QueryHandle, QueryOptions,
+                                 QueueFull, RetrievalService, ServiceClosed)
 from repro.serve.shadow import ShadowScorer
 
 __all__ = [
     "MicroBatch", "MicroBatcher", "ServeEngine", "ServeResult",
     "LatencyStats", "ShadowScorer",
+    "IndexEntry", "IndexRegistry", "IndexVersion",
+    "RetrievalService", "QueryOptions", "QueryHandle",
+    "QueueFull", "CanaryFailed", "ServiceClosed",
 ]

@@ -76,6 +76,10 @@ class MicroBatcher:
             queries = np.asarray(queries)
             if queries.ndim == 1:
                 queries = queries[None, :]
+            if queries.shape[0] == 0:
+                # a 0-row entry would fall through the slicing loop without
+                # producing a slice — the request would silently vanish
+                raise ValueError(f"request {request_id}: empty query block")
             off = 0
             while off < queries.shape[0]:
                 room = self.max_batch - cur_n

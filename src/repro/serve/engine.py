@@ -1,26 +1,31 @@
-"""The serving engine: request queue → micro-batches → index → results.
+"""The per-index execution core: request queue → micro-batches → index.
 
 :class:`ServeEngine` fronts any index exposing ``search(queries, k)`` —
 :class:`~repro.retrieval.index.DenseIndex`,
 :class:`~repro.retrieval.index.CompressedIndex`,
 :class:`~repro.retrieval.ivf.IVFIndex`, or the sharded variants
-(:mod:`repro.retrieval.sharded`) — so the same engine serves a laptop demo
+(:mod:`repro.retrieval.sharded`) — so the same core serves a laptop demo
 and a mesh-sharded production deployment.
 
-Model: callers ``submit()`` query blocks (any row count) and receive a
+Model: callers ``submit()`` query blocks (one or more rows) and receive a
 request id; ``drain()`` coalesces everything pending through the
 micro-batcher, dispatches each padded batch in one device call, and
 returns completed :class:`ServeResult`\\ s.  ``submit`` is thread-safe, so
 any number of producer threads can feed one drain loop (the standard
-accelerator-serving topology: many frontends, one dispatcher).
+accelerator-serving topology: many frontends, one dispatcher).  The
+multi-index front door over a fleet of engines — named registry entries,
+versioned hot-swap, a background drain thread and an async handle API —
+is :class:`repro.serve.service.RetrievalService`; this class stays the
+single-index core it dispatches to.
 
-IVF indexes accept a per-request ``nprobe`` override: latency-sensitive
-traffic probes fewer lists, recall-sensitive traffic more, against the
-same storage.  Requests are micro-batched per ``nprobe`` value (a batch
-must share one compiled search graph).  Each distinct override value
-compiles — and permanently retains — its own search graph, so frontends
-should offer a small fixed menu of probe widths (e.g. fast/default/full),
-not a continuous per-user knob.
+Requests may override ``k`` and (for IVF indexes) ``nprobe`` per
+submission: latency-sensitive traffic probes fewer lists or asks for a
+shorter ranking, recall-sensitive traffic more, against the same storage.
+Requests are micro-batched per ``(k, nprobe)`` group (a batch must share
+one compiled search graph).  Each distinct override value compiles — and
+permanently retains — its own search graph, so frontends should offer a
+small fixed menu of widths (e.g. fast/default/full), not a continuous
+per-user knob.
 """
 
 from __future__ import annotations
@@ -56,9 +61,11 @@ class ServeEngine:
         self.shadow = shadow
         self.latency = LatencyStats()          # per micro-batch device time
         self._lock = threading.Lock()
-        self._pending: list[tuple[int, np.ndarray, Optional[int]]] = []
+        self._pending: list[tuple[int, np.ndarray, Optional[int],
+                                  Optional[int]]] = []
         self._submit_time: dict[int, float] = {}
         self._next_id = 0
+        self._observers: list[ShadowScorer] = []
         self.queries_served = 0
         self.batches_served = 0
         self.requests_served = 0
@@ -81,17 +88,24 @@ class ServeEngine:
         return cls(index, k=k, batcher=batcher, shadow=shadow)
 
     # -- request side ------------------------------------------------------
-    def submit(self, queries, nprobe: Optional[int] = None) -> int:
+    def submit(self, queries, nprobe: Optional[int] = None,
+               k: Optional[int] = None) -> int:
         """Enqueue a block of queries; returns the request id.
 
         Thread-safe.  ``nprobe`` overrides the index's probe width for this
-        request only (IVF indexes; rejected for indexes without one).
+        request only (IVF indexes; rejected for indexes without one);
+        ``k`` overrides the engine's default ranking length.
         """
         q = np.asarray(queries, dtype=np.float32)
         if q.ndim == 1:
             q = q[None, :]
         if q.ndim != 2:
             raise ValueError(f"queries must be (n, d) or (d,), got {q.shape}")
+        if q.shape[0] == 0:
+            raise ValueError("empty query block: submit needs ≥ 1 row, "
+                             f"got shape {q.shape}")
+        if k is not None and k < 1:
+            raise ValueError("k must be ≥ 1")
         if nprobe is not None:
             if getattr(self.index, "nprobe", None) is None:
                 raise ValueError("per-request nprobe needs an IVF index; "
@@ -102,14 +116,26 @@ class ServeEngine:
         with self._lock:
             request_id = self._next_id
             self._next_id += 1
-            self._pending.append((request_id, q, nprobe))
+            self._pending.append((request_id, q, k, nprobe))
             self._submit_time[request_id] = now
         return request_id
 
     @property
     def pending(self) -> int:
         with self._lock:
-            return sum(q.shape[0] for _, q, _ in self._pending)
+            return sum(q.shape[0] for _, q, _, _ in self._pending)
+
+    # -- observers ---------------------------------------------------------
+    def add_observer(self, observer: ShadowScorer) -> None:
+        """Attach an extra shadow observer (e.g. a hot-swap canary) to the
+        serving path; it sees the same sampled batches as ``shadow``."""
+        with self._lock:
+            self._observers.append(observer)
+
+    def remove_observer(self, observer: ShadowScorer) -> None:
+        with self._lock:
+            if observer in self._observers:
+                self._observers.remove(observer)
 
     # -- dispatch side -----------------------------------------------------
     def drain(self) -> dict[int, ServeResult]:
@@ -119,32 +145,36 @@ class ServeEngine:
                 return {}
             pending, self._pending = self._pending, []
             submit_time = {rid: self._submit_time.pop(rid)
-                           for rid, _, _ in pending}
+                           for rid, _, _, _ in pending}
+            observers = tuple(([self.shadow] if self.shadow is not None
+                               else []) + self._observers)
         out_scores: dict[int, np.ndarray] = {}
         out_ids: dict[int, np.ndarray] = {}
-        for rid, q, _ in pending:
+        for rid, q, _, _ in pending:
             n = q.shape[0]
             out_scores[rid] = np.empty((n, 0), np.float32)
             out_ids[rid] = np.empty((n, 0), np.int32)
 
-        # micro-batch per nprobe group: one compiled graph per batch.
+        # micro-batch per (k, nprobe) group: one compiled graph per batch.
         # FIFO order is preserved within each group.
-        groups: dict[Optional[int], list[tuple[int, np.ndarray]]] = {}
-        for rid, q, nprobe in pending:
-            groups.setdefault(nprobe, []).append((rid, q))
+        groups: dict[tuple[int, Optional[int]],
+                     list[tuple[int, np.ndarray]]] = {}
+        for rid, q, k, nprobe in pending:
+            key = (self.k if k is None else k, nprobe)
+            groups.setdefault(key, []).append((rid, q))
 
-        for nprobe, items in groups.items():
+        for (k, nprobe), items in groups.items():
             kwargs = {} if nprobe is None else {"nprobe": nprobe}
             for batch in self.batcher.form(items):
                 t0 = time.perf_counter()
-                vals, ids = self.index.search(batch.queries, self.k, **kwargs)
+                vals, ids = self.index.search(batch.queries, k, **kwargs)
                 vals, ids = np.asarray(vals), np.asarray(ids)   # blocks
                 self.latency.record(time.perf_counter() - t0)
                 self.batches_served += 1
                 self.queries_served += batch.n_valid
-                if self.shadow is not None:
-                    self.shadow.observe(batch.queries[:batch.n_valid],
-                                        ids[:batch.n_valid], self.k)
+                for obs in observers:
+                    obs.observe(batch.queries[:batch.n_valid],
+                                ids[:batch.n_valid], k)
                 for s in batch.slices:
                     rid, rows = s.request_id, s.stop - s.start
                     if out_scores[rid].shape[1] == 0:
@@ -160,7 +190,7 @@ class ServeEngine:
 
         done = time.perf_counter()
         results = {}
-        for rid, _, _ in pending:
+        for rid, _, _, _ in pending:
             results[rid] = ServeResult(
                 request_id=rid, scores=out_scores[rid], ids=out_ids[rid],
                 latency_s=done - submit_time[rid])

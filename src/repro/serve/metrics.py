@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+from typing import Iterable
+
 import numpy as np
 
 
@@ -29,6 +31,24 @@ class LatencyStats:
 
     def __len__(self) -> int:
         return self.total_recorded
+
+    @property
+    def samples(self) -> tuple[float, ...]:
+        """Snapshot of the retained window, in seconds."""
+        return tuple(self._samples)
+
+    @classmethod
+    def merge(cls, parts: Iterable["LatencyStats"]) -> "LatencyStats":
+        """Roll several collectors into one (the service-level snapshot
+        over per-engine collectors): retained windows concatenate, total
+        counts sum.  The merged view is itself a :class:`LatencyStats`, so
+        ``summary()`` / ``percentile()`` work unchanged."""
+        parts = list(parts)
+        merged = cls(window=max(1, sum(p.window for p in parts)))
+        for p in parts:
+            merged._samples.extend(p.samples)
+            merged.total_recorded += p.total_recorded
+        return merged
 
     def percentile(self, p: float) -> float:
         """p-th percentile latency in milliseconds (nan when empty)."""

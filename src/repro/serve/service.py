@@ -1,0 +1,528 @@
+"""RetrievalService: the multi-index serving front door.
+
+One process-wide object fronts a registry of **named, versioned indexes**
+(each backed by an in-memory index or lazily loaded from a
+:func:`repro.retrieval.api.save_index` artifact), serves an **async
+request API** from a background drain-loop thread with admission control,
+and hot-swaps index versions under live traffic with zero downtime::
+
+    service = RetrievalService()
+    service.register("wiki", artifact="wiki_v1.npz")
+    handle = service.query(queries, QueryOptions(index="wiki", k=20,
+                                                 nprobe=8))
+    scores, ids = handle.result(timeout=5.0)
+
+    # nightly KB refresh, while producers keep submitting:
+    service.stage("wiki", artifact="wiki_v2.npz", canary_every=4)
+    ...                                    # canary overlap accumulates
+    service.promote("wiki", min_overlap=0.6)   # atomic flip
+    service.rollback("wiki")                   # undo, also atomic
+
+Design points:
+
+* **Version binding** — a request binds to the live version *at submit
+  time* and drains against that version's engine even if a promote lands
+  while it is queued, so every result ranks entirely against the pre- or
+  post-promote index, never a mix.  Retired versions keep draining until
+  empty, then are garbage-collected.
+* **Admission control** — queued rows are bounded by
+  ``max_pending_queries``; past it, :meth:`query` raises :class:`QueueFull`
+  instead of letting the queue grow without bound (callers shed load or
+  retry — the standard back-pressure contract).
+* **Canary** — ``stage(..., canary_every=N)`` attaches a
+  :class:`~repro.serve.shadow.ShadowScorer` over the *staged* index to the
+  live engine: every Nth served batch is re-scored on the staged version
+  and the top-k overlap tracked, so ``promote(min_overlap=...)`` can
+  refuse to flip to a bad build using real traffic as the judge.
+* **One dispatcher** — a single background thread drains every engine
+  (micro-batching per ``(index version, k, nprobe)`` group), which is the
+  standard accelerator topology: many frontends, one device dispatcher.
+  Constructing with ``start=False`` gives a manual service —
+  :meth:`drain_once` is then the caller's dispatch step (used by tests and
+  the benchmark's "manual loop" baseline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional
+
+import numpy as np
+
+from repro.serve.batcher import MicroBatcher
+from repro.serve.engine import ServeEngine, ServeResult
+from repro.serve.metrics import LatencyStats
+from repro.serve.router import IndexEntry, IndexRegistry, IndexVersion
+from repro.serve.shadow import ShadowScorer
+
+
+class QueueFull(RuntimeError):
+    """Admission control rejected the request: queue depth at the bound."""
+
+
+class CanaryFailed(RuntimeError):
+    """``promote(min_overlap=...)`` found the staged version too different
+    from live traffic's rankings."""
+
+
+class ServiceClosed(RuntimeError):
+    """The service is closed (or closed before this request completed)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryOptions:
+    """Per-request routing and search options.
+
+    ``index`` names the registry entry; ``k`` overrides the engine's
+    default ranking length (``None`` keeps it); ``nprobe`` overrides the
+    probe width for IVF-backed indexes.  Each distinct ``(k, nprobe)``
+    value forms its own micro-batch group and compiles its own search
+    graph — offer a small fixed menu, not a continuous knob.
+    """
+
+    index: str = "default"
+    k: Optional[int] = None
+    nprobe: Optional[int] = None
+
+    def __post_init__(self):
+        if self.k is not None and self.k < 1:
+            raise ValueError("k must be ≥ 1")
+        if self.nprobe is not None and self.nprobe < 1:
+            raise ValueError("nprobe must be ≥ 1")
+
+
+class QueryHandle:
+    """Async result for one submitted query block.
+
+    The drain loop resolves it; :meth:`result` blocks until then (or
+    raises ``TimeoutError``).  A handle resolves exactly once — either
+    with a :class:`~repro.serve.engine.ServeResult` or with the error that
+    killed its dispatch.
+    """
+
+    def __init__(self, index: str, version: int, request_id: int,
+                 n_rows: int):
+        self.index = index
+        self.version = version              # the version this request bound to
+        self.request_id = request_id
+        self.n_rows = n_rows
+        self._event = threading.Event()
+        self._result: Optional[ServeResult] = None
+        self._error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> ServeResult:
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"request {self.request_id} on {self.index!r} "
+                f"v{self.version} still pending after {timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    # -- called by the drain loop only ------------------------------------
+    def _resolve(self, result: ServeResult) -> None:
+        self._result = result
+        self._event.set()
+
+    def _fail(self, error: BaseException) -> None:
+        self._error = error
+        self._event.set()
+
+    def __repr__(self) -> str:
+        state = "done" if self.done() else "pending"
+        return (f"QueryHandle({self.index!r} v{self.version} "
+                f"req={self.request_id} rows={self.n_rows} {state})")
+
+
+class RetrievalService:
+    """Multi-index serving front door with versioned hot-swap."""
+
+    def __init__(self, *, default_k: int = 10, max_batch: int = 64,
+                 max_pending_queries: int = 4096,
+                 poll_interval_s: float = 0.05, start: bool = True):
+        self.default_k = default_k
+        self.max_pending_queries = max_pending_queries
+        self._batcher = MicroBatcher(max_batch=max_batch)
+        self._registry = IndexRegistry()
+        self._lock = threading.RLock()      # registry + version pointers
+        self._admission = threading.Lock()  # pending-row accounting
+        self._pending_queries = 0
+        self.requests_rejected = 0
+        self._poll_interval_s = poll_interval_s
+        self._kick = threading.Event()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._closed = False
+        if start:
+            self.start()
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> "RetrievalService":
+        """Start the background drain loop (idempotent)."""
+        with self._lock:
+            self._check_open()
+            if self._thread is None:
+                self._stop.clear()
+                self._thread = threading.Thread(
+                    target=self._run, name="retrieval-service-drain",
+                    daemon=True)
+                self._thread.start()
+        return self
+
+    def close(self, *, drain: bool = True) -> None:
+        """Stop serving: optionally drain pending work, stop the thread,
+        and fail any handle still unresolved with :class:`ServiceClosed`."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        if drain:
+            self.drain_once()
+        self._stop.set()
+        self._kick.set()
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+            self._thread = None
+        leftovers = []
+        with self._lock:
+            for entry in self._registry.entries():
+                for iv in entry.versions.values():
+                    with iv.lock:
+                        leftovers.extend(iv.handles.values())
+                        iv.handles.clear()
+        if leftovers:
+            with self._admission:
+                self._pending_queries -= sum(h.n_rows for h in leftovers)
+            err = ServiceClosed("service closed before request completed")
+            for h in leftovers:
+                h._fail(err)
+
+    def __enter__(self) -> "RetrievalService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise ServiceClosed("service is closed")
+
+    # -- registry ----------------------------------------------------------
+    def register(self, name: str, index=None, *,
+                 artifact: Optional[str] = None, lazy: bool = False,
+                 mesh=None, backend: Optional[str] = None,
+                 k: Optional[int] = None) -> int:
+        """Register a named index; returns its version number (1).
+
+        Exactly one of ``index`` (an in-memory object implementing the
+        :class:`~repro.retrieval.api.Index` protocol) or ``artifact`` (a
+        ``save_index`` ``.npz`` path).  With ``lazy=True`` the artifact's
+        arrays are not loaded until the first query routes to it — only
+        the identity header is read up front.  ``mesh`` / ``backend``
+        forward to :func:`~repro.retrieval.api.load_index`.
+        """
+        with self._lock:
+            self._check_open()
+            entry = IndexEntry(name)
+            iv = IndexVersion(entry.allocate(), index=index,
+                              artifact=artifact, mesh=mesh, backend=backend,
+                              k=k or self.default_k, batcher=self._batcher)
+            entry.versions[iv.version] = iv
+            entry.live = iv.version
+            self._registry.add(entry)   # raises on duplicate; nothing leaks
+        if not lazy:
+            iv.ensure_engine()
+        return iv.version
+
+    def indexes(self) -> list[str]:
+        with self._lock:
+            return self._registry.names()
+
+    # -- request side ------------------------------------------------------
+    def query(self, queries, options: Optional[QueryOptions] = None,
+              **kw) -> QueryHandle:
+        """Submit a query block; returns a :class:`QueryHandle` at once.
+
+        ``options`` is a :class:`QueryOptions`; as a convenience the same
+        fields may be given as keywords (``service.query(q, index="wiki",
+        k=5)``).  Raises :class:`QueueFull` when admission control rejects
+        the block, ``KeyError`` for an unknown index name.
+        """
+        if options is None:
+            options = QueryOptions(**kw)
+        elif kw:
+            raise TypeError("pass QueryOptions or keyword options, not both")
+        q = np.asarray(queries, dtype=np.float32)
+        if q.ndim == 1:
+            q = q[None, :]
+        if q.ndim != 2 or q.shape[0] == 0:
+            raise ValueError("queries must be (n ≥ 1, d) or (d,), got "
+                             f"shape {np.shape(queries)}")
+        n = int(q.shape[0])
+
+        with self._lock:
+            self._check_open()
+            entry = self._registry.get(options.index)
+            version = entry.live_version()
+            version.binders += 1       # pin against GC until submitted
+        try:
+            engine = version.ensure_engine()   # lazy load, outside the lock
+            with self._admission:
+                if self._pending_queries + n > self.max_pending_queries:
+                    self.requests_rejected += 1
+                    raise QueueFull(
+                        f"index {options.index!r}: {n} rows would push "
+                        f"queue depth past max_pending_queries="
+                        f"{self.max_pending_queries} "
+                        f"({self._pending_queries} pending)")
+                self._pending_queries += n
+            try:
+                # holding version.lock across submit+register means the
+                # drain loop (which takes it before popping handles) can
+                # never see a result whose handle isn't registered yet
+                with version.lock:
+                    rid = engine.submit(q, nprobe=options.nprobe,
+                                        k=options.k)
+                    handle = QueryHandle(entry.name, version.version, rid,
+                                         n)
+                    version.handles[rid] = handle
+            except BaseException:
+                with self._admission:
+                    self._pending_queries -= n
+                raise
+        finally:
+            with self._lock:
+                version.binders -= 1
+        self._kick.set()
+        return handle
+
+    @property
+    def pending_queries(self) -> int:
+        with self._admission:
+            return self._pending_queries
+
+    # -- dispatch side -----------------------------------------------------
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            if not self.drain_once():
+                self._kick.wait(self._poll_interval_s)
+                self._kick.clear()
+
+    def drain_once(self) -> int:
+        """Drain every engine with pending work; resolve handles.
+
+        Returns the number of requests resolved.  The background thread
+        calls this in a loop; with ``start=False`` it is the caller's
+        manual dispatch step.
+        """
+        with self._lock:
+            work = [(entry, iv) for entry in self._registry.entries()
+                    for iv in list(entry.versions.values()) if iv.loaded]
+        resolved = 0
+        for entry, iv in work:
+            engine = iv.engine
+            if engine.pending == 0:
+                continue
+            try:
+                results = engine.drain()
+            except Exception as e:
+                self._fail_version(iv, e)
+                continue
+            if not results:
+                continue
+            with iv.lock:
+                handles = {rid: iv.handles.pop(rid) for rid in results
+                           if rid in iv.handles}
+            with self._admission:
+                self._pending_queries -= sum(h.n_rows
+                                             for h in handles.values())
+            for rid, res in results.items():
+                h = handles.get(rid)
+                if h is not None:
+                    h._resolve(res)
+            resolved += len(handles)
+        self._gc()
+        return resolved
+
+    def _fail_version(self, iv: IndexVersion, error: Exception) -> None:
+        """A drain blew up: every outstanding request on that version was
+        popped from its queue, so fail all of its handles."""
+        with iv.lock:
+            handles, iv.handles = dict(iv.handles), {}
+        with self._admission:
+            self._pending_queries -= sum(h.n_rows for h in handles.values())
+        for h in handles.values():
+            h._fail(error)
+
+    def _gc(self) -> None:
+        """Drop retired versions (not live/staged/previous) once drained.
+
+        A version pinned by an in-flight :meth:`query` binding survives,
+        and a retired engine's counters fold into the entry's carry-over
+        totals so the service-level rollup never goes backwards.
+        """
+        with self._lock:
+            for entry in self._registry.entries():
+                for vid in entry.retired():
+                    iv = entry.versions[vid]
+                    if iv.binders:
+                        continue
+                    if iv.loaded:
+                        if iv.engine.pending or iv.handles:
+                            continue
+                        for key in entry.retired_totals:
+                            entry.retired_totals[key] += \
+                                getattr(iv.engine, key)
+                        entry.retired_latency = LatencyStats.merge(
+                            [entry.retired_latency, iv.engine.latency])
+                    del entry.versions[vid]
+
+    # -- hot swap ----------------------------------------------------------
+    def stage(self, name: str, index=None, *, artifact: Optional[str] = None,
+              mesh=None, backend: Optional[str] = None,
+              k: Optional[int] = None, canary_every: int = 0) -> int:
+        """Load the next version of ``name`` off the serving path.
+
+        The artifact load (or in-memory adoption) and engine construction
+        happen in the *calling* thread; live traffic keeps draining
+        throughout.  ``canary_every=N`` additionally attaches a
+        :class:`~repro.serve.shadow.ShadowScorer` over the staged index to
+        the live engine: every Nth served batch is re-scored on the staged
+        version and the top-k overlap recorded (see :meth:`canary`,
+        ``promote(min_overlap=...)``).  Staging again replaces a previous
+        staged version.  Returns the new version number.
+        """
+        with self._lock:
+            self._check_open()
+            entry = self._registry.get(name)
+            vid = entry.allocate()
+            live_iv = entry.live_version()
+        iv = IndexVersion(vid, index=index, artifact=artifact, mesh=mesh,
+                          backend=backend, k=k or self.default_k,
+                          batcher=self._batcher)
+        staged_engine = iv.ensure_engine()  # pay the load here, not at promote
+        if canary_every:
+            live_iv.ensure_engine()
+        with self._lock:
+            entry = self._registry.get(name)
+            self._detach_canary(entry)
+            entry.versions[vid] = iv
+            entry.staged = vid              # old staged (if any) retires → GC
+            if canary_every:
+                entry.canary = ShadowScorer(staged_engine.index,
+                                            every=canary_every)
+                live = entry.versions.get(entry.live)
+                if live is not None and live.loaded:
+                    entry.canary_host = live.engine
+                    live.engine.add_observer(entry.canary)
+        return vid
+
+    def canary(self, name: str) -> Optional[dict]:
+        """Canary snapshot for ``name``: ``{"overlap", "batches"}`` — the
+        mean live-vs-staged top-k overlap and how many sampled batches it
+        rests on.  ``None`` when nothing is staged with a canary."""
+        with self._lock:
+            c = self._registry.get(name).canary
+            if c is None:
+                return None
+            return {"overlap": c.mean_overlap, "batches": len(c.overlaps)}
+
+    def promote(self, name: str, *,
+                min_overlap: Optional[float] = None) -> int:
+        """Atomically flip the staged version of ``name`` live.
+
+        With ``min_overlap``, the canary gate: the staged version must
+        have observed at least one sampled batch and its mean overlap
+        against live rankings must reach the threshold, else
+        :class:`CanaryFailed` (the staged version stays staged — fix or
+        re-stage).  The old live version keeps draining requests already
+        bound to it and stays warm for :meth:`rollback`.  Returns the new
+        live version number.
+        """
+        with self._lock:
+            self._check_open()
+            entry = self._registry.get(name)
+            if entry.staged is None:
+                raise ValueError(f"index {name!r}: nothing staged")
+            if min_overlap is not None:
+                c = entry.canary
+                if c is None:
+                    raise ValueError(
+                        f"index {name!r}: promote(min_overlap=...) needs "
+                        "stage(..., canary_every=N)")
+                if not c.overlaps:
+                    raise CanaryFailed(
+                        f"index {name!r}: canary observed no traffic yet")
+                if c.mean_overlap < min_overlap:
+                    raise CanaryFailed(
+                        f"index {name!r}: canary overlap "
+                        f"{c.mean_overlap:.3f} < required {min_overlap} "
+                        f"({len(c.overlaps)} batches)")
+            self._detach_canary(entry)
+            return entry.promote()
+
+    def rollback(self, name: str) -> int:
+        """Flip live back to the previous version (atomic, same contract
+        as promote: in-flight requests finish on the version they bound
+        to).  A staged canary, if any, is detached — its overlap was
+        measured against the version being rolled away from.  Returns the
+        now-live version number."""
+        with self._lock:
+            self._check_open()
+            entry = self._registry.get(name)
+            self._detach_canary(entry)
+            return entry.rollback()
+
+    def _detach_canary(self, entry) -> None:
+        if entry.canary is not None:
+            if entry.canary_host is not None:
+                entry.canary_host.remove_observer(entry.canary)
+            entry.canary = None
+            entry.canary_host = None
+
+    # -- observability -----------------------------------------------------
+    def stats(self) -> dict:
+        """Service-level snapshot: per-index version table + rolled-up
+        totals and merged latency percentiles across every engine."""
+        with self._lock:
+            snapshot = [(entry.name, entry.live, entry.staged,
+                         entry.previous, entry.canary,
+                         dict(entry.versions), dict(entry.retired_totals),
+                         entry.retired_latency)
+                        for entry in self._registry.entries()]
+        indexes: dict[str, dict] = {}
+        latencies: list[LatencyStats] = []
+        totals = {"requests_served": 0, "queries_served": 0,
+                  "batches_served": 0}
+        for (name, live, staged, previous, canary, versions, retired,
+             retired_latency) in snapshot:
+            table = {}
+            for vid, iv in sorted(versions.items()):
+                row = dict(iv.info)
+                row["loaded"] = iv.loaded
+                if iv.loaded:
+                    row.update(iv.engine.stats())
+                    latencies.append(iv.engine.latency)
+                    for key in totals:
+                        totals[key] += row[key]
+                table[vid] = row
+            for key in totals:              # GC'd versions still count
+                totals[key] += retired[key]
+            latencies.append(retired_latency)
+            indexes[name] = {
+                "live": live, "staged": staged, "previous": previous,
+                "canary": (None if canary is None else
+                           {"overlap": canary.mean_overlap,
+                            "batches": len(canary.overlaps)}),
+                "versions": table,
+                "retired": retired,
+            }
+        return {"indexes": indexes,
+                "pending_queries": self.pending_queries,
+                "requests_rejected": self.requests_rejected,
+                **totals,
+                **LatencyStats.merge(latencies).summary()}

@@ -6,6 +6,14 @@ running top-k overlap between the production (quantized) rankings and the
 exact ones — the standard deployment-validation pattern: quality regressions
 (a bad codebook refresh, a corrupted shard) surface as an overlap drop
 within minutes, without doubling serving cost.
+
+The same mechanism doubles as the hot-swap **canary**: pass any *staged*
+index (``ShadowScorer(staged_index, every=N)``) and attach it to the live
+engine's observers — the overlap then measures how far the next version's
+rankings drift from what live traffic is being served today, which is what
+``RetrievalService.promote(min_overlap=...)`` gates on.  Any object with
+``search(queries, k)`` works as the reference; the ``DenseIndex`` hint is
+just the common exact-search case.
 """
 
 from __future__ import annotations

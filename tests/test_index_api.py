@@ -18,7 +18,7 @@ from repro.core import (CenterNorm, CompressionPipeline, Int8Quantizer,
 from repro.retrieval import (CompressedIndex, DenseIndex, Index, IndexSpec,
                              IVFIndex, ShardSpec, ShardedCompressedIndex,
                              ShardedIVFIndex, build_index, load_index,
-                             resolve_k)
+                             load_index_meta, resolve_k)
 
 BACKEND_METHODS = {
     "float": "original",   # pipeline with no quantizer → float storage
@@ -245,6 +245,33 @@ def test_load_rejects_foreign_npz(tmp_path):
     np.savez(path, x=np.zeros(3))
     with pytest.raises(ValueError, match="artifact"):
         load_index(path)
+
+
+def test_load_index_meta_reads_identity_header(tmp_path, corpus):
+    docs, queries = corpus
+    spec = IndexSpec(method="int8", backend="jnp", post=False)
+    idx = build_index(spec, docs, queries)
+    path = str(tmp_path / "meta.npz")
+    idx.save(path)
+    meta = load_index_meta(path)
+    assert meta["kind"] == "CompressedIndex"
+    assert meta["n_docs"] == len(idx)
+    assert meta["dim"] == int(docs.shape[1])
+    assert IndexSpec.from_dict(meta["spec"]) == spec
+    # the fingerprint is a stable identity: re-saving the same index
+    # reproduces it, a different recipe does not
+    idx.save(str(tmp_path / "meta2.npz"))
+    assert load_index_meta(str(tmp_path / "meta2.npz"))["fingerprint"] == \
+        meta["fingerprint"]
+    idx2 = build_index(IndexSpec(method="fp16", backend="jnp", post=False),
+                       docs, queries)
+    idx2.save(str(tmp_path / "other.npz"))
+    assert load_index_meta(str(tmp_path / "other.npz"))["fingerprint"] != \
+        meta["fingerprint"]
+    # non-artifact .npz files are refused without loading arrays
+    np.savez(str(tmp_path / "junk.npz"), x=np.zeros(3))
+    with pytest.raises(ValueError, match="artifact"):
+        load_index_meta(str(tmp_path / "junk.npz"))
 
 
 def test_save_empty_index_errors(tmp_path):

@@ -135,6 +135,40 @@ def test_engine_rejects_bad_shapes(kb):
         engine.submit(np.ones((2, 3, 4), np.float32))
 
 
+def test_engine_rejects_empty_query_block(kb):
+    """A (0, d) block must be refused at submit — enqueued, it would fall
+    through the micro-batcher without a slice and the request id would
+    never resolve."""
+    engine = ServeEngine(DenseIndex(kb.docs), k=5)
+    with pytest.raises(ValueError, match="empty query block"):
+        engine.submit(np.ones((0, 64), np.float32))
+    assert engine.pending == 0
+    assert engine.drain() == {}
+    # the batcher itself also refuses, in case a caller bypasses submit
+    with pytest.raises(ValueError, match="empty query block"):
+        MicroBatcher().form([(0, np.ones((0, 64), np.float32))])
+
+
+def test_engine_per_request_k(kb):
+    """k overrides batch per (k, nprobe) group and each request's output
+    width follows its own k."""
+    idx = DenseIndex(kb.docs)
+    engine = ServeEngine(idx, k=5, batcher=MicroBatcher(max_batch=64))
+    q = np.asarray(kb.queries[:6])
+    r_default = engine.submit(q)
+    r_wide = engine.submit(q, k=9)
+    with pytest.raises(ValueError):
+        engine.submit(q, k=0)
+    results = engine.drain()
+    assert engine.batches_served == 2          # k groups never coalesce
+    assert results[r_default].ids.shape == (6, 5)
+    assert results[r_wide].ids.shape == (6, 9)
+    _, want = idx.search(q, 9)
+    np.testing.assert_array_equal(results[r_wide].ids, np.asarray(want))
+    np.testing.assert_array_equal(results[r_default].ids,
+                                  np.asarray(want)[:, :5])
+
+
 def test_engine_concurrent_producers_lose_nothing(kb):
     """Many producer threads submit while the main thread drains: every
     request must come back exactly once and the counters must balance."""

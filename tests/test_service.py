@@ -1,0 +1,379 @@
+"""RetrievalService: registry, async handles, admission, hot-swap."""
+
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.retrieval import IndexSpec, build_index, load_index
+from repro.retrieval.index import DenseIndex
+from repro.serve import (CanaryFailed, QueryOptions, QueueFull,
+                         RetrievalService, ServiceClosed)
+
+D = 32
+K = 5
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(7)
+    return {
+        "docs1": rng.standard_normal((400, D)).astype(np.float32),
+        "docs2": rng.standard_normal((400, D)).astype(np.float32),
+        "queries": rng.standard_normal((64, D)).astype(np.float32),
+    }
+
+
+# one spec per scorer backend; post=False keeps storage genuinely quantized
+BACKEND_SPECS = [
+    ("float", IndexSpec(method="dense")),
+    ("fp16", IndexSpec(method="fp16", backend="jnp", post=False)),
+    ("int8", IndexSpec(method="int8", backend="jnp", post=False)),
+    ("onebit", IndexSpec(method="onebit", backend="jnp", post=False)),
+]
+
+
+def make_artifacts(tmp_path, corpus, spec):
+    paths = []
+    for tag, docs in (("v1", corpus["docs1"]), ("v2", corpus["docs2"])):
+        idx = build_index(spec, jnp.asarray(docs),
+                          jnp.asarray(corpus["queries"]))
+        p = str(tmp_path / f"{tag}.npz")
+        idx.save(p)
+        paths.append(p)
+    return paths
+
+
+def expected(path, queries, k=K):
+    scores, ids = load_index(path).search(jnp.asarray(queries), k)
+    return np.asarray(scores), np.asarray(ids)
+
+
+# ---------------------------------------------------------------------------
+# registry + async request API
+# ---------------------------------------------------------------------------
+
+
+def test_query_matches_direct_search(corpus):
+    with RetrievalService() as svc:
+        svc.register("kb", DenseIndex(jnp.asarray(corpus["docs1"])))
+        q = corpus["queries"][:9]
+        handle = svc.query(q, QueryOptions(index="kb", k=K))
+        res = handle.result(timeout=30)
+        assert handle.done()
+        _, want = DenseIndex(jnp.asarray(corpus["docs1"])).search(
+            jnp.asarray(q), K)
+        np.testing.assert_array_equal(res.ids, np.asarray(want))
+        assert res.ids.shape == (9, K)
+        assert res.latency_s >= 0
+
+
+def test_query_kwargs_shorthand_and_option_validation(corpus):
+    with RetrievalService() as svc:
+        svc.register("kb", DenseIndex(jnp.asarray(corpus["docs1"])))
+        res = svc.query(corpus["queries"][0], index="kb", k=3).result(30)
+        assert res.ids.shape == (1, 3)
+        with pytest.raises(TypeError):
+            svc.query(corpus["queries"][:2], QueryOptions(index="kb"), k=3)
+        with pytest.raises(ValueError):
+            QueryOptions(index="kb", k=0)
+        with pytest.raises(ValueError):
+            QueryOptions(nprobe=0)
+        with pytest.raises(ValueError):
+            svc.query(corpus["queries"][:0], index="kb")
+
+
+def test_unknown_and_duplicate_index_names(corpus):
+    with RetrievalService() as svc:
+        svc.register("kb", DenseIndex(jnp.asarray(corpus["docs1"])))
+        with pytest.raises(KeyError, match="unknown index 'nope'"):
+            svc.query(corpus["queries"][:2], index="nope")
+        with pytest.raises(ValueError, match="already registered"):
+            svc.register("kb", DenseIndex(jnp.asarray(corpus["docs1"])))
+        assert svc.indexes() == ["kb"]
+
+
+def test_lazy_artifact_loads_on_first_query(tmp_path, corpus):
+    p1, _ = make_artifacts(tmp_path, corpus,
+                           IndexSpec(method="int8", backend="jnp",
+                                     post=False))
+    with RetrievalService() as svc:
+        svc.register("kb", artifact=p1, lazy=True)
+        row = svc.stats()["indexes"]["kb"]["versions"][1]
+        assert not row["loaded"]
+        assert row["kind"] == "CompressedIndex"       # header was read
+        assert row["n_docs"] == 400
+        res = svc.query(corpus["queries"][:4], index="kb", k=K).result(30)
+        _, want = expected(p1, corpus["queries"][:4])
+        np.testing.assert_array_equal(res.ids, want)
+        assert svc.stats()["indexes"]["kb"]["versions"][1]["loaded"]
+
+
+def test_admission_control_bounds_queue_depth(corpus):
+    svc = RetrievalService(start=False, max_pending_queries=10)
+    svc.register("kb", DenseIndex(jnp.asarray(corpus["docs1"])))
+    q = corpus["queries"]
+    svc.query(q[:6], index="kb")
+    svc.query(q[6:10], index="kb")                    # exactly at the bound
+    with pytest.raises(QueueFull):
+        svc.query(q[10:11], index="kb")
+    assert svc.pending_queries == 10
+    assert svc.requests_rejected == 1
+    assert svc.drain_once() == 2                      # manual dispatch mode
+    assert svc.pending_queries == 0
+    svc.query(q[:1], index="kb")                      # space again
+    svc.close()
+
+
+def test_per_request_nprobe_routes_through_options(corpus):
+    spec = IndexSpec(method="int8", backend="jnp", post=False, ivf=(16, 16),
+                     kmeans_iters=4)
+    idx = build_index(spec, jnp.asarray(corpus["docs1"]),
+                      jnp.asarray(corpus["queries"]))
+    q = corpus["queries"][:8]
+    with RetrievalService() as svc:
+        svc.register("kb", idx)
+        wide = svc.query(q, QueryOptions(index="kb", k=K)).result(30)
+        narrow = svc.query(q, QueryOptions(index="kb", k=K,
+                                           nprobe=1)).result(30)
+    _, want_wide = idx.search(jnp.asarray(q), K)
+    _, want_narrow = idx.search(jnp.asarray(q), K, nprobe=1)
+    np.testing.assert_array_equal(wide.ids, np.asarray(want_wide))
+    np.testing.assert_array_equal(narrow.ids, np.asarray(want_narrow))
+
+
+def test_close_fails_unresolved_handles_and_rejects_queries(corpus):
+    svc = RetrievalService(start=False)
+    svc.register("kb", DenseIndex(jnp.asarray(corpus["docs1"])))
+    h = svc.query(corpus["queries"][:3], index="kb")
+    svc.close(drain=False)
+    with pytest.raises(ServiceClosed):
+        h.result(timeout=1)
+    with pytest.raises(ServiceClosed):
+        svc.query(corpus["queries"][:2], index="kb")
+    assert svc.pending_queries == 0
+
+
+def test_handle_timeout(corpus):
+    svc = RetrievalService(start=False)           # nobody drains
+    svc.register("kb", DenseIndex(jnp.asarray(corpus["docs1"])))
+    h = svc.query(corpus["queries"][:2], index="kb")
+    with pytest.raises(TimeoutError):
+        h.result(timeout=0.05)
+    svc.close()                                   # drains, then resolves
+    assert h.done()
+
+
+# ---------------------------------------------------------------------------
+# hot swap: stage / canary / promote / rollback
+# ---------------------------------------------------------------------------
+
+
+def test_stage_promote_rollback_lifecycle(tmp_path, corpus):
+    p1, p2 = make_artifacts(tmp_path, corpus,
+                            IndexSpec(method="int8", backend="jnp",
+                                      post=False))
+    q = corpus["queries"][:8]
+    _, want1 = expected(p1, q)
+    _, want2 = expected(p2, q)
+    assert not np.array_equal(want1, want2)
+    with RetrievalService() as svc:
+        svc.register("kb", artifact=p1)
+        with pytest.raises(ValueError, match="nothing staged"):
+            svc.promote("kb")
+        with pytest.raises(ValueError, match="no previous version"):
+            svc.rollback("kb")
+        v2 = svc.stage("kb", artifact=p2)
+        # staged serves nothing until promote
+        res = svc.query(q, index="kb", k=K).result(30)
+        np.testing.assert_array_equal(res.ids, want1)
+        assert svc.promote("kb") == v2
+        res = svc.query(q, index="kb", k=K).result(30)
+        np.testing.assert_array_equal(res.ids, want2)
+        table = svc.stats()["indexes"]["kb"]
+        assert (table["live"], table["staged"], table["previous"]) == \
+            (v2, None, 1)
+        assert svc.rollback("kb") == 1
+        res = svc.query(q, index="kb", k=K).result(30)
+        np.testing.assert_array_equal(res.ids, want1)
+
+
+def test_restage_replaces_and_gcs_old_staged(tmp_path, corpus):
+    p1, p2 = make_artifacts(tmp_path, corpus, IndexSpec(method="dense"))
+    with RetrievalService() as svc:
+        svc.register("kb", artifact=p1)
+        first = svc.stage("kb", artifact=p2)
+        second = svc.stage("kb", artifact=p2)
+        assert second != first
+        svc.query(corpus["queries"][:2], index="kb").result(30)
+        svc.drain_once()                           # runs GC
+        versions = svc.stats()["indexes"]["kb"]["versions"]
+        assert first not in versions               # replaced staged GC'd
+        assert set(versions) == {1, second}
+
+
+def test_canary_gates_promote(tmp_path, corpus):
+    spec = IndexSpec(method="int8", backend="jnp", post=False)
+    p1, p2 = make_artifacts(tmp_path, corpus, spec)
+    q = corpus["queries"]
+    with RetrievalService() as svc:
+        svc.register("kb", artifact=p1)
+        # identical rebuild: canary overlap must be 1.0
+        svc.stage("kb", artifact=p1, canary_every=1)
+        with pytest.raises(CanaryFailed, match="no traffic"):
+            svc.promote("kb", min_overlap=0.5)
+        for i in range(4):
+            svc.query(q[i * 8:(i + 1) * 8], index="kb", k=K).result(30)
+        c = svc.canary("kb")
+        assert c["batches"] >= 4
+        assert c["overlap"] == pytest.approx(1.0)
+        v2 = svc.promote("kb", min_overlap=0.99)
+        # disjoint corpus: canary overlap ≈ 0 → the gate refuses to flip
+        svc.stage("kb", artifact=p2, canary_every=1)
+        for i in range(4):
+            svc.query(q[i * 8:(i + 1) * 8], index="kb", k=K).result(30)
+        assert svc.canary("kb")["overlap"] < 0.5
+        with pytest.raises(CanaryFailed, match="overlap"):
+            svc.promote("kb", min_overlap=0.9)
+        # still staged — an explicit un-gated promote ships it anyway
+        assert svc.stats()["indexes"]["kb"]["staged"] is not None
+        assert svc.promote("kb") > v2
+        assert svc.canary("kb") is None            # detached after promote
+
+
+def test_rollback_detaches_canary(tmp_path, corpus):
+    p1, p2 = make_artifacts(tmp_path, corpus, IndexSpec(method="dense"))
+    with RetrievalService() as svc:
+        svc.register("kb", artifact=p1)
+        svc.stage("kb", artifact=p2)
+        svc.promote("kb")                              # live v2, previous v1
+        svc.stage("kb", artifact=p1, canary_every=1)   # canary on v2's engine
+        assert svc.canary("kb") is not None
+        svc.rollback("kb")                             # live back to v1
+        # the canary measured against the rolled-away-from version: gone
+        assert svc.canary("kb") is None
+        with pytest.raises(ValueError, match="min_overlap"):
+            svc.promote("kb", min_overlap=0.5)
+        # the staged version itself survives; an un-gated promote ships it
+        assert svc.stats()["indexes"]["kb"]["staged"] is not None
+        svc.promote("kb")
+
+
+def test_stats_survive_version_gc(tmp_path, corpus):
+    """Counters from a hot-swapped-away version fold into the rollup when
+    the version is GC'd — service totals never go backwards."""
+    p1, p2 = make_artifacts(tmp_path, corpus, IndexSpec(method="dense"))
+    with RetrievalService() as svc:
+        svc.register("kb", artifact=p1)
+        for i in range(3):
+            svc.query(corpus["queries"][i * 4:(i + 1) * 4],
+                      index="kb", k=K).result(30)
+        svc.stage("kb", artifact=p2)
+        svc.promote("kb")
+        svc.stage("kb", artifact=p1)
+        svc.promote("kb")                              # v1 is now retired
+        svc.query(corpus["queries"][:4], index="kb", k=K).result(30)
+        svc.drain_once()                               # runs GC
+        s = svc.stats()
+        assert 1 not in s["indexes"]["kb"]["versions"]
+        assert s["indexes"]["kb"]["retired"]["requests_served"] == 3
+        assert s["requests_served"] == 4               # GC'd work still counted
+        assert s["queries_served"] == 16
+        assert s["count"] >= 4                         # merged latency too
+
+
+def test_stats_roll_up_across_indexes(corpus):
+    with RetrievalService() as svc:
+        svc.register("a", DenseIndex(jnp.asarray(corpus["docs1"])))
+        svc.register("b", DenseIndex(jnp.asarray(corpus["docs2"])))
+        for i in range(6):
+            name = "a" if i % 2 == 0 else "b"
+            svc.query(corpus["queries"][i * 4:(i + 1) * 4],
+                      index=name, k=K).result(30)
+        s = svc.stats()
+        assert s["requests_served"] == 6
+        assert s["queries_served"] == 24
+        assert s["pending_queries"] == 0
+        per_engine = [row for t in s["indexes"].values()
+                      for row in t["versions"].values()]
+        assert sum(r["requests_served"] for r in per_engine) == 6
+        assert s["count"] == sum(r["count"] for r in per_engine)
+        for key in ("p50_ms", "p95_ms", "p99_ms"):
+            assert np.isfinite(s[key])
+
+
+# ---------------------------------------------------------------------------
+# the acceptance bar: hot swap under concurrent producer load
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend,spec", BACKEND_SPECS,
+                         ids=[b for b, _ in BACKEND_SPECS])
+def test_hot_swap_parity_under_concurrent_load(tmp_path, corpus, backend,
+                                               spec):
+    """≥4 producer threads submit through a mid-traffic stage+promote:
+    no request is lost or duplicated, every result ranks entirely against
+    the pre- or post-promote version (never a mix), and post-promote
+    rankings are bit-identical to a fresh load_index of the new artifact.
+    """
+    p1, p2 = make_artifacts(tmp_path, corpus, spec)
+    queries = corpus["queries"]
+    s1, want1 = expected(p1, queries)
+    s2, want2 = expected(p2, queries)
+    assert not np.array_equal(want1, want2)
+
+    svc = RetrievalService(max_batch=32)
+    svc.register("kb", artifact=p1)
+    n_threads, per_thread = 4, 25
+    promote_done = threading.Event()
+    outcomes: list[list] = [[] for _ in range(n_threads)]
+    errors: list[Exception] = []
+
+    def producer(t):
+        rng = np.random.default_rng(100 + t)
+        try:
+            for _ in range(per_thread):
+                off = int(rng.integers(0, 56))
+                n = int(rng.integers(1, 9))
+                post = promote_done.is_set()
+                h = svc.query(queries[off:off + n],
+                              QueryOptions(index="kb", k=K))
+                res = h.result(timeout=60)
+                outcomes[t].append((off, n, post, res))
+        except Exception as e:                     # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=producer, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    svc.stage("kb", artifact=p2)                   # load off the hot path
+    svc.promote("kb")                              # atomic flip mid-traffic
+    promote_done.set()
+    for th in threads:
+        th.join()
+    # guaranteed post-promote traffic even if producers finished early
+    final = svc.query(queries, QueryOptions(index="kb", k=K)).result(60)
+    svc.close()
+
+    assert not errors
+    n_post = 0
+    for per_thread_out in outcomes:
+        assert len(per_thread_out) == per_thread   # resolved exactly once
+        for off, n, post, res in per_thread_out:
+            ids = np.asarray(res.ids)
+            m1 = np.array_equal(ids, want1[off:off + n])
+            m2 = np.array_equal(ids, want2[off:off + n])
+            assert m1 or m2, f"{backend}: rankings match neither version"
+            if post:
+                n_post += 1
+                assert m2, f"{backend}: post-promote request served v1"
+    np.testing.assert_array_equal(np.asarray(final.ids), want2)
+    np.testing.assert_array_equal(np.asarray(final.scores), s2)
+
+    stats = svc.stats()
+    total = n_threads * per_thread + 1
+    assert stats["requests_served"] == total
+    assert stats["pending_queries"] == 0
+    assert stats["requests_rejected"] == 0
