@@ -1,0 +1,255 @@
+"""CI perf-regression gate: measure the quick benches, compare, fail loud.
+
+    PYTHONPATH=src:. python benchmarks/ci_gate.py                 # gate
+    PYTHONPATH=src:. python benchmarks/ci_gate.py --write-baseline
+
+Measures the serving-shaped quick workloads (exact quantized search, IVF
+search, and a mid-traffic live-update cycle) on a small synthetic KB and
+writes ``BENCH_<git-sha>.json`` with throughput (qps), per-request
+latency percentiles (p50/p99 ms), and IVF recall@k against exact search.
+The measurement is then compared metric-by-metric against the committed
+``benchmarks/BENCH_baseline.json``:
+
+* throughput may not regress more than ``--tolerance`` (default 20%),
+* latency percentiles may not regress more than ``--tolerance``,
+* recall@k may not drop more than ``--recall-tolerance`` (absolute).
+
+Any violation exits non-zero, which fails the CI job; the fresh JSON is
+uploaded as a workflow artifact either way, so the perf trajectory is
+recorded per commit.  ``--write-baseline`` records the current machine's
+measurement with ``--slack`` headroom folded in (CI runners are noisy;
+the committed floor should be conservative, the tolerance strict).
+"""
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+from repro.data import make_dpr_like_kb
+from repro.retrieval import IndexSpec, build_index, recall_at_k
+from repro.serve import MicroBatcher, ServeEngine
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+DEFAULT_BASELINE = os.path.join(HERE, "BENCH_baseline.json")
+
+#: metric name → direction ("higher" is better, or "lower")
+METRICS = {
+    "exact_qps": "higher", "exact_p50_ms": "lower", "exact_p99_ms": "lower",
+    "ivf_qps": "higher", "ivf_p50_ms": "lower", "ivf_p99_ms": "lower",
+    "update_qps": "higher",
+    "ivf_recall_at_10": "recall",
+}
+
+
+def git_sha() -> str:
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True,
+                             cwd=HERE, timeout=10)
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except OSError:
+        pass
+    return "nogit"
+
+
+def serve_rounds(engine, queries, n_requests, batch, warmup: int = 3):
+    """Stream ``n_requests`` blocks through submit/drain; returns
+    (qps, p50_ms, p99_ms).  ``warmup`` untimed rounds first, so jit
+    compiles never land inside the measured window."""
+    for r in range(warmup):
+        engine.submit(queries[:batch])
+        engine.drain()
+    lat = []
+    n_rows = 0
+    t0 = time.perf_counter()
+    for r in range(n_requests):
+        off = (r * batch) % (len(queries) - batch)
+        engine.submit(queries[off: off + batch])
+        n_rows += batch
+        for res in engine.drain().values():
+            lat.append(res.latency_s)
+    wall = time.perf_counter() - t0
+    ms = np.asarray(lat) * 1000.0
+    return (n_rows / wall, float(np.percentile(ms, 50)),
+            float(np.percentile(ms, 99)))
+
+
+def measure(n_docs: int, n_requests: int, batch: int, k: int,
+            repeats: int) -> dict:
+    """One full measurement pass; best-of-``repeats`` per metric to damp
+    scheduler noise."""
+    kb = make_dpr_like_kb(n_queries=max(256, 2 * batch), n_docs=n_docs)
+    queries = np.asarray(kb.queries)
+
+    spec = IndexSpec(method="pca_int8", dim=128, backend="jnp", post=False)
+    exact = build_index(spec, kb.docs, kb.queries[:256])
+    ivf_spec = IndexSpec(method="pca_int8", dim=128, backend="jnp",
+                         post=False, ivf=(64, 8), kmeans_iters=6)
+    ivf = build_index(ivf_spec, kb.docs, kb.queries[:256])
+    mutable = build_index(
+        IndexSpec(method="pca_int8", dim=128, backend="jnp", post=False,
+                  mutable=True), kb.docs, kb.queries[:256])
+
+    # recall@k: IVF at the default probe width vs exact search
+    _, want = exact.search(kb.queries[:128], 10)
+    _, got = ivf.search(kb.queries[:128], 10)
+    recall = recall_at_k(np.asarray(got), np.asarray(want))
+
+    out = {"exact_qps": 0.0, "exact_p50_ms": np.inf, "exact_p99_ms": np.inf,
+           "ivf_qps": 0.0, "ivf_p50_ms": np.inf, "ivf_p99_ms": np.inf,
+           "update_qps": 0.0}
+    extra = np.asarray(kb.docs[:256])
+    for _ in range(repeats):
+        e = ServeEngine(exact, k=k, batcher=MicroBatcher(max_batch=64))
+        qps, p50, p99 = serve_rounds(e, queries, n_requests, batch)
+        out["exact_qps"] = max(out["exact_qps"], qps)
+        out["exact_p50_ms"] = min(out["exact_p50_ms"], p50)
+        out["exact_p99_ms"] = min(out["exact_p99_ms"], p99)
+
+        e = ServeEngine(ivf, k=k, batcher=MicroBatcher(max_batch=64))
+        qps, p50, p99 = serve_rounds(e, queries, n_requests, batch)
+        out["ivf_qps"] = max(out["ivf_qps"], qps)
+        out["ivf_p50_ms"] = min(out["ivf_p50_ms"], p50)
+        out["ivf_p99_ms"] = min(out["ivf_p99_ms"], p99)
+
+        # live-update cycle: search throughput with a live delta segment
+        # and tombstones layered on.  compact() hands each repeat a fresh
+        # fold of the same corpus, so every repeat measures the identical
+        # workload (segments/tombstones never accumulate across repeats).
+        m = mutable.compact()
+        first = m.next_gid
+        m.add(extra)
+        m.delete(range(first, first + len(extra) // 2))
+        e = ServeEngine(m, k=k, batcher=MicroBatcher(max_batch=64))
+        qps, _, _ = serve_rounds(e, queries, n_requests, batch)
+        out["update_qps"] = max(out["update_qps"], qps)
+
+    out["ivf_recall_at_10"] = recall
+    return out
+
+
+def compare(measured: dict, baseline: dict, tolerance: float,
+            recall_tolerance: float) -> list[str]:
+    failures = []
+    base = baseline["metrics"]
+    for name, direction in METRICS.items():
+        if name not in base:
+            continue
+        have, want = measured[name], base[name]
+        if direction == "higher" and have < want * (1.0 - tolerance):
+            failures.append(f"{name}: {have:.1f} < floor "
+                            f"{want * (1.0 - tolerance):.1f} "
+                            f"(baseline {want:.1f}, -{tolerance:.0%})")
+        elif direction == "lower" and have > want * (1.0 + tolerance):
+            failures.append(f"{name}: {have:.2f} > ceiling "
+                            f"{want * (1.0 + tolerance):.2f} "
+                            f"(baseline {want:.2f}, +{tolerance:.0%})")
+        elif direction == "recall" and have < want - recall_tolerance:
+            failures.append(f"{name}: {have:.3f} < "
+                            f"{want - recall_tolerance:.3f} "
+                            f"(baseline {want:.3f}, "
+                            f"-{recall_tolerance} abs)")
+    return failures
+
+
+def with_slack(metrics: dict, slack: float) -> dict:
+    """Relax a measurement into a committable baseline (CI runners are
+    slower and noisier than dev machines)."""
+    out = {}
+    for name, direction in METRICS.items():
+        v = metrics[name]
+        if direction == "higher":
+            out[name] = round(v * (1.0 - slack), 2)
+        elif direction == "lower":
+            out[name] = round(v * (1.0 + slack), 3)
+        else:
+            out[name] = round(v - slack / 4.0, 3)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="accepted for lane uniformity (the gate is "
+                    "always the quick configuration)")
+    ap.add_argument("--n-docs", type=int, default=6000)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--output", default=None,
+                    help="result JSON path (default BENCH_<git-sha>.json)")
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="max relative qps/latency regression (default "
+                    "0.20 = fail on >20%%)")
+    ap.add_argument("--recall-tolerance", type=float, default=0.05,
+                    help="max absolute recall@k drop")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="record this measurement (with --slack folded "
+                    "in) as the committed baseline and exit")
+    ap.add_argument("--slack", type=float, default=0.5,
+                    help="headroom folded into --write-baseline")
+    ap.add_argument("--no-compare", action="store_true",
+                    help="measure + write JSON, skip the gate")
+    args = ap.parse_args(argv)
+
+    sha = git_sha()
+    print(f"ci_gate: measuring quick benches at {sha} "
+          f"({args.n_docs} docs, {args.requests} requests x {args.batch}, "
+          f"best of {args.repeats}) ...")
+    metrics = measure(args.n_docs, args.requests, args.batch, args.k,
+                      args.repeats)
+    for name in METRICS:
+        print(f"  {name:20s} {metrics[name]:10.2f}")
+
+    if args.write_baseline:
+        doc = {"sha": sha, "config": {"n_docs": args.n_docs,
+                                      "requests": args.requests,
+                                      "batch": args.batch, "k": args.k},
+               "slack": args.slack,
+               "metrics": with_slack(metrics, args.slack)}
+        with open(args.baseline, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"baseline written to {args.baseline} "
+              f"(slack {args.slack:.0%})")
+        return 0
+
+    out_path = args.output or f"BENCH_{sha}.json"
+    with open(out_path, "w") as f:
+        json.dump({"sha": sha, "metrics": metrics}, f, indent=2,
+                  sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out_path}")
+
+    if args.no_compare:
+        return 0
+    if not os.path.exists(args.baseline):
+        print(f"ERROR: no baseline at {args.baseline} — run "
+              "--write-baseline once and commit it", file=sys.stderr)
+        return 2
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = compare(metrics, baseline, args.tolerance,
+                       args.recall_tolerance)
+    if failures:
+        print(f"\nPERF REGRESSION vs baseline "
+              f"(recorded at {baseline.get('sha', '?')}):",
+              file=sys.stderr)
+        for line in failures:
+            print(f"  FAIL {line}", file=sys.stderr)
+        return 1
+    print(f"gate passed vs baseline {baseline.get('sha', '?')} "
+          f"(tolerance {args.tolerance:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,12 +4,8 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Optional
 
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import CenterNorm, CompressionPipeline, build_method
+from repro.core import build_method
 from repro.data import make_dpr_like_kb
 from repro.data.synthetic import KBData
 from repro.retrieval import r_precision

@@ -3,7 +3,6 @@ before vs after compression + Pearson correlations between modes."""
 
 from __future__ import annotations
 
-import jax
 import numpy as np
 
 from benchmarks.common import base_parser, default_kb, print_csv

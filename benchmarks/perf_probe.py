@@ -18,7 +18,6 @@ import dataclasses
 import json
 import time
 
-import jax
 
 from repro.configs.registry import get_arch
 from repro.launch import roofline

@@ -10,7 +10,6 @@ Per-table modules are independently runnable with finer flags, e.g.
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 

@@ -3,7 +3,6 @@ embeddings (no dimension reduction)."""
 
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from benchmarks.common import base_parser, default_kb, print_csv
 from repro.core.preprocess import PreprocessSpec, fit_apply

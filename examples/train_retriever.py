@@ -12,7 +12,6 @@ a *trained* system, not just synthetic embeddings).
 """
 
 import argparse
-import os
 import sys
 
 import jax

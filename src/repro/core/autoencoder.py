@@ -19,7 +19,7 @@ convention matches PCA: docs / queries / both (Fig. 4 bottom row).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

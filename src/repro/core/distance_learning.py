@@ -16,7 +16,6 @@ The paper's negative results, implemented for completeness and ablation:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,8 +12,7 @@ every array shardable over the mesh).
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ cheap rank-1 corrections added outside the kernel.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ ties broken by lowest index in both paths.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 
 def topk_ref(scores: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:

@@ -24,7 +24,6 @@ import sys
 import time
 import traceback
 
-import jax
 
 from repro.configs.registry import ALL_NAMES, get_arch
 from repro.launch import roofline

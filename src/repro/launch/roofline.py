@@ -16,9 +16,8 @@ matching the replica-group span when possible).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Any, Optional
+from typing import Optional
 
 # TPU v5e hardware model
 PEAK_FLOPS = 197e12          # bf16 per chip

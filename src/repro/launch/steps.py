@@ -83,7 +83,6 @@ def _suffix_match_specs(abstract_tree: Any, param_specs_by_path: dict,
         best_len = -1
         for ppath, spec in param_specs_by_path.items():
             if key.endswith(ppath) and len(ppath) > best_len:
-                shapes_match = True
                 best, best_len = spec, len(ppath)
         if leaf.ndim == 0:
             best = P()
@@ -473,7 +472,6 @@ def _kb_search_bundle(arch, shape, rules, mesh, reduced) -> StepBundle:
     }
     batch = B.input_specs(arch, shape, reduced)
 
-    doc_axes = rules.get("kb_docs") or ()
     index_specs = {
         "storage": spec_for_shape((n_docs, dc), ("kb_docs", None), rules,
                                   mesh),

@@ -13,8 +13,6 @@ flash-decoding split-K schedule (partial softmax + cross-device merge).
 
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

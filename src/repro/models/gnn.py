@@ -16,7 +16,6 @@ Supports three input regimes (the assigned shapes):
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -16,7 +16,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.parallel.sharding import shard
 
 
 @dataclasses.dataclass(frozen=True)

@@ -20,7 +20,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import LMConfig, MoEConfig
+from repro.configs.base import LMConfig
 from repro.models import layers as L
 from repro.parallel.sharding import ShardingContext, shard
 

@@ -14,8 +14,7 @@ KB-compression pipeline applied verbatim to recsys retrieval.
 
 from __future__ import annotations
 
-import functools
-from typing import Optional, Sequence
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ as a 2-layer smoke model.  Activation checkpointing wraps the scanned body
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional
 
 import jax

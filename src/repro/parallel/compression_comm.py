@@ -20,8 +20,7 @@ against fp32 psum over multiple steps.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

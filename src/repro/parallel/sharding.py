@@ -18,7 +18,6 @@ import dataclasses
 from typing import Any, Optional, Sequence, Union
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 MeshAxes = Union[None, str, tuple[str, ...]]

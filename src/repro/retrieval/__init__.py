@@ -17,17 +17,20 @@ from repro.retrieval.rprecision import (make_dim_drop_scorer, r_precision,
 from repro.retrieval.scorers import (Scorer, backend_tail_stages, get_scorer,
                                      register_scorer, scorer_for_pipeline,
                                      scorer_names)
+from repro.retrieval.segments import DriftMonitor, SegmentedIndex
 from repro.retrieval.sharded import ShardedCompressedIndex, ShardedIVFIndex
-from repro.retrieval.topk import resolve_k, topk_search
+from repro.retrieval.topk import (masked_topk_by_id, resolve_k,
+                                  topk_score_then_id, topk_search)
 
 __all__ = [
     "Index", "IndexSpec", "ShardSpec", "build_index", "load_index",
     "load_index_meta", "save_index",
     "CompressedIndex", "DenseIndex", "IVFFlatIndex", "IVFIndex",
+    "DriftMonitor", "SegmentedIndex",
     "ShardedCompressedIndex", "ShardedIVFIndex",
     "Scorer", "backend_tail_stages", "get_scorer", "register_scorer",
     "scorer_for_pipeline", "scorer_names",
     "make_dim_drop_scorer", "r_precision", "recall_at_k",
     "retrieved_relevant_counts",
-    "resolve_k", "topk_search",
+    "masked_topk_by_id", "resolve_k", "topk_score_then_id", "topk_search",
 ]

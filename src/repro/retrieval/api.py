@@ -45,10 +45,13 @@ from repro.core.registry import (build_method, build_pipeline_from_spec,
                                  pipeline_spec)
 from repro.retrieval.index import CompressedIndex, DenseIndex
 from repro.retrieval.ivf import IVFFlatIndex, IVFIndex
+from repro.retrieval.segments import SegmentedIndex, _Segment
 from repro.retrieval.sharded import (ShardedCompressedIndex, ShardedIVFIndex)
 
 ARTIFACT_FORMAT = "repro-index"
-ARTIFACT_VERSION = 1
+# version 2 adds the mutable-index layer: delta segments, tombstones, and
+# the monotonic doc-id allocator (version-1 artifacts still load)
+ARTIFACT_VERSION = 2
 
 #: stage-descriptor type: ``(transform class name, constructor kwargs)``
 StageSpec = Tuple[str, dict]
@@ -133,8 +136,12 @@ class IndexSpec:
       through the transform registry (``dim``/``pre``/``post`` are ignored).
 
     ``ivf=(nlist, nprobe)`` promotes to approximate search;
-    ``shard=ShardSpec(...)`` wraps the result over a device mesh.
-    Specs are frozen, hashable, and JSON round-trippable
+    ``shard=ShardSpec(...)`` wraps the result over a device mesh;
+    ``mutable=True`` wraps the result in a
+    :class:`~repro.retrieval.segments.SegmentedIndex` (live adds through
+    the frozen pipeline, tombstone deletes, drift-monitored compaction —
+    not combinable with ``shard``: compact on one host, then shard the
+    artifact).  Specs are frozen, hashable, and JSON round-trippable
     (:meth:`to_json` / :meth:`from_json`) — the artifact format embeds them.
     """
 
@@ -148,6 +155,7 @@ class IndexSpec:
     ivf: Optional[Tuple[int, int]] = None
     shard: Optional[ShardSpec] = None
     kmeans_iters: int = 15
+    mutable: bool = False
 
     def __post_init__(self):
         if (self.method is None) == (self.stages is None):
@@ -167,6 +175,10 @@ class IndexSpec:
                 raise ValueError(f"ivf=(nlist, nprobe) must be ≥ 1, "
                                  f"got {self.ivf}")
             object.__setattr__(self, "ivf", (int(nlist), int(nprobe)))
+        if self.mutable and self.shard is not None:
+            raise ValueError("mutable=True cannot be combined with shard= "
+                             "(compact on one host, then shard the "
+                             "compacted artifact)")
         if self.sim not in ("ip", "l2", "cos"):
             raise ValueError(f"unknown sim {self.sim!r}")
         if self.backend not in ("auto", "jnp", "pallas"):
@@ -294,6 +306,8 @@ def build_index(spec: IndexSpec, docs: jax.Array,
                                     sim=spec.sim, backend=spec.backend,
                                     rng=rng)
     idx.spec = spec
+    if spec.mutable:
+        idx = SegmentedIndex(idx, spec=spec)
     return idx
 
 
@@ -337,15 +351,54 @@ def save_index(index, path: str) -> None:
     The artifact is self-contained: :func:`load_index` reconstructs a
     bit-identically-ranking index from it with no access to the raw corpus
     and no re-fit — encoded storage, scorer codebooks, IVF centroids and
-    list layout, and the version counter are all inside.
+    list layout, and the version counter are all inside.  A
+    :class:`~repro.retrieval.segments.SegmentedIndex` additionally
+    persists its delta segments, tombstone set, and monotonic doc-id
+    allocator (format version 2); immutable indexes keep writing
+    version-1 artifacts that older builds can still read.
     """
-    kind = type(index).__name__
     arrays: dict[str, np.ndarray] = {}
     meta: dict[str, Any] = {
-        "format": ARTIFACT_FORMAT, "format_version": ARTIFACT_VERSION,
-        "kind": kind,
+        "format": ARTIFACT_FORMAT, "format_version": 1,
         "spec": index.spec.to_dict() if index.spec is not None else None,
     }
+    if isinstance(index, SegmentedIndex):
+        _collect_index(index.main, arrays, meta)
+        meta["main_kind"] = meta["kind"]
+        meta["kind"] = "SegmentedIndex"
+        meta["format_version"] = ARTIFACT_VERSION
+        sd = index.state_dict()
+        arrays["main_gids"] = np.asarray(sd["main_gids"], np.int32)
+        arrays["tombstones"] = np.asarray(sd["tombstones"], np.int64)
+        for i, seg in enumerate(sd["segments"]):
+            arrays[f"seg:{i}:storage"] = np.asarray(seg["storage"])
+            arrays[f"seg:{i}:gids"] = np.asarray(seg["gids"], np.int32)
+            if seg["labels"] is not None:
+                arrays[f"seg:{i}:labels"] = np.asarray(seg["labels"],
+                                                       np.int32)
+        drift = sd["drift"]
+        if drift["sum"] is not None:
+            arrays["drift:sum"] = np.asarray(drift["sum"])
+        meta["segmented"] = {
+            "next_gid": int(sd["next_gid"]),
+            "n_segments": len(sd["segments"]),
+            "n_live": len(index),
+            "drift": {"n_added": int(drift["n_added"]),
+                      "norm_sum": float(drift["norm_sum"])},
+            "drift_threshold": index.drift_threshold,
+            "max_delta_fraction": index.max_delta_fraction,
+        }
+    else:
+        _collect_index(index, arrays, meta)
+    arrays["__meta__"] = np.asarray(json.dumps(meta, sort_keys=True))
+    np.savez(path, **arrays)
+
+
+def _collect_index(index, arrays: dict, meta: dict) -> None:
+    """Fill ``arrays``/``meta`` with one core index's state (shared by
+    :func:`save_index` for plain and segmented artifacts)."""
+    kind = type(index).__name__
+    meta["kind"] = kind
 
     pipeline = _pipeline_of(index)
     meta["stages"] = pipeline_spec(pipeline) if pipeline is not None else []
@@ -398,9 +451,6 @@ def save_index(index, path: str) -> None:
             meta["index"]["query_axis"] = index.query_axis
     else:
         raise TypeError(f"don't know how to save {kind}")
-
-    arrays["__meta__"] = np.asarray(json.dumps(meta, sort_keys=True))
-    np.savez(path, **arrays)
 
 
 def _rebuild_ivf(meta: dict, data, pipeline: CompressionPipeline,
@@ -474,13 +524,15 @@ def load_index_meta(path: str) -> dict:
     with np.load(path, allow_pickle=False) as data:
         meta = _parse_meta(data, path)
     m = meta.get("index") or {}
+    seg = meta.get("segmented")
     return {
         "format_version": meta.get("format_version"),
         "kind": meta["kind"],
         "spec": meta.get("spec"),
-        "n_docs": m.get("n_docs"),
+        "n_docs": seg["n_live"] if seg is not None else m.get("n_docs"),
         "dim": m.get("dim"),
         "index_version": m.get("version", 0),
+        "mutable": seg is not None,
         "fingerprint": hashlib.sha256(
             json.dumps(meta, sort_keys=True).encode()).hexdigest()[:16],
     }
@@ -489,10 +541,56 @@ def load_index_meta(path: str) -> dict:
 def _load_index_from(data, path: str, *, mesh, backend, expect):
     meta = _parse_meta(data, path)
     kind = meta["kind"]
-    m = meta["index"]
 
     pipeline = (build_pipeline_from_spec(meta["stages"])
                 if meta["stages"] else CompressionPipeline([]))
+
+    if kind == "SegmentedIndex":
+        main = _load_core(meta["main_kind"], meta, data, path, pipeline,
+                          mesh=mesh, backend=backend)
+        if meta.get("spec") is not None:
+            main.spec = IndexSpec.from_dict(meta["spec"])
+        seg_info = meta["segmented"]
+        idx = SegmentedIndex(
+            main,
+            drift_threshold=seg_info.get("drift_threshold", 0.35),
+            max_delta_fraction=seg_info.get("max_delta_fraction", 0.25))
+        segments = []
+        for i in range(seg_info["n_segments"]):
+            lkey = f"seg:{i}:labels"
+            labels = (np.asarray(data[lkey], np.int32)
+                      if lkey in data.files else None)
+            segments.append(_Segment(
+                jnp.asarray(data[f"seg:{i}:storage"]),
+                np.asarray(data[f"seg:{i}:gids"], np.int32), labels))
+        next_gid = int(seg_info["next_gid"])
+        tomb = np.zeros(next_gid, bool)
+        tomb[np.asarray(data["tombstones"], np.int64)] = True
+        drift_m = seg_info["drift"]
+        idx._restore(
+            main_gids=np.asarray(data["main_gids"], np.int32), tomb=tomb,
+            next_gid=next_gid, segments=segments,
+            drift_sd={"n_added": drift_m["n_added"],
+                      "norm_sum": drift_m["norm_sum"],
+                      "sum": (data["drift:sum"]
+                              if "drift:sum" in data.files else None)})
+    else:
+        idx = _load_core(kind, meta, data, path, pipeline, mesh=mesh,
+                         backend=backend)
+
+    if meta.get("spec") is not None:
+        idx.spec = IndexSpec.from_dict(meta["spec"])
+    if expect is not None and not isinstance(idx, expect):
+        raise TypeError(f"{path} holds a {kind}, expected "
+                        f"{expect.__name__} — use api.load_index for "
+                        "kind-dispatching loads")
+    return idx
+
+
+def _load_core(kind: str, meta: dict, data, path: str,
+               pipeline: CompressionPipeline, *, mesh, backend):
+    """Reconstruct one core (non-segmented) index from artifact arrays."""
+    m = meta["index"]
 
     if kind == "DenseIndex":
         idx = DenseIndex(jnp.asarray(data["storage"]), sim=m["sim"])
@@ -528,11 +626,4 @@ def _load_index_from(data, path: str, *, mesh, backend, expect):
                               query_axis=m.get("query_axis"))
     else:
         raise ValueError(f"{path}: unknown index kind {kind!r}")
-
-    if meta.get("spec") is not None:
-        idx.spec = IndexSpec.from_dict(meta["spec"])
-    if expect is not None and not isinstance(idx, expect):
-        raise TypeError(f"{path} holds a {kind}, expected "
-                        f"{expect.__name__} — use api.load_index for "
-                        "kind-dispatching loads")
     return idx

@@ -20,7 +20,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.pipeline import CompressionPipeline
 from repro.retrieval.scorers import (Scorer, apply_float_stages,

@@ -41,43 +41,11 @@ from repro.core.pipeline import CompressionPipeline
 from repro.retrieval.kmeans import assign, kmeans_fit
 from repro.retrieval.scorers import (Scorer, apply_float_stages,
                                      scorer_for_pipeline)
-from repro.retrieval.topk import resolve_k, similarity
+from repro.retrieval.topk import (masked_topk_by_id, resolve_k, similarity,
+                                  topk_score_then_id)
 
-
-def topk_score_then_id(s: jax.Array, ids: jax.Array, k: int
-                       ) -> tuple[jax.Array, jax.Array]:
-    """Top-k by (score desc, doc id asc) — a strict total order.
-
-    Exact search breaks score ties by document id implicitly (candidates
-    are scanned in id order and ``lax.top_k`` keeps the first occurrence);
-    IVF candidates arrive in probe order and sharded IVF candidates in
-    shard order, so ties must be broken *explicitly* on the id for the
-    three paths to produce identical rankings.  Matters most for the 1-bit
-    backend, whose integer sign-dot scores tie constantly.
-    """
-    order = jnp.lexsort((ids, -s), axis=-1)[..., :k]
-    return (jnp.take_along_axis(s, order, axis=-1),
-            jnp.take_along_axis(ids, order, axis=-1))
-
-
-def masked_topk_by_id(s: jax.Array, ids: jax.Array, k: int
-                      ) -> tuple[jax.Array, jax.Array]:
-    """Top-``k`` by (score desc, id asc), normalising unreachable slots.
-
-    ``-inf`` scores come back with id ``-1``; when fewer than ``k``
-    candidate columns exist the output is padded out to ``k`` with
-    ``(-inf, -1)``.  Shared by the single-host IVF search and both halves
-    (shard-local and post-gather merge) of the sharded search, so the
-    three paths cannot drift apart.
-    """
-    kk = min(k, s.shape[1])
-    vals, out = topk_score_then_id(s, ids, kk)
-    out = jnp.where(jnp.isfinite(vals), out, -1)
-    if kk < k:
-        pad = k - kk
-        vals = jnp.pad(vals, ((0, 0), (0, pad)), constant_values=-jnp.inf)
-        out = jnp.pad(out, ((0, 0), (0, pad)), constant_values=-1)
-    return vals, out
+__all__ = ["IVFIndex", "IVFFlatIndex", "build_padded_lists",
+           "probe_and_score", "masked_topk_by_id", "topk_score_then_id"]
 
 
 def probe_and_score(q: jax.Array, centroids: jax.Array, lists: jax.Array,

@@ -10,7 +10,7 @@ HotpotQA-style data has r = 2 for every query (two supporting documents).
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +36,6 @@ def _hits_from_topk(idx: jax.Array, relevant: jax.Array) -> jax.Array:
 
     idx: (Q, K) retrieved ids with K >= max_r; relevant: (Q, max_r), −1 pad.
     """
-    max_r = relevant.shape[1]
     r = jnp.sum(relevant >= 0, axis=1)                      # (Q,)
     pos_valid = jnp.arange(idx.shape[1])[None, :] < r[:, None]
     is_rel = jnp.any(idx[:, :, None] == relevant[:, None, :], axis=-1)

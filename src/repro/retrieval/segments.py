@@ -1,0 +1,566 @@
+"""Mutable-index subsystem: delta segments + tombstones over a frozen main.
+
+The paper compresses a *static* KB; production knowledge bases churn.
+:class:`SegmentedIndex` makes any single-host index mutable without ever
+re-fitting the compression pipeline:
+
+* **Delta segments** — ``add(docs)`` encodes the new rows through the
+  *frozen* fitted pipeline (same float stages, same scorer backend, same
+  codebooks as the main index) into a small append-only segment.  Search
+  scores every delta row with the same scorer kernels as the main index
+  and merges the layers with the one strict ``(score desc, id asc)`` tie
+  order (:func:`repro.retrieval.topk.masked_topk_by_id`), so a segmented
+  search ranks bit-identically to a single index holding the same rows.
+* **Tombstones** — ``delete(ids)`` marks global doc ids dead.  Dead rows
+  are masked out of every layer at search time; the main layer is probed
+  ``k + #dead(main)`` deep so the surviving top-k is exactly the top-k of
+  a freshly built index over the surviving corpus.
+* **Global doc ids** — a monotonic allocator assigns each added row an id
+  that survives compaction (results keep meaning the same documents
+  across a hot-swap).  ``search`` returns these global ids, never raw
+  storage positions.
+* **IVF mains** — added rows are routed to the *existing* centroids at
+  ``add`` time (the label is stored per delta row) and a delta row only
+  competes when its list is probed, so segmented IVF search reproduces
+  exactly what one IVF index with the same centroids over all rows would
+  return.
+* **Drift monitor** — the fitted pipeline is frozen, so incrementally
+  added docs encoded through it must be *watched*, not trusted: a
+  :class:`DriftMonitor` tracks running mean/norm statistics of added docs
+  against the pipeline's fitted centering statistics, and
+  :meth:`SegmentedIndex.needs_compaction` turns drift (or a fat delta /
+  tombstone fraction) into a compaction trigger.
+* **Compaction** — :meth:`compact` folds segments + tombstones into a
+  fresh main index (storage rows are *moved*, never re-encoded; IVF mains
+  refit only the cheap k-means router on the decoded storage) and returns
+  a new :class:`SegmentedIndex` with the same global ids, ready to be
+  staged → canaried → promoted through
+  :class:`repro.serve.service.RetrievalService` while the old index keeps
+  serving.
+
+Concurrency: mutation (``add``/``delete``) swaps an immutable snapshot
+under a lock; ``search`` reads one snapshot reference and never blocks,
+so a background drain loop keeps serving while updates land.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.retrieval.index import CompressedIndex, DenseIndex
+from repro.retrieval.ivf import IVFFlatIndex, IVFIndex
+from repro.retrieval.kmeans import assign
+from repro.retrieval.scorers import Scorer, apply_float_stages
+from repro.retrieval.topk import masked_topk_by_id, resolve_k, similarity
+
+
+def fitted_center_mean(pipeline) -> Optional[np.ndarray]:
+    """The doc-side mean of the pipeline's first fitted centering stage.
+
+    This is the reference the drift monitor compares added docs against:
+    the paper's key practical finding is that retrieval quality hinges on
+    centering/normalization statistics, so docs drifting away from the
+    fitted mean are exactly the ones a frozen pipeline encodes worst.
+    """
+    if pipeline is None:
+        return None
+    for t in getattr(pipeline, "transforms", []):
+        if t.fitted and "mean_docs" in t.state:
+            return np.asarray(t.state["mean_docs"], np.float64)
+    return None
+
+
+class DriftMonitor:
+    """Running mean/norm statistics of added docs vs. the fitted center.
+
+    ``mean_shift`` is the L2 distance between the running mean of every
+    doc added since the last compaction and the pipeline's fitted doc
+    mean, normalised by the mean row norm of the added docs — ~0 when the
+    additions come from the fitted distribution, growing toward 1 as they
+    drift to a different region of embedding space.
+    """
+
+    def __init__(self, ref_mean: Optional[np.ndarray] = None):
+        self.ref_mean = (np.asarray(ref_mean, np.float64)
+                         if ref_mean is not None else None)
+        self.n_added = 0
+        self._sum: Optional[np.ndarray] = None
+        self._norm_sum = 0.0
+
+    def update(self, docs: np.ndarray) -> None:
+        x = np.asarray(docs, np.float64)
+        if x.ndim != 2 or x.shape[0] == 0:
+            return
+        s = x.sum(axis=0)
+        self._sum = s if self._sum is None else self._sum + s
+        self._norm_sum += float(np.linalg.norm(x, axis=1).sum())
+        self.n_added += int(x.shape[0])
+
+    @property
+    def mean_shift(self) -> float:
+        if self.n_added == 0:
+            return 0.0
+        mean = self._sum / self.n_added
+        ref = (self.ref_mean if self.ref_mean is not None
+               else np.zeros_like(mean))
+        scale = self._norm_sum / self.n_added + 1e-12
+        return float(np.linalg.norm(mean - ref) / scale)
+
+    def stats(self) -> dict:
+        return {
+            "n_added": self.n_added,
+            "mean_norm": (self._norm_sum / self.n_added
+                          if self.n_added else float("nan")),
+            "ref_norm": (float(np.linalg.norm(self.ref_mean))
+                         if self.ref_mean is not None else None),
+            "mean_shift": self.mean_shift,
+        }
+
+    # -- persistence -------------------------------------------------------
+    def state_dict(self) -> dict:
+        return {"n_added": self.n_added,
+                "sum": self._sum, "norm_sum": self._norm_sum}
+
+    def load_state_dict(self, sd: dict) -> "DriftMonitor":
+        self.n_added = int(sd["n_added"])
+        self._sum = (np.asarray(sd["sum"], np.float64)
+                     if sd.get("sum") is not None else None)
+        self._norm_sum = float(sd["norm_sum"])
+        return self
+
+
+class _Segment:
+    """One append-only delta: scorer-encoded rows + their global ids."""
+
+    __slots__ = ("storage", "gids", "labels")
+
+    def __init__(self, storage: jax.Array, gids: np.ndarray,
+                 labels: Optional[np.ndarray]):
+        self.storage = storage
+        self.gids = gids
+        self.labels = labels
+
+    def __len__(self) -> int:
+        return int(self.gids.shape[0])
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.storage.size * self.storage.dtype.itemsize)
+
+
+class _Snapshot:
+    """Immutable view the search path binds to (mutations swap a new one)."""
+
+    __slots__ = ("segments", "tomb", "next_gid", "n_live", "n_main_dead",
+                 "_delta", "_tomb_j")
+
+    def __init__(self, segments: tuple, tomb: np.ndarray, next_gid: int,
+                 n_live: int, n_main_dead: int):
+        self.segments = segments
+        self.tomb = tomb                    # bool over the whole gid space
+        self.next_gid = next_gid
+        self.n_live = n_live
+        self.n_main_dead = n_main_dead
+        self._delta = None                  # lazy concat of all segments
+        self._tomb_j = None
+
+    @property
+    def n_delta(self) -> int:
+        return sum(len(s) for s in self.segments)
+
+    def tomb_j(self) -> jax.Array:
+        if self._tomb_j is None:
+            self._tomb_j = jnp.asarray(self.tomb)
+        return self._tomb_j
+
+    def delta(self):
+        """(storage, gids_np, gids_j, labels_j|None) across all segments."""
+        if self._delta is None:
+            storage = jnp.concatenate([s.storage for s in self.segments],
+                                      axis=0)
+            gids = np.concatenate([s.gids for s in self.segments])
+            labels = None
+            if self.segments[0].labels is not None:
+                labels = jnp.asarray(
+                    np.concatenate([s.labels for s in self.segments]))
+            self._delta = (storage, gids, jnp.asarray(gids), labels)
+        return self._delta
+
+
+class SegmentedIndex:
+    """Delta segments + tombstones layered over an immutable main index.
+
+    ``main`` is any single-host index (:class:`DenseIndex`,
+    :class:`CompressedIndex`, :class:`IVFIndex` / :class:`IVFFlatIndex`)
+    whose pipeline is already fitted; its storage is adopted as the base
+    layer and never touched again.  Sharded mains are rejected — compact
+    first, then shard the compacted artifact.
+    """
+
+    def __init__(self, main, *, spec=None, drift_threshold: float = 0.35,
+                 max_delta_fraction: float = 0.25):
+        if isinstance(main, SegmentedIndex):
+            raise TypeError("SegmentedIndex cannot wrap another "
+                            "SegmentedIndex")
+        if not isinstance(main, (DenseIndex, CompressedIndex, IVFIndex)):
+            raise TypeError(
+                f"SegmentedIndex needs a single-host main index, got "
+                f"{type(main).__name__} (compact/save on a single host, "
+                "then shard the artifact)")
+        if len(main) == 0:
+            raise ValueError("main index is empty — build it first")
+        self.main = main
+        self.spec = getattr(main, "spec", None) if spec is None else spec
+        self.sim = main.sim
+        self.drift_threshold = float(drift_threshold)
+        self.max_delta_fraction = float(max_delta_fraction)
+        if isinstance(main, DenseIndex):
+            self.float_stages: list = []
+            self.scorer = Scorer(sim=main.sim, backend="jnp")
+            pipeline = None
+        else:
+            self.float_stages = main.float_stages
+            self.scorer = main.scorer
+            pipeline = main.pipeline
+        self.drift = DriftMonitor(fitted_center_mean(pipeline))
+        self._is_ivf = isinstance(main, IVFIndex)
+        self._main_version = getattr(main, "_version", None)
+        n_main = len(main)
+        self._main_gids = np.arange(n_main, dtype=np.int32)
+        self._main_gids_j: Optional[jax.Array] = None
+        self._lock = threading.Lock()
+        self._state = _Snapshot(segments=(),
+                                tomb=np.zeros(n_main, bool),
+                                next_gid=n_main, n_live=n_main,
+                                n_main_dead=0)
+
+    # -- internal: adopt a post-compaction / loaded identity ---------------
+    def _restore(self, *, main_gids: np.ndarray, tomb: np.ndarray,
+                 next_gid: int, segments: tuple = (),
+                 drift_sd: Optional[dict] = None) -> "SegmentedIndex":
+        assert len(main_gids) == len(self.main)
+        self._main_gids = np.asarray(main_gids, np.int32)
+        self._main_gids_j = None
+        segments = tuple(segments)
+        tomb = np.asarray(tomb, bool)
+        n_main_dead = int(tomb[self._main_gids].sum())
+        n_dead = n_main_dead + sum(int(tomb[s.gids].sum())
+                                   for s in segments)
+        n_delta = sum(len(s) for s in segments)
+        self._state = _Snapshot(segments, tomb, int(next_gid),
+                                len(self.main) + n_delta - n_dead,
+                                n_main_dead)
+        if drift_sd is not None:
+            self.drift.load_state_dict(drift_sd)
+        return self
+
+    # -- sizing ------------------------------------------------------------
+    def __len__(self) -> int:
+        """Live (searchable) docs: main + deltas − tombstones."""
+        return self._state.n_live
+
+    @property
+    def n_deltas(self) -> int:
+        return self._state.n_delta
+
+    @property
+    def n_segments(self) -> int:
+        return len(self._state.segments)
+
+    @property
+    def n_tombstoned(self) -> int:
+        st = self._state
+        return len(self.main) + st.n_delta - st.n_live
+
+    @property
+    def next_gid(self) -> int:
+        return self._state.next_gid
+
+    @property
+    def nbytes(self) -> int:
+        st = self._state
+        return self.main.nbytes + sum(s.nbytes for s in st.segments)
+
+    @property
+    def nprobe(self) -> Optional[int]:
+        """Probe width of an IVF main (None otherwise) — lets the serving
+        engine accept per-request ``nprobe`` overrides transparently."""
+        return self.main.nprobe if self._is_ivf else None
+
+    # -- mutation ----------------------------------------------------------
+    def add(self, docs: jax.Array) -> "SegmentedIndex":
+        """Append docs as a new delta segment (frozen-pipeline encode).
+
+        Rows get fresh global ids from the monotonic allocator; for IVF
+        mains each row is routed to the existing centroids and only
+        competes when its list is probed — identical reachability to docs
+        that were in the corpus at fit time.
+        """
+        docs = jnp.asarray(docs)
+        if docs.ndim != 2 or docs.shape[0] == 0:
+            raise ValueError("add needs a (n ≥ 1, d) doc block, got shape "
+                             f"{docs.shape}")
+        x = apply_float_stages(self.float_stages, docs, "docs")
+        enc = self.scorer.encode_docs(x)
+        labels = None
+        if self._is_ivf:
+            labels = np.asarray(assign(jnp.asarray(x, jnp.float32),
+                                       self.main.centroids)).astype(np.int32)
+        n = int(enc.shape[0])
+        with self._lock:
+            st = self._state
+            gids = np.arange(st.next_gid, st.next_gid + n, dtype=np.int32)
+            seg = _Segment(enc, gids, labels)
+            tomb = np.concatenate([st.tomb, np.zeros(n, bool)])
+            self.drift.update(np.asarray(docs))
+            self._state = _Snapshot(st.segments + (seg,), tomb,
+                                    st.next_gid + n, st.n_live + n,
+                                    st.n_main_dead)
+        return self
+
+    def validate_ids(self, ids: Sequence[int],
+                     n_pending_add: int = 0) -> np.ndarray:
+        """Normalise a delete-id list and bounds-check it, mutating nothing.
+
+        Returns the unique sorted ids; raises ``KeyError`` for ids the
+        allocator never handed out.  Callers composing add+delete use this
+        to validate *before* the add lands, keeping the pair atomic —
+        ``n_pending_add`` extends the bound over the ids the pending add
+        block is about to be assigned, so deleting a doc from the same
+        update call stays legal.
+        """
+        ids = np.unique(np.asarray(ids, np.int64).ravel())
+        bound = self._state.next_gid + int(n_pending_add)
+        if ids.size and (ids[0] < 0 or ids[-1] >= bound):
+            bad = ids[(ids < 0) | (ids >= bound)]
+            raise KeyError(f"unknown doc ids {bad.tolist()[:8]} "
+                           f"(allocator is at {bound})")
+        return ids
+
+    def delete(self, ids: Sequence[int]) -> int:
+        """Tombstone global doc ids; returns how many were newly deleted.
+
+        Unknown ids (never allocated) raise ``KeyError``; deleting an
+        already-dead id is a no-op (idempotent), so replaying a delete
+        log is safe.
+        """
+        with self._lock:
+            ids = self.validate_ids(ids)
+            if ids.size == 0:
+                return 0
+            st = self._state
+            newly = ids[~st.tomb[ids]]
+            if newly.size == 0:
+                return 0
+            tomb = st.tomb.copy()
+            tomb[newly] = True
+            n_main_dead = int(tomb[self._main_gids].sum())
+            new = _Snapshot(st.segments, tomb, st.next_gid,
+                            st.n_live - int(newly.size), n_main_dead)
+            # segments are unchanged: the concatenated delta view (and its
+            # device copy) carries over — deletes stay O(tombstones), not
+            # O(delta bytes), on the serving path
+            new._delta = st._delta
+            self._state = new
+            return int(newly.size)
+
+    # -- search ------------------------------------------------------------
+    def _main_gids_device(self) -> jax.Array:
+        if self._main_gids_j is None:
+            self._main_gids_j = jnp.asarray(self._main_gids)
+        return self._main_gids_j
+
+    def search(self, queries: jax.Array, k: int,
+               nprobe: Optional[int] = None
+               ) -> tuple[jax.Array, jax.Array]:
+        """Top-``min(k, live docs)`` across main + delta layers.
+
+        Returns ``(scores, global ids)`` ranked by the strict
+        ``(score desc, id asc)`` order; tombstoned rows never appear.
+        ``nprobe`` overrides the probe width when the main is IVF (the
+        same width gates which delta rows are reachable).
+        """
+        if self._main_version is not None and \
+                getattr(self.main, "_version", None) != self._main_version:
+            raise ValueError(
+                "main index changed under the SegmentedIndex (add/fit was "
+                "called on it directly); mutate through the SegmentedIndex "
+                "only")
+        st = self._state
+        queries = jnp.asarray(queries)
+        k_eff = resolve_k(k, st.n_live)
+        gid_map = self._main_gids_device()
+
+        nprobe_r = None
+        if self._is_ivf:
+            nprobe_r = self.main._resolve_nprobe(nprobe)
+        elif nprobe is not None:
+            raise ValueError("per-request nprobe needs an IVF main; "
+                             f"{type(self.main).__name__} has none")
+
+        # main layer: probe deep enough that tombstones cannot crowd the
+        # surviving top-k out of the candidate set
+        k_main = min(k_eff + st.n_main_dead, len(self.main))
+        if self._is_ivf:
+            vals_m, pos_m = self.main.search(queries, k_main,
+                                             nprobe=nprobe_r)
+        else:
+            vals_m, pos_m = self.main.search(queries, k_main)
+        gids_m = jnp.where(pos_m >= 0, gid_map[jnp.maximum(pos_m, 0)], -1)
+
+        if not st.segments and st.n_main_dead == 0:
+            return vals_m, gids_m          # fast path: nothing layered yet
+
+        tomb_j = st.tomb_j()
+        dead_m = jnp.where(gids_m >= 0, tomb_j[jnp.maximum(gids_m, 0)],
+                           False)
+        vals_m = jnp.where(dead_m, -jnp.inf, vals_m)
+        gids_m = jnp.where(dead_m, -1, gids_m)
+
+        if st.segments:
+            storage_d, _, gids_dj, labels_d = st.delta()
+            q_f = apply_float_stages(self.float_stages, queries, "queries")
+            q_e = self.scorer.encode_queries(q_f)
+            vals_d = self.scorer.scores(q_e, storage_d,
+                                        params=self.scorer.params())
+            if self._is_ivf:
+                # same coarse routing as the main layer: a delta row only
+                # competes when the list it was assigned to is probed
+                cs = similarity(q_f, self.main.centroids, self.sim)
+                _, probes = jax.lax.top_k(cs, nprobe_r)
+                probed = jnp.any(probes[:, :, None] ==
+                                 labels_d[None, None, :], axis=1)
+                vals_d = jnp.where(probed, vals_d, -jnp.inf)
+            dead_d = tomb_j[gids_dj]
+            vals_d = jnp.where(dead_d[None, :], -jnp.inf, vals_d)
+            ids_d = jnp.broadcast_to(gids_dj[None, :],
+                                     (queries.shape[0], gids_dj.shape[0]))
+            vals = jnp.concatenate([vals_m, vals_d], axis=1)
+            ids = jnp.concatenate([gids_m, ids_d], axis=1)
+        else:
+            vals, ids = vals_m, gids_m
+        return masked_topk_by_id(vals, ids, k_eff)
+
+    # -- drift / compaction policy ----------------------------------------
+    def needs_compaction(self) -> bool:
+        """Fold time?  True when the delta or tombstone fraction outgrows
+        ``max_delta_fraction``, or added docs drifted past
+        ``drift_threshold`` from the pipeline's fitted centering stats."""
+        st = self._state
+        total = len(self.main) + st.n_delta
+        if st.n_delta > self.max_delta_fraction * total:
+            return True
+        if (total - st.n_live) > self.max_delta_fraction * total:
+            return True
+        return self.drift.mean_shift > self.drift_threshold
+
+    def mutable_stats(self) -> dict:
+        """Snapshot for ``RetrievalService.stats()`` and dashboards."""
+        st = self._state
+        return {
+            "n_live": st.n_live,
+            "n_main": len(self.main),
+            "n_delta": st.n_delta,
+            "segments": len(st.segments),
+            "tombstones": len(self.main) + st.n_delta - st.n_live,
+            "next_gid": st.next_gid,
+            "drift": self.drift.stats(),
+            "needs_compaction": self.needs_compaction(),
+        }
+
+    # -- compaction --------------------------------------------------------
+    def _main_storage(self) -> jax.Array:
+        if isinstance(self.main, DenseIndex):
+            return self.main.docs
+        return self.main.storage
+
+    def compact(self, rng=None) -> "SegmentedIndex":
+        """Fold segments + tombstones into a fresh main; returns a NEW
+        SegmentedIndex (self keeps serving unchanged).
+
+        Storage rows are moved, never re-encoded — the fitted pipeline,
+        scorer codebooks, and global doc ids all carry over, so rankings
+        over the surviving rows are unchanged for exact mains.  IVF mains
+        refit only the k-means router (on the float decode of the moved
+        storage, exactly like ``CompressedIndex.to_ivf``), which is the
+        point of drift-triggered compaction: the router re-centers on what
+        the index now actually contains.
+        """
+        st = self._state
+        main = self.main
+        alive_main = ~st.tomb[self._main_gids]
+        parts = [jnp.asarray(self._main_storage())[jnp.asarray(alive_main)]]
+        gid_parts = [self._main_gids[alive_main]]
+        for seg in st.segments:
+            alive = ~st.tomb[seg.gids]
+            parts.append(seg.storage[jnp.asarray(alive)])
+            gid_parts.append(seg.gids[alive])
+        storage = jnp.concatenate(parts, axis=0)
+        gids = np.concatenate(gid_parts)
+        if storage.shape[0] == 0:
+            raise ValueError("cannot compact to an empty index — every doc "
+                             "is tombstoned")
+
+        if isinstance(main, DenseIndex):
+            new_main = DenseIndex(storage, sim=main.sim)
+        elif isinstance(main, IVFIndex):
+            if isinstance(main, IVFFlatIndex):
+                new_main = IVFFlatIndex(
+                    nlist=main._nlist_requested, nprobe=main.nprobe,
+                    sim=main.sim, kmeans_iters=main.kmeans_iters)
+            else:
+                new_main = IVFIndex(
+                    main.pipeline, nlist=main._nlist_requested,
+                    nprobe=main.nprobe, sim=main.sim, backend=main.backend,
+                    kmeans_iters=main.kmeans_iters)
+            new_main.float_stages = self.float_stages
+            new_main.scorer.load_extra_state(self.scorer.extra_state())
+            x_route = new_main.scorer.decode(storage)
+            new_main._install(storage, x_route, rng=rng)
+        else:
+            new_main = CompressedIndex(main.pipeline, sim=main.sim,
+                                       backend=main.backend)
+            new_main.float_stages = self.float_stages
+            new_main.scorer.load_extra_state(self.scorer.extra_state())
+            new_main.storage = storage
+            new_main._n_docs = int(storage.shape[0])
+            new_main._dim = main._dim
+            new_main._version = 1
+        new_main.spec = getattr(main, "spec", None)
+
+        out = SegmentedIndex(new_main, spec=self.spec,
+                             drift_threshold=self.drift_threshold,
+                             max_delta_fraction=self.max_delta_fraction)
+        # tombstoned ids stay marked forever: the gid space has holes after
+        # compaction, and a replayed delete of a folded id must stay a no-op
+        out._restore(main_gids=gids, tomb=st.tomb.copy(),
+                     next_gid=st.next_gid)
+        return out
+
+    # -- persistence -------------------------------------------------------
+    def state_dict(self) -> dict:
+        st = self._state
+        return {
+            "main": self.main.state_dict(),
+            "main_kind": type(self.main).__name__,
+            "main_gids": self._main_gids,
+            "tombstones": np.flatnonzero(st.tomb).astype(np.int64),
+            "next_gid": st.next_gid,
+            "segments": [{"storage": s.storage, "gids": s.gids,
+                          "labels": s.labels} for s in st.segments],
+            "drift": self.drift.state_dict(),
+        }
+
+    def save(self, path: str) -> None:
+        from repro.retrieval.api import save_index
+        save_index(self, path)
+
+    @classmethod
+    def load(cls, path: str) -> "SegmentedIndex":
+        from repro.retrieval.api import load_index
+        return load_index(path, expect=cls)

@@ -36,11 +36,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.pipeline import CompressionPipeline
 from repro.parallel.compat import shard_map
-from repro.retrieval.ivf import (IVFIndex, masked_topk_by_id,
-                                 probe_and_score)
+from repro.retrieval.ivf import IVFIndex, probe_and_score
 from repro.retrieval.scorers import (Scorer, apply_float_stages,
                                      scorer_for_pipeline)
-from repro.retrieval.topk import resolve_k, similarity
+from repro.retrieval.topk import (masked_topk_by_id, resolve_k, similarity)
 
 AxisName = Union[str, Sequence[str]]
 

@@ -9,7 +9,6 @@ host/reference path).
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +27,45 @@ def resolve_k(k: int, n_docs: int) -> int:
     if k < 1:
         raise ValueError(f"k must be ≥ 1, got {k}")
     return min(int(k), int(n_docs))
+
+
+def topk_score_then_id(s: jax.Array, ids: jax.Array, k: int
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Top-k by (score desc, doc id asc) — a strict total order.
+
+    Exact search breaks score ties by document id implicitly (candidates
+    are scanned in id order and ``lax.top_k`` keeps the first occurrence);
+    IVF candidates arrive in probe order, sharded IVF candidates in shard
+    order, and segmented candidates in layer order
+    (:mod:`repro.retrieval.segments`), so ties must be broken *explicitly*
+    on the id for all the paths to produce identical rankings.  Matters
+    most for the 1-bit backend, whose integer sign-dot scores tie
+    constantly.
+    """
+    order = jnp.lexsort((ids, -s), axis=-1)[..., :k]
+    return (jnp.take_along_axis(s, order, axis=-1),
+            jnp.take_along_axis(ids, order, axis=-1))
+
+
+def masked_topk_by_id(s: jax.Array, ids: jax.Array, k: int
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Top-``k`` by (score desc, id asc), normalising unreachable slots.
+
+    ``-inf`` scores come back with id ``-1``; when fewer than ``k``
+    candidate columns exist the output is padded out to ``k`` with
+    ``(-inf, -1)``.  Shared by the single-host IVF search, both halves
+    (shard-local and post-gather merge) of the sharded search, and the
+    cross-layer merge of :class:`~repro.retrieval.segments.SegmentedIndex`,
+    so the paths cannot drift apart.
+    """
+    kk = min(k, s.shape[1])
+    vals, out = topk_score_then_id(s, ids, kk)
+    out = jnp.where(jnp.isfinite(vals), out, -1)
+    if kk < k:
+        pad = k - kk
+        vals = jnp.pad(vals, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+        out = jnp.pad(out, ((0, 0), (0, pad)), constant_values=-1)
+    return vals, out
 
 
 def similarity(queries: jax.Array, docs: jax.Array, sim: str) -> jax.Array:

@@ -66,7 +66,8 @@ class IndexVersion:
             self._engine = ServeEngine(index, k=k, batcher=batcher)
             self.info = {"source": "memory",
                          "kind": type(index).__name__,
-                         "n_docs": len(index)}
+                         "n_docs": len(index),
+                         "mutable": hasattr(index, "mutable_stats")}
         else:
             from repro.retrieval.api import load_index_meta
             self.info = {"source": artifact, **load_index_meta(artifact)}
@@ -104,6 +105,10 @@ class IndexEntry:
         self.previous: Optional[int] = None
         self.canary = None          # ShadowScorer: live traffic vs. staged
         self.canary_host = None     # the engine the canary is attached to
+        # True while a compact(promote=False) fold awaits promote: the
+        # staged version is a snapshot of live, so live updates must be
+        # frozen or they would silently vanish at the flip
+        self.staged_compact = False
         # counters carried over from GC'd versions, so service-level
         # totals never go backwards across hot-swaps
         self.retired_totals = {"requests_served": 0, "queries_served": 0,

@@ -18,6 +18,12 @@ and hot-swaps index versions under live traffic with zero downtime::
     service.promote("wiki", min_overlap=0.6)   # atomic flip
     service.rollback("wiki")                   # undo, also atomic
 
+    # live churn (mutable indexes, IndexSpec(mutable=True)):
+    service.update("wiki", add=new_docs, delete=[12, 9041])
+    if service.stats()["indexes"]["wiki"]["versions"][1]["mutable"] \
+            ["needs_compaction"]:          # drift / delta-fraction trigger
+        service.compact("wiki")            # fold + stage + promote, no pause
+
 Design points:
 
 * **Version binding** — a request binds to the live version *at submit
@@ -50,8 +56,9 @@ from typing import Optional
 
 import numpy as np
 
+from repro.retrieval.segments import SegmentedIndex
 from repro.serve.batcher import MicroBatcher
-from repro.serve.engine import ServeEngine, ServeResult
+from repro.serve.engine import ServeResult
 from repro.serve.metrics import LatencyStats
 from repro.serve.router import IndexEntry, IndexRegistry, IndexVersion
 from repro.serve.shadow import ShadowScorer
@@ -150,8 +157,11 @@ class RetrievalService:
         self._registry = IndexRegistry()
         self._lock = threading.RLock()      # registry + version pointers
         self._admission = threading.Lock()  # pending-row accounting
+        self._update_lock = threading.Lock()  # serialise update/compact
         self._pending_queries = 0
         self.requests_rejected = 0
+        self.updates_applied = 0
+        self.compactions_run = 0
         self._poll_interval_s = poll_interval_s
         self._kick = threading.Event()
         self._stop = threading.Event()
@@ -412,6 +422,7 @@ class RetrievalService:
             self._detach_canary(entry)
             entry.versions[vid] = iv
             entry.staged = vid              # old staged (if any) retires → GC
+            entry.staged_compact = False    # replaced whatever was staged
             if canary_every:
                 entry.canary = ShadowScorer(staged_engine.index,
                                             every=canary_every)
@@ -463,6 +474,7 @@ class RetrievalService:
                         f"{c.mean_overlap:.3f} < required {min_overlap} "
                         f"({len(c.overlaps)} batches)")
             self._detach_canary(entry)
+            entry.staged_compact = False
             return entry.promote()
 
     def rollback(self, name: str) -> int:
@@ -475,7 +487,107 @@ class RetrievalService:
             self._check_open()
             entry = self._registry.get(name)
             self._detach_canary(entry)
+            entry.staged_compact = False
             return entry.rollback()
+
+    # -- live updates ------------------------------------------------------
+    def _live_mutable(self, name: str) -> tuple[IndexVersion, SegmentedIndex]:
+        with self._lock:
+            self._check_open()
+            entry = self._registry.get(name)
+            if entry.staged_compact:
+                raise RuntimeError(
+                    f"index {name!r} has a compacted version staged "
+                    "(compact(promote=False)) — updates are frozen until "
+                    "you promote() or replace the staged version, or "
+                    "they would silently vanish at the flip")
+            iv = entry.live_version()
+        engine = iv.ensure_engine()
+        idx = engine.index
+        if not isinstance(idx, SegmentedIndex):
+            raise TypeError(
+                f"index {name!r} v{iv.version} is immutable "
+                f"({type(idx).__name__}) — build it with "
+                "IndexSpec(mutable=True) (or wrap it in a SegmentedIndex) "
+                "to take live updates")
+        return iv, idx
+
+    def update(self, name: str, *, add=None, delete=None) -> dict:
+        """Apply live adds/deletes to the mutable index serving ``name``.
+
+        ``add`` is a ``(n, d)`` doc block encoded through the index's
+        *frozen* fitted pipeline into a new delta segment; ``delete`` is a
+        sequence of global doc ids to tombstone.  Queries keep draining
+        throughout — a query submitted after ``update`` returns will never
+        see a deleted id and will rank the added docs exactly as a fresh
+        build would.  Returns a report dict: ``added``/``deleted`` counts,
+        the ``gid_range`` assigned to the added block (use these ids to
+        delete later), and the index's ``mutable_stats()`` —
+        ``drift``/``needs_compaction`` there is the compaction trigger.
+
+        Updates mutate the in-memory index only; run :meth:`compact` (or
+        ``save_index``) to produce a durable artifact.
+        """
+        if add is None and delete is None:
+            raise ValueError("update needs add= (docs) and/or delete= "
+                             "(global doc ids)")
+        iv, idx = self._live_mutable(name)
+        with self._update_lock:
+            added = deleted = 0
+            gid_range = None
+            if delete is not None:
+                # validate BEFORE the add lands so the pair is atomic: a
+                # bad delete id must not leave half the update applied
+                # (ids inside the pending add block remain deletable)
+                n_pending = 0 if add is None else int(np.shape(add)[0])
+                delete = idx.validate_ids(delete, n_pending_add=n_pending)
+            if add is not None:
+                first = idx.next_gid
+                idx.add(add)
+                added = idx.next_gid - first
+                gid_range = (first, idx.next_gid)
+            if delete is not None:
+                deleted = idx.delete(delete)
+            self.updates_applied += 1
+            report = idx.mutable_stats()
+        self._kick.set()
+        return {"index": name, "version": iv.version, "added": added,
+                "deleted": deleted, "gid_range": gid_range, **report}
+
+    def compact(self, name: str, *, canary_every: int = 0,
+                min_overlap: Optional[float] = None, promote: bool = True,
+                k: Optional[int] = None, rng=None) -> int:
+        """Fold the live mutable index's segments + tombstones into a
+        fresh main and re-register it through stage → promote.
+
+        The fold runs in the calling thread while the old version keeps
+        draining queries — the swap itself is the same atomic pointer flip
+        as an artifact refresh, so no request is lost and global doc ids
+        are preserved across the swap.  ``canary_every=N`` shadow-scores
+        every Nth live batch on the compacted index first;
+        ``promote=False`` stages only (canary at leisure, then call
+        :meth:`promote` yourself — further :meth:`update` calls are
+        rejected meanwhile, since the staged fold is a snapshot of live
+        and would drop them at the flip); ``min_overlap`` forwards to
+        the promote gate.  Returns the staged (``promote=False``) or
+        now-live version number.
+        """
+        with self._update_lock:
+            iv, idx = self._live_mutable(name)
+            compacted = idx.compact(rng=rng)
+            vid = self.stage(name, index=compacted, k=k or iv._k,
+                             canary_every=canary_every)
+            if promote:
+                vid = self.promote(name, min_overlap=min_overlap)
+            else:
+                # the staged fold is a snapshot of live: freeze updates
+                # until it is promoted (or replaced), else an update would
+                # silently vanish at the flip
+                with self._lock:
+                    self._registry.get(name).staged_compact = True
+            self.compactions_run += 1
+        self._kick.set()
+        return vid
 
     def _detach_canary(self, entry) -> None:
         if entry.canary is not None:
@@ -509,6 +621,11 @@ class RetrievalService:
                     latencies.append(iv.engine.latency)
                     for key in totals:
                         totals[key] += row[key]
+                    if isinstance(iv.engine.index, SegmentedIndex):
+                        # the preprocessing-drift monitor lives here:
+                        # mutable["drift"]["mean_shift"] vs the pipeline's
+                        # fitted centering stats, plus needs_compaction
+                        row["mutable"] = iv.engine.index.mutable_stats()
                 table[vid] = row
             for key in totals:              # GC'd versions still count
                 totals[key] += retired[key]
@@ -524,5 +641,7 @@ class RetrievalService:
         return {"indexes": indexes,
                 "pending_queries": self.pending_queries,
                 "requests_rejected": self.requests_rejected,
+                "updates_applied": self.updates_applied,
+                "compactions_run": self.compactions_run,
                 **totals,
                 **LatencyStats.merge(latencies).summary()}

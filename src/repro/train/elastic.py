@@ -22,7 +22,7 @@ from typing import Any, Optional, Sequence
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from repro.utils import first_divisor_leq
 

@@ -9,7 +9,7 @@ ZeRO rules applied on top).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Sequence
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

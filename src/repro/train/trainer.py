@@ -9,7 +9,6 @@ State layout (plain pytree — shards like params):
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Optional
 
 import jax

@@ -1,0 +1,264 @@
+"""Index.add() across all five index classes.
+
+Contract under test: adding docs to a live index (through its *already
+fitted* pipeline) must rank identically to building an index over the
+concatenated corpus with the same fitted pipeline — per scorer backend —
+and ``add`` on a ``load_index``-restored artifact must round-trip through
+``save_index``/``load_index``.
+
+The sharded classes run in a subprocess with forced host devices (same
+pattern as tests/test_sharded_index.py).
+"""
+
+import copy
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CenterNorm, CompressionPipeline, FloatCast,
+                        Int8Quantizer, OneBitQuantizer, PCA)
+from repro.retrieval import load_index
+from repro.retrieval.index import CompressedIndex, DenseIndex
+from repro.retrieval.ivf import IVFIndex
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+D = 48
+K = 9
+BACKEND_TAILS = {
+    "float": [],
+    "fp16": [FloatCast()],
+    "int8": [Int8Quantizer()],
+    "onebit": [OneBitQuantizer(0.5)],
+}
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(42)
+    return {
+        "base": jnp.asarray(rng.standard_normal((240, D)), jnp.float32),
+        "more": jnp.asarray(rng.standard_normal((70, D)), jnp.float32),
+        "queries": jnp.asarray(rng.standard_normal((11, D)), jnp.float32),
+    }
+
+
+def make_pipeline(backend):
+    return CompressionPipeline([CenterNorm(), PCA(24)] +
+                               copy.deepcopy(BACKEND_TAILS[backend]))
+
+
+def assert_same_ranking(a, b, rtol=1e-5, atol=1e-6):
+    (va, ia), (vb, ib) = a, b
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+    np.testing.assert_allclose(np.asarray(va), np.asarray(vb),
+                               rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# DenseIndex
+# ---------------------------------------------------------------------------
+
+
+def test_dense_add_matches_concat_build(data):
+    idx = DenseIndex(data["base"]).add(data["more"])
+    ref = DenseIndex(jnp.concatenate([data["base"], data["more"]]))
+    assert len(idx) == 310
+    assert_same_ranking(idx.search(data["queries"], K),
+                        ref.search(data["queries"], K))
+
+
+def test_dense_add_on_loaded_artifact_round_trips(tmp_path, data):
+    path = str(tmp_path / "dense.npz")
+    DenseIndex(data["base"]).save(path)
+    loaded = load_index(path).add(data["more"])
+    ref = DenseIndex(jnp.concatenate([data["base"], data["more"]]))
+    assert_same_ranking(loaded.search(data["queries"], K),
+                        ref.search(data["queries"], K))
+    path2 = str(tmp_path / "dense2.npz")
+    loaded.save(path2)
+    assert_same_ranking(load_index(path2).search(data["queries"], K),
+                        loaded.search(data["queries"], K), rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# CompressedIndex, per scorer backend
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", sorted(BACKEND_TAILS))
+def test_compressed_add_matches_concat_build(data, backend):
+    pipe = make_pipeline(backend)
+    idx = CompressedIndex.build(data["base"], data["queries"], pipe,
+                                backend="jnp")
+    idx.add(data["more"])
+    # same *fitted* pipeline, one encode over the concatenated corpus
+    ref = CompressedIndex(pipe, backend="jnp")
+    ref.add(jnp.concatenate([data["base"], data["more"]]))
+    assert len(idx) == len(ref) == 310
+    assert_same_ranking(idx.search(data["queries"], K),
+                        ref.search(data["queries"], K))
+
+
+@pytest.mark.parametrize("backend", sorted(BACKEND_TAILS))
+def test_compressed_add_on_loaded_artifact_round_trips(tmp_path, data,
+                                                       backend):
+    pipe = make_pipeline(backend)
+    built = CompressedIndex.build(data["base"], data["queries"], pipe,
+                                  backend="jnp")
+    path = str(tmp_path / "c.npz")
+    built.save(path)
+    loaded = load_index(path)
+    loaded.add(data["more"])
+    built.add(data["more"])
+    assert_same_ranking(loaded.search(data["queries"], K),
+                        built.search(data["queries"], K), rtol=0, atol=0)
+    path2 = str(tmp_path / "c2.npz")
+    loaded.save(path2)
+    again = load_index(path2)
+    assert len(again) == 310
+    assert_same_ranking(again.search(data["queries"], K),
+                        loaded.search(data["queries"], K), rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# IVFIndex: add routes to the existing centroids; full probe == exact
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", sorted(BACKEND_TAILS))
+def test_ivf_add_full_probe_matches_exact_concat(data, backend):
+    pipe = make_pipeline(backend)
+    ivf = IVFIndex.build(data["base"], data["queries"], pipe, nlist=12,
+                         nprobe=4, backend="jnp", kmeans_iters=4)
+    ivf.add(data["more"])
+    assert len(ivf) == 310
+    ref = CompressedIndex(pipe, backend="jnp")
+    ref.add(jnp.concatenate([data["base"], data["more"]]))
+    # probing every list makes IVF exhaustive: must equal exact search
+    assert_same_ranking(ivf.search(data["queries"], K, nprobe=ivf.nlist),
+                        ref.search(data["queries"], K))
+
+
+@pytest.mark.slow
+def test_ivf_add_on_loaded_artifact_round_trips(tmp_path, data):
+    pipe = make_pipeline("int8")
+    built = IVFIndex.build(data["base"], data["queries"], pipe, nlist=12,
+                           nprobe=5, backend="jnp", kmeans_iters=4)
+    path = str(tmp_path / "ivf.npz")
+    built.save(path)
+    loaded = load_index(path)
+    loaded.add(data["more"])
+    built.add(data["more"])
+    # identical centroids (loaded from the artifact) → identical routing
+    assert_same_ranking(loaded.search(data["queries"], K),
+                        built.search(data["queries"], K), rtol=0, atol=0)
+    path2 = str(tmp_path / "ivf2.npz")
+    loaded.save(path2)
+    assert_same_ranking(load_index(path2).search(data["queries"], K),
+                        loaded.search(data["queries"], K), rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# sharded classes (subprocess with 8 forced host devices)
+# ---------------------------------------------------------------------------
+
+_CHECK_SHARDED = """
+    import copy, os, tempfile
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import (CenterNorm, CompressionPipeline, FloatCast,
+                            Int8Quantizer, OneBitQuantizer, PCA)
+    from repro.launch.mesh import make_test_mesh
+    from repro.retrieval import (CompressedIndex, IVFIndex,
+                                 ShardedCompressedIndex, ShardedIVFIndex,
+                                 load_index)
+
+    rng = np.random.default_rng(7)
+    base = jnp.asarray(rng.standard_normal((240, 48)), jnp.float32)
+    more = jnp.asarray(rng.standard_normal((70, 48)), jnp.float32)
+    queries = jnp.asarray(rng.standard_normal((11, 48)), jnp.float32)
+    mesh = make_test_mesh(8, model=8)
+    tails = {"float": [], "fp16": [FloatCast()],
+             "int8": [Int8Quantizer()], "onebit": [OneBitQuantizer(0.5)]}
+
+    for name, tail in tails.items():
+        p1 = CompressionPipeline([CenterNorm(), PCA(24)] + copy.deepcopy(tail))
+        p2 = CompressionPipeline([CenterNorm(), PCA(24)] + copy.deepcopy(tail))
+        sharded = ShardedCompressedIndex.build(base, queries, p1, mesh,
+                                               backend="jnp")
+        sharded.add(more)
+        single = CompressedIndex.build(base, queries, p2, backend="jnp")
+        single.add(more)
+        v1, i1 = single.search(queries, 9)
+        v2, i2 = sharded.search(queries, 9)
+        ok = (np.array_equal(np.asarray(i1), np.asarray(i2)) and
+              np.allclose(np.asarray(v1), np.asarray(v2), rtol=1e-5,
+                          atol=1e-5))
+        # add on a loaded sharded artifact round-trips
+        with tempfile.TemporaryDirectory() as tmp:
+            path = os.path.join(tmp, "s.npz")
+            sharded.save(path)
+            back = load_index(path, mesh=mesh)
+            back.add(more)
+            sharded.add(more)
+            v3, i3 = sharded.search(queries, 9)
+            v4, i4 = back.search(queries, 9)
+            ok_rt = (np.array_equal(np.asarray(i3), np.asarray(i4)) and
+                     np.allclose(np.asarray(v3), np.asarray(v4)))
+        print(f"SHARDED {name} add={ok} roundtrip={ok_rt}")
+
+    # ShardedIVFIndex: in-place add refuses; the documented path is
+    # ivf.add + re-wrap, and it must match the single-host ranking
+    pipe = CompressionPipeline([CenterNorm(), PCA(24), Int8Quantizer()])
+    ivf = IVFIndex.build(base, queries, pipe, nlist=12, nprobe=5,
+                         backend="jnp", kmeans_iters=4)
+    siv = ShardedIVFIndex(ivf, mesh)
+    try:
+        siv.add(more)
+        print("SHARDED_IVF add_raises=False")
+    except NotImplementedError:
+        ivf.add(more)
+        try:
+            siv.search(queries, 9)          # stale wrapper must refuse
+            stale_guard = False
+        except ValueError:
+            stale_guard = True
+        rewrapped = ShardedIVFIndex(ivf, mesh)
+        v1, i1 = ivf.search(queries, 9)
+        v2, i2 = rewrapped.search(queries, 9)
+        ok = (np.array_equal(np.asarray(i1), np.asarray(i2)) and
+              np.allclose(np.asarray(v1), np.asarray(v2), rtol=1e-5,
+                          atol=1e-5))
+        print(f"SHARDED_IVF add_raises=True stale_guard={stale_guard} "
+              f"rewrap={ok}")
+"""
+
+
+@pytest.fixture(scope="module")
+def sharded_output():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_CHECK_SHARDED)],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", sorted(BACKEND_TAILS))
+def test_sharded_compressed_add_parity(sharded_output, backend):
+    assert f"SHARDED {backend} add=True roundtrip=True" in sharded_output
+
+
+@pytest.mark.slow
+def test_sharded_ivf_add_rewrap_parity(sharded_output):
+    assert ("SHARDED_IVF add_raises=True stale_guard=True rewrap=True"
+            in sharded_output)

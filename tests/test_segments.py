@@ -1,0 +1,334 @@
+"""SegmentedIndex: live adds + tombstone deletes == a fresh build.
+
+The acceptance bar: a SegmentedIndex with delta segments and tombstones
+must return bit-identical rankings to a freshly built index over the
+equivalent (surviving) corpus — per scorer backend, and under IVF with
+any probe width — with global doc ids surviving compaction.
+"""
+
+import copy
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CenterNorm, CompressionPipeline, FloatCast,
+                        Int8Quantizer, OneBitQuantizer, PCA)
+from repro.retrieval import (IndexSpec, SegmentedIndex, build_index,
+                             load_index, load_index_meta)
+from repro.retrieval.index import CompressedIndex, DenseIndex
+from repro.retrieval.ivf import IVFIndex, build_padded_lists
+from repro.retrieval.kmeans import assign
+from repro.retrieval.scorers import apply_float_stages
+from repro.retrieval.segments import DriftMonitor, fitted_center_mean
+
+D = 48
+K = 7
+BACKEND_TAILS = {
+    "float": [],
+    "fp16": [FloatCast()],
+    "int8": [Int8Quantizer()],
+    "onebit": [OneBitQuantizer(0.5)],
+}
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(0)
+    return {
+        "docs": jnp.asarray(rng.standard_normal((300, D)), jnp.float32),
+        "extra": jnp.asarray(rng.standard_normal((60, D)), jnp.float32),
+        "queries": jnp.asarray(rng.standard_normal((12, D)), jnp.float32),
+    }
+
+
+DEAD = [3, 10, 11, 299, 305]      # three main rows, two delta rows
+
+
+def fresh_over_surviving(pipe, all_docs, alive):
+    """A fresh index over the surviving corpus, same fitted pipeline."""
+    fresh = CompressedIndex(pipe, backend="jnp")
+    fresh.add(all_docs[jnp.asarray(alive)])
+    return fresh
+
+
+# ---------------------------------------------------------------------------
+# exact-search parity per scorer backend
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", sorted(BACKEND_TAILS))
+def test_parity_with_fresh_build_per_backend(data, backend):
+    pipe = CompressionPipeline([CenterNorm(), PCA(24)] +
+                               copy.deepcopy(BACKEND_TAILS[backend]))
+    main = CompressedIndex.build(data["docs"], data["queries"], pipe,
+                                 backend="jnp")
+    seg = SegmentedIndex(main)
+    seg.add(data["extra"])
+    assert seg.delete(DEAD) == len(DEAD)
+    assert len(seg) == 360 - len(DEAD)
+
+    all_docs = jnp.concatenate([data["docs"], data["extra"]], axis=0)
+    alive = np.setdiff1d(np.arange(360), DEAD)
+    fresh = fresh_over_surviving(pipe, all_docs, alive)
+    fv, fi = fresh.search(data["queries"], K)
+    sv, si = seg.search(data["queries"], K)
+    # fresh ids are surviving-corpus positions; map them to global ids
+    np.testing.assert_array_equal(alive[np.asarray(fi)], np.asarray(si))
+    np.testing.assert_allclose(np.asarray(fv), np.asarray(sv),
+                               rtol=1e-5, atol=1e-6)
+
+    # compaction folds the layers but preserves rankings AND global ids
+    comp = seg.compact()
+    assert isinstance(comp, SegmentedIndex)
+    assert len(comp) == len(seg)
+    assert comp.n_segments == 0 and comp.n_deltas == 0
+    cv, ci = comp.search(data["queries"], K)
+    np.testing.assert_array_equal(np.asarray(si), np.asarray(ci))
+    np.testing.assert_allclose(np.asarray(sv), np.asarray(cv),
+                               rtol=1e-5, atol=1e-6)
+    # the old index is untouched — compaction is copy-on-write
+    sv2, si2 = seg.search(data["queries"], K)
+    np.testing.assert_array_equal(np.asarray(si), np.asarray(si2))
+
+
+def test_dense_main_parity(data):
+    seg = SegmentedIndex(DenseIndex(data["docs"]))
+    seg.add(data["extra"])
+    seg.delete(DEAD)
+    all_docs = jnp.concatenate([data["docs"], data["extra"]], axis=0)
+    alive = np.setdiff1d(np.arange(360), DEAD)
+    fv, fi = DenseIndex(all_docs[jnp.asarray(alive)]).search(
+        data["queries"], K)
+    sv, si = seg.search(data["queries"], K)
+    np.testing.assert_array_equal(alive[np.asarray(fi)], np.asarray(si))
+    np.testing.assert_allclose(np.asarray(fv), np.asarray(sv),
+                               rtol=1e-5, atol=1e-6)
+    comp = seg.compact()
+    cv, ci = comp.search(data["queries"], K)
+    np.testing.assert_array_equal(np.asarray(si), np.asarray(ci))
+
+
+# ---------------------------------------------------------------------------
+# IVF parity: same centroids, delta rows obey the same probe reachability
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("nprobe", [2, 4, 16])
+def test_ivf_parity_with_equivalent_index(data, nprobe):
+    """Segmented IVF == one IVF index with the same centroids holding all
+    surviving rows — for narrow, medium, and full probe widths."""
+    pipe = CompressionPipeline([CenterNorm(), PCA(24), Int8Quantizer()])
+    main = IVFIndex.build(data["docs"], data["queries"], pipe,
+                          nlist=16, nprobe=4, backend="jnp",
+                          kmeans_iters=4)
+    seg = SegmentedIndex(main)
+    seg.add(data["extra"])
+    seg.delete(DEAD)
+
+    # reference: one IVFIndex, identical centroids, all surviving rows
+    ref = IVFIndex(pipe, nlist=16, nprobe=4, backend="jnp", kmeans_iters=4)
+    ref.float_stages = main.float_stages
+    ref.scorer = copy.deepcopy(main.scorer)
+    all_docs = jnp.concatenate([data["docs"], data["extra"]], axis=0)
+    alive = np.setdiff1d(np.arange(360), DEAD)
+    x = apply_float_stages(main.float_stages, all_docs[jnp.asarray(alive)],
+                           "docs")
+    labels = np.asarray(assign(jnp.asarray(x, jnp.float32),
+                               main.centroids))
+    ref.storage = ref.scorer.encode_docs(x)
+    ref.centroids = main.centroids
+    ref.nlist = main.nlist
+    ref._labels = labels
+    ref.lists = jnp.asarray(build_padded_lists(labels, main.nlist))
+    ref._n_docs = int(x.shape[0])
+    ref._dim = int(x.shape[-1])
+    ref._version = 1
+
+    rv, ri = ref.search(data["queries"], K, nprobe=nprobe)
+    sv, si = seg.search(data["queries"], K, nprobe=nprobe)
+    ri = np.asarray(ri)
+    want = np.where(ri >= 0, alive[np.maximum(ri, 0)], -1)
+    np.testing.assert_array_equal(want, np.asarray(si))
+    np.testing.assert_allclose(np.asarray(rv), np.asarray(sv),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.slow
+def test_ivf_compaction_full_probe_matches_exact(data):
+    """After compaction the router is refit, so ranking parity is checked
+    at full probe width (== exact search over the surviving rows)."""
+    spec = IndexSpec(method="pca_int8", dim=24, backend="jnp", post=False,
+                     ivf=(12, 12), kmeans_iters=4, mutable=True)
+    seg = build_index(spec, data["docs"], data["queries"])
+    seg.add(data["extra"])
+    seg.delete(DEAD)
+    sv, si = seg.search(data["queries"], K, nprobe=12)
+    comp = seg.compact()
+    cv, ci = comp.search(data["queries"], K, nprobe=12)
+    np.testing.assert_array_equal(np.asarray(si), np.asarray(ci))
+    np.testing.assert_allclose(np.asarray(sv), np.asarray(cv),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# delete semantics, id allocation, guard rails
+# ---------------------------------------------------------------------------
+
+
+def test_delete_validation_and_idempotence(data):
+    seg = SegmentedIndex(DenseIndex(data["docs"]))
+    assert seg.delete([5, 5, 7]) == 2
+    assert seg.delete([5]) == 0                    # idempotent
+    assert seg.delete([]) == 0
+    with pytest.raises(KeyError):
+        seg.delete([360])                          # never allocated
+    with pytest.raises(KeyError):
+        seg.delete([-1])
+    assert len(seg) == 298
+    assert seg.n_tombstoned == 2
+
+
+def test_deleted_ids_stay_dead_after_compaction(data):
+    seg = SegmentedIndex(DenseIndex(data["docs"]))
+    seg.add(data["extra"])
+    seg.delete([0, 350])
+    comp = seg.compact()
+    # replaying the delete log over the compacted index is a no-op
+    assert comp.delete([0, 350]) == 0
+    assert comp.next_gid == 360                    # allocator monotonic
+    comp.add(data["extra"][:5])
+    assert comp.next_gid == 365
+    _, ids = comp.search(data["queries"], 360)
+    got = set(np.asarray(ids).ravel().tolist())
+    assert 0 not in got and 350 not in got
+    assert 364 in got                              # fresh rows searchable
+
+
+def test_add_validation_and_main_guard(data):
+    main = DenseIndex(data["docs"])
+    seg = SegmentedIndex(main)
+    with pytest.raises(ValueError, match="n ≥ 1"):
+        seg.add(data["extra"][:0])
+    with pytest.raises(TypeError, match="cannot wrap"):
+        SegmentedIndex(seg)
+    pipe = CompressionPipeline([CenterNorm(), PCA(8), Int8Quantizer()])
+    cmain = CompressedIndex.build(data["docs"], data["queries"], pipe,
+                                  backend="jnp")
+    cseg = SegmentedIndex(cmain)
+    cmain.add(data["extra"])                       # out-of-band mutation
+    with pytest.raises(ValueError, match="changed under"):
+        cseg.search(data["queries"], K)
+
+
+def test_all_docs_deleted(data):
+    seg = SegmentedIndex(DenseIndex(data["docs"][:4]))
+    seg.delete(range(4))
+    assert len(seg) == 0
+    with pytest.raises(ValueError, match="empty"):
+        seg.compact()
+
+
+# ---------------------------------------------------------------------------
+# drift monitor
+# ---------------------------------------------------------------------------
+
+
+def test_drift_monitor_flags_shifted_additions(data):
+    pipe = CompressionPipeline([CenterNorm(), PCA(16), Int8Quantizer()])
+    main = CompressedIndex.build(data["docs"], data["queries"], pipe,
+                                 backend="jnp")
+    ref = fitted_center_mean(pipe)
+    assert ref is not None and ref.shape == (D,)
+
+    in_dist = SegmentedIndex(main)
+    in_dist.add(data["extra"])                     # same distribution
+    shifted = SegmentedIndex(main)
+    shifted.add(data["extra"] + 8.0)               # way off the fitted mean
+    assert shifted.drift.mean_shift > 5 * max(in_dist.drift.mean_shift,
+                                              1e-6)
+    assert shifted.needs_compaction()
+    st = shifted.mutable_stats()
+    assert st["drift"]["n_added"] == 60
+    assert st["needs_compaction"]
+
+
+def test_delta_fraction_triggers_compaction(data):
+    seg = SegmentedIndex(DenseIndex(data["docs"][:64]),
+                         max_delta_fraction=0.25)
+    assert not seg.needs_compaction()
+    seg.add(data["extra"])                         # 60/124 ≈ 0.48 > 0.25
+    assert seg.needs_compaction()
+    comp = seg.compact()
+    assert not comp.needs_compaction()             # folded → trigger clears
+
+
+def test_drift_monitor_empty_and_ref_free():
+    m = DriftMonitor()
+    assert m.mean_shift == 0.0
+    assert np.isnan(m.stats()["mean_norm"])
+    m.update(np.ones((4, 8)))
+    assert m.stats()["n_added"] == 4
+    assert m.mean_shift > 0                        # vs zero reference
+
+
+# ---------------------------------------------------------------------------
+# persistence: segments + tombstones + allocator round-trip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", [
+    IndexSpec(method="pca_int8", dim=24, backend="jnp", post=False,
+              mutable=True),
+    IndexSpec(method="pca_onebit", dim=33, backend="jnp", post=False,
+              mutable=True),
+    IndexSpec(method="dense", mutable=True),
+    pytest.param(IndexSpec(method="pca_int8", dim=24, backend="jnp",
+                           post=False, ivf=(12, 5), kmeans_iters=4,
+                           mutable=True), marks=pytest.mark.slow),
+], ids=["pca_int8", "pca_onebit", "dense", "ivf"])
+def test_segmented_artifact_round_trip(tmp_path, data, spec):
+    seg = build_index(spec, data["docs"], data["queries"])
+    assert isinstance(seg, SegmentedIndex)
+    seg.add(data["extra"])
+    seg.delete(DEAD)
+    v0, i0 = seg.search(data["queries"], K)
+
+    path = str(tmp_path / "kb.npz")
+    seg.save(path)
+    meta = load_index_meta(path)
+    assert meta["kind"] == "SegmentedIndex"
+    assert meta["mutable"] and meta["n_docs"] == 360 - len(DEAD)
+
+    back = load_index(path)
+    assert isinstance(back, SegmentedIndex)
+    assert back.spec == spec
+    assert back.next_gid == 360 and len(back) == 360 - len(DEAD)
+    assert back.drift.n_added == 60
+    v1, i1 = back.search(data["queries"], K)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_allclose(np.asarray(v0), np.asarray(v1),
+                               rtol=1e-6, atol=1e-7)
+
+    # the loaded copy is still mutable: add → delete → compact → search
+    back.add(data["extra"][:8])
+    assert back.next_gid == 368
+    back.delete([361])
+    comp = back.compact()
+    _, ci = comp.search(data["queries"], K)
+    assert 361 not in set(np.asarray(ci).ravel().tolist())
+
+
+def test_mutable_spec_rejects_sharding():
+    from repro.retrieval import ShardSpec
+    with pytest.raises(ValueError, match="mutable"):
+        IndexSpec(method="int8", mutable=True, shard=ShardSpec())
+
+
+def test_topk_merge_helpers_shared():
+    """The (score desc, id asc) merge lives in topk.py and is re-exported
+    by ivf.py — one definition for exact, IVF, sharded, and segmented."""
+    from repro.retrieval import ivf, topk
+    assert ivf.masked_topk_by_id is topk.masked_topk_by_id
+    assert ivf.topk_score_then_id is topk.topk_score_then_id

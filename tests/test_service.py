@@ -1,4 +1,5 @@
-"""RetrievalService: registry, async handles, admission, hot-swap."""
+"""RetrievalService: registry, async handles, admission, hot-swap,
+live updates (add/delete/compact) against mutable indexes."""
 
 import threading
 
@@ -304,6 +305,107 @@ def test_stats_roll_up_across_indexes(corpus):
 
 
 # ---------------------------------------------------------------------------
+# live updates: update() / compact() on a mutable index
+# ---------------------------------------------------------------------------
+
+
+def make_mutable(corpus, **spec_kw):
+    spec = IndexSpec(method="pca_int8", dim=16, backend="jnp", post=False,
+                     mutable=True, **spec_kw)
+    return build_index(spec, jnp.asarray(corpus["docs1"]),
+                       jnp.asarray(corpus["queries"]))
+
+
+def test_update_add_delete_and_stats_surface(corpus):
+    with RetrievalService() as svc:
+        svc.register("kb", make_mutable(corpus))
+        rep = svc.update("kb", add=corpus["docs2"][:50], delete=[1, 2])
+        assert (rep["added"], rep["deleted"]) == (50, 2)
+        assert rep["gid_range"] == (400, 450)
+        assert rep["n_live"] == 448
+        res = svc.query(corpus["queries"], index="kb", k=K).result(30)
+        got = set(np.asarray(res.ids).ravel().tolist())
+        assert not got & {1, 2}
+        row = svc.stats()["indexes"]["kb"]["versions"][1]
+        assert row["mutable"]["n_live"] == 448
+        assert row["mutable"]["segments"] == 1
+        assert row["mutable"]["drift"]["n_added"] == 50
+        assert svc.stats()["updates_applied"] == 1
+
+
+def test_update_requires_mutable_index(corpus):
+    with RetrievalService() as svc:
+        svc.register("kb", DenseIndex(jnp.asarray(corpus["docs1"])))
+        with pytest.raises(TypeError, match="immutable"):
+            svc.update("kb", add=corpus["docs2"][:4])
+        with pytest.raises(ValueError, match="add= .*delete="):
+            svc.update("kb")
+
+
+def test_compact_preserves_rankings_and_global_ids(corpus):
+    q = corpus["queries"][:8]
+    with RetrievalService() as svc:
+        svc.register("kb", make_mutable(corpus))
+        svc.update("kb", add=corpus["docs2"][:50], delete=[0, 7, 410])
+        before = svc.query(q, index="kb", k=K).result(30)
+        live = svc.compact("kb")
+        assert live == 2
+        after = svc.query(q, index="kb", k=K).result(30)
+        # exact backend: the fold changes nothing about the ranking, and
+        # global ids mean the same documents across the swap
+        np.testing.assert_array_equal(before.ids, after.ids)
+        table = svc.stats()["indexes"]["kb"]
+        assert table["live"] == 2 and table["previous"] == 1
+        assert svc.stats()["compactions_run"] == 1
+        # the compacted version is itself mutable: keep updating
+        rep = svc.update("kb", delete=[449])
+        assert rep["version"] == 2 and rep["deleted"] == 1
+
+
+def test_update_is_atomic_on_bad_delete_ids(corpus):
+    """A bad delete id must reject the whole update — the add half must
+    not land (a retry would duplicate the docs)."""
+    with RetrievalService() as svc:
+        svc.register("kb", make_mutable(corpus))
+        with pytest.raises(KeyError, match="unknown doc ids"):
+            svc.update("kb", add=corpus["docs2"][:20], delete=[999_999])
+        rep = svc.update("kb", add=corpus["docs2"][:4])
+        assert rep["gid_range"] == (400, 404)      # nothing leaked earlier
+        assert svc.stats()["updates_applied"] == 1
+
+
+def test_updates_frozen_while_compacted_version_staged(corpus):
+    """compact(promote=False) stages a snapshot of live; an update landing
+    on the old live version would silently vanish at the flip, so the
+    service must reject it until promote (or a replacement stage)."""
+    with RetrievalService() as svc:
+        svc.register("kb", make_mutable(corpus))
+        svc.update("kb", add=corpus["docs2"][:20], delete=[5])
+        svc.compact("kb", promote=False)
+        with pytest.raises(RuntimeError, match="frozen"):
+            svc.update("kb", delete=[6])
+        with pytest.raises(RuntimeError, match="frozen"):
+            svc.compact("kb")
+        svc.promote("kb")
+        rep = svc.update("kb", delete=[6])         # thawed after the flip
+        assert rep["deleted"] == 1
+
+
+def test_compact_with_canary_gate(corpus):
+    q = corpus["queries"]
+    with RetrievalService() as svc:
+        svc.register("kb", make_mutable(corpus))
+        svc.update("kb", add=corpus["docs2"][:30], delete=[3])
+        staged = svc.compact("kb", canary_every=1, promote=False)
+        assert svc.stats()["indexes"]["kb"]["staged"] == staged
+        for i in range(4):
+            svc.query(q[i * 8:(i + 1) * 8], index="kb", k=K).result(30)
+        # identical rankings + identical global ids → overlap 1.0
+        assert svc.canary("kb")["overlap"] == pytest.approx(1.0)
+        assert svc.promote("kb", min_overlap=0.99) == staged
+
+
+# ---------------------------------------------------------------------------
 # the acceptance bar: hot swap under concurrent producer load
 # ---------------------------------------------------------------------------
 
@@ -377,3 +479,91 @@ def test_hot_swap_parity_under_concurrent_load(tmp_path, corpus, backend,
     assert stats["requests_served"] == total
     assert stats["pending_queries"] == 0
     assert stats["requests_rejected"] == 0
+
+
+def test_mid_traffic_update_and_compaction(corpus):
+    """≥4 producers stream queries through a live add → delete → compact
+    cycle: no request is lost or duplicated, a query submitted after the
+    delete never serves a deleted doc id, and post-compaction rankings are
+    bit-identical to the pre-compaction ones (global ids preserved)."""
+    deleted_ids = [2, 5, 17, 403, 427]             # main rows + added rows
+    queries = corpus["queries"]
+    svc = RetrievalService(max_batch=32)
+    svc.register("kb", make_mutable(corpus))
+
+    n_threads, per_thread = 4, 25
+    deleted_done = threading.Event()
+    outcomes: list[list] = [[] for _ in range(n_threads)]
+    errors: list[Exception] = []
+
+    def producer(t):
+        rng = np.random.default_rng(200 + t)
+        try:
+            for _ in range(per_thread):
+                off = int(rng.integers(0, 56))
+                n = int(rng.integers(1, 9))
+                post_delete = deleted_done.is_set()
+                h = svc.query(queries[off:off + n],
+                              QueryOptions(index="kb", k=K))
+                outcomes[t].append((post_delete, h.result(timeout=60)))
+        except Exception as e:                     # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=producer, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    rep = svc.update("kb", add=corpus["docs2"][:40])
+    assert rep["gid_range"] == (400, 440)
+    svc.update("kb", delete=deleted_ids)
+    deleted_done.set()
+    live = svc.compact("kb")                       # fold + swap mid-traffic
+    for th in threads:
+        th.join()
+    final = svc.query(queries, QueryOptions(index="kb", k=K)).result(60)
+    stats = svc.stats()
+    svc.close()
+
+    assert not errors
+    assert live == 2
+    dead = set(deleted_ids)
+    n_post = 0
+    for per_thread_out in outcomes:
+        assert len(per_thread_out) == per_thread   # resolved exactly once
+        for post_delete, res in per_thread_out:
+            if post_delete:
+                n_post += 1
+                got = set(np.asarray(res.ids).ravel().tolist())
+                assert not got & dead, "served a deleted doc id"
+    assert n_post > 0
+
+    # post-compaction traffic: never a deleted id, and bit-identical to
+    # searching the compacted index directly (global ids preserved)
+    got = set(np.asarray(final.ids).ravel().tolist())
+    assert not got & dead
+    live_iv = stats["indexes"]["kb"]
+    assert live_iv["live"] == live
+    assert stats["requests_served"] == n_threads * per_thread + 1
+    assert stats["pending_queries"] == 0
+    assert stats["updates_applied"] == 2
+    assert stats["compactions_run"] == 1
+    row = live_iv["versions"][live]["mutable"]
+    assert row["n_live"] == 400 + 40 - len(deleted_ids)
+    assert row["segments"] == 0                    # folded
+
+
+def test_mid_traffic_update_never_serves_stale_delete(corpus):
+    """Direct-search oracle: after update() returns, a fresh query must
+    rank exactly like an offline SegmentedIndex with the same history."""
+    oracle = make_mutable(corpus)
+    served = make_mutable(corpus)
+    with RetrievalService() as svc:
+        svc.register("kb", served)
+        svc.update("kb", add=corpus["docs2"][:25], delete=[9, 12, 404])
+        oracle.add(jnp.asarray(corpus["docs2"][:25]))
+        oracle.delete([9, 12, 404])
+        res = svc.query(corpus["queries"], index="kb", k=K).result(30)
+        ov, oi = oracle.search(jnp.asarray(corpus["queries"]), K)
+        np.testing.assert_array_equal(res.ids, np.asarray(oi))
+        np.testing.assert_allclose(res.scores, np.asarray(ov),
+                                   rtol=1e-5, atol=1e-6)
