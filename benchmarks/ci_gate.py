@@ -3,16 +3,21 @@
     PYTHONPATH=src:. python benchmarks/ci_gate.py                 # gate
     PYTHONPATH=src:. python benchmarks/ci_gate.py --write-baseline
 
-Measures the serving-shaped quick workloads (exact quantized search, IVF
-search, and a mid-traffic live-update cycle) on a small synthetic KB and
-writes ``BENCH_<git-sha>.json`` with throughput (qps), per-request
-latency percentiles (p50/p99 ms), and IVF recall@k against exact search.
-The measurement is then compared metric-by-metric against the committed
-``benchmarks/BENCH_baseline.json``:
+Measures serving-shaped workloads on a 100k-doc clustered synthetic KB
+(the regime IVF exists for): per gated backend (int8 and 1-bit) an exact
+quantized search and an IVF search over the same storage, plus a
+mid-traffic live-update cycle.  Writes ``BENCH_<git-sha>.json`` with
+throughput (qps), per-request latency percentiles (p50/p99 ms), and IVF
+recall@10 against the backend's own exact ranking.  The measurement is
+then checked two ways:
 
-* throughput may not regress more than ``--tolerance`` (default 20%),
-* latency percentiles may not regress more than ``--tolerance``,
-* recall@k may not drop more than ``--recall-tolerance`` (absolute).
+* **absolute invariants** — IVF must beat exact search in qps on every
+  gated backend *while* holding ``recall@10 >= 0.80`` (the fused-IVF PR's
+  acceptance bar; machine-independent, no baseline needed),
+* **baseline comparison** against the committed
+  ``benchmarks/BENCH_baseline.json`` — throughput/latency may not regress
+  more than ``--tolerance`` (default 20%), recall not more than
+  ``--recall-tolerance`` (absolute).
 
 Any violation exits non-zero, which fails the CI job; the fresh JSON is
 uploaded as a workflow artifact either way, so the perf trajectory is
@@ -37,12 +42,23 @@ from repro.serve import MicroBatcher, ServeEngine
 HERE = os.path.dirname(os.path.abspath(__file__))
 DEFAULT_BASELINE = os.path.join(HERE, "BENCH_baseline.json")
 
+#: backends the gate measures: name → IndexSpec method (the 1-bit lane
+#: runs through the learned rotation, which is what buys its recall)
+GATE_BACKENDS = {"int8": "pca_int8", "onebit": "pca_rot_onebit"}
+
+#: absolute floor on IVF recall@10 vs the backend's own exact ranking —
+#: IVF must stay a *good* index, not merely a fast one
+RECALL_FLOOR = 0.80
+
 #: metric name → direction ("higher" is better, or "lower")
 METRICS = {
-    "exact_qps": "higher", "exact_p50_ms": "lower", "exact_p99_ms": "lower",
-    "ivf_qps": "higher", "ivf_p50_ms": "lower", "ivf_p99_ms": "lower",
+    "exact_qps_int8": "higher", "ivf_qps_int8": "higher",
+    "ivf_p50_ms_int8": "lower", "ivf_p99_ms_int8": "lower",
+    "ivf_recall_at_10_int8": "recall",
+    "exact_qps_onebit": "higher", "ivf_qps_onebit": "higher",
+    "ivf_p50_ms_onebit": "lower", "ivf_p99_ms_onebit": "lower",
+    "ivf_recall_at_10_onebit": "recall",
     "update_qps": "higher",
-    "ivf_recall_at_10": "recall",
 }
 
 
@@ -81,42 +97,58 @@ def serve_rounds(engine, queries, n_requests, batch, warmup: int = 3):
 
 
 def measure(n_docs: int, n_requests: int, batch: int, k: int,
-            repeats: int) -> dict:
+            repeats: int, nlist: int, nprobe: int) -> dict:
     """One full measurement pass; best-of-``repeats`` per metric to damp
-    scheduler noise."""
-    kb = make_dpr_like_kb(n_queries=max(256, 2 * batch), n_docs=n_docs)
+    scheduler noise.
+
+    The corpus is the *clustered* synthetic (topical low-rank structure,
+    like real DPR embeddings) at serving scale — coarse routing has
+    something to find, and the exact scan is expensive enough that IVF's
+    candidate pruning shows up as throughput, not noise.
+    """
+    kb = make_dpr_like_kb(n_queries=max(256, 2 * batch), n_docs=n_docs,
+                          d=256, r_eff=48)
     queries = np.asarray(kb.queries)
 
-    spec = IndexSpec(method="pca_int8", dim=128, backend="jnp", post=False)
-    exact = build_index(spec, kb.docs, kb.queries[:256])
-    ivf_spec = IndexSpec(method="pca_int8", dim=128, backend="jnp",
-                         post=False, ivf=(64, 8), kmeans_iters=6)
-    ivf = build_index(ivf_spec, kb.docs, kb.queries[:256])
+    out = {"update_qps": 0.0}
+    pairs = {}
+    for bname, method in GATE_BACKENDS.items():
+        exact = build_index(
+            IndexSpec(method=method, dim=128, backend="jnp", post=False),
+            kb.docs, kb.queries[:256])
+        ivf = build_index(
+            IndexSpec(method=method, dim=128, backend="jnp", post=False,
+                      ivf=(nlist, nprobe), kmeans_iters=8,
+                      kmeans_init="++", balanced_lists=True),
+            kb.docs, kb.queries[:256])
+        pairs[bname] = (exact, ivf)
+        # recall@k: IVF at the gate probe width vs the backend's own
+        # exact ranking (IVF loss isolated from compression loss)
+        _, want = exact.search(kb.queries[:128], 10)
+        _, got = ivf.search(kb.queries[:128], 10)
+        out[f"ivf_recall_at_10_{bname}"] = recall_at_k(
+            np.asarray(got), np.asarray(want))
+        out[f"exact_qps_{bname}"] = 0.0
+        out[f"ivf_qps_{bname}"] = 0.0
+        out[f"ivf_p50_ms_{bname}"] = np.inf
+        out[f"ivf_p99_ms_{bname}"] = np.inf
+
     mutable = build_index(
         IndexSpec(method="pca_int8", dim=128, backend="jnp", post=False,
                   mutable=True), kb.docs, kb.queries[:256])
 
-    # recall@k: IVF at the default probe width vs exact search
-    _, want = exact.search(kb.queries[:128], 10)
-    _, got = ivf.search(kb.queries[:128], 10)
-    recall = recall_at_k(np.asarray(got), np.asarray(want))
-
-    out = {"exact_qps": 0.0, "exact_p50_ms": np.inf, "exact_p99_ms": np.inf,
-           "ivf_qps": 0.0, "ivf_p50_ms": np.inf, "ivf_p99_ms": np.inf,
-           "update_qps": 0.0}
     extra = np.asarray(kb.docs[:256])
     for _ in range(repeats):
-        e = ServeEngine(exact, k=k, batcher=MicroBatcher(max_batch=64))
-        qps, p50, p99 = serve_rounds(e, queries, n_requests, batch)
-        out["exact_qps"] = max(out["exact_qps"], qps)
-        out["exact_p50_ms"] = min(out["exact_p50_ms"], p50)
-        out["exact_p99_ms"] = min(out["exact_p99_ms"], p99)
+        for bname, (exact, ivf) in pairs.items():
+            e = ServeEngine(exact, k=k, batcher=MicroBatcher(max_batch=64))
+            qps, _, _ = serve_rounds(e, queries, n_requests, batch)
+            out[f"exact_qps_{bname}"] = max(out[f"exact_qps_{bname}"], qps)
 
-        e = ServeEngine(ivf, k=k, batcher=MicroBatcher(max_batch=64))
-        qps, p50, p99 = serve_rounds(e, queries, n_requests, batch)
-        out["ivf_qps"] = max(out["ivf_qps"], qps)
-        out["ivf_p50_ms"] = min(out["ivf_p50_ms"], p50)
-        out["ivf_p99_ms"] = min(out["ivf_p99_ms"], p99)
+            e = ServeEngine(ivf, k=k, batcher=MicroBatcher(max_batch=64))
+            qps, p50, p99 = serve_rounds(e, queries, n_requests, batch)
+            out[f"ivf_qps_{bname}"] = max(out[f"ivf_qps_{bname}"], qps)
+            out[f"ivf_p50_ms_{bname}"] = min(out[f"ivf_p50_ms_{bname}"], p50)
+            out[f"ivf_p99_ms_{bname}"] = min(out[f"ivf_p99_ms_{bname}"], p99)
 
         # live-update cycle: search throughput with a live delta segment
         # and tombstones layered on.  compact() hands each repeat a fresh
@@ -130,8 +162,26 @@ def measure(n_docs: int, n_requests: int, batch: int, k: int,
         qps, _, _ = serve_rounds(e, queries, n_requests, batch)
         out["update_qps"] = max(out["update_qps"], qps)
 
-    out["ivf_recall_at_10"] = recall
     return out
+
+
+def invariants(measured: dict) -> list[str]:
+    """Machine-independent acceptance checks (no baseline involved):
+    IVF must dominate exact search — faster *and* recall@10 ≥ the floor —
+    on every gated backend."""
+    failures = []
+    for bname in GATE_BACKENDS:
+        rec = measured[f"ivf_recall_at_10_{bname}"]
+        if rec < RECALL_FLOOR:
+            failures.append(
+                f"ivf_recall_at_10_{bname}: {rec:.3f} < floor "
+                f"{RECALL_FLOOR} (absolute)")
+        iq, eq = measured[f"ivf_qps_{bname}"], measured[f"exact_qps_{bname}"]
+        if iq <= eq:
+            failures.append(
+                f"ivf_qps_{bname}: {iq:.1f} <= exact_qps_{bname} {eq:.1f} "
+                "(IVF must beat brute force)")
+    return failures
 
 
 def compare(measured: dict, baseline: dict, tolerance: float,
@@ -178,11 +228,13 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true",
                     help="accepted for lane uniformity (the gate is "
                     "always the quick configuration)")
-    ap.add_argument("--n-docs", type=int, default=6000)
+    ap.add_argument("--n-docs", type=int, default=100_000)
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--k", type=int, default=10)
-    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--nlist", type=int, default=512)
+    ap.add_argument("--nprobe", type=int, default=80)
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
     ap.add_argument("--output", default=None,
                     help="result JSON path (default BENCH_<git-sha>.json)")
@@ -205,14 +257,23 @@ def main(argv=None) -> int:
           f"({args.n_docs} docs, {args.requests} requests x {args.batch}, "
           f"best of {args.repeats}) ...")
     metrics = measure(args.n_docs, args.requests, args.batch, args.k,
-                      args.repeats)
+                      args.repeats, args.nlist, args.nprobe)
     for name in METRICS:
-        print(f"  {name:20s} {metrics[name]:10.2f}")
+        print(f"  {name:24s} {metrics[name]:10.2f}")
+
+    hard_failures = invariants(metrics)
+    if hard_failures:
+        print("\nACCEPTANCE INVARIANT VIOLATED:", file=sys.stderr)
+        for line in hard_failures:
+            print(f"  FAIL {line}", file=sys.stderr)
+        return 1
 
     if args.write_baseline:
         doc = {"sha": sha, "config": {"n_docs": args.n_docs,
                                       "requests": args.requests,
-                                      "batch": args.batch, "k": args.k},
+                                      "batch": args.batch, "k": args.k,
+                                      "nlist": args.nlist,
+                                      "nprobe": args.nprobe},
                "slack": args.slack,
                "metrics": with_slack(metrics, args.slack)}
         with open(args.baseline, "w") as f:

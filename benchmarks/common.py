@@ -3,6 +3,8 @@
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
 import time
 
 from repro.core import build_method
@@ -46,6 +48,20 @@ def evaluate_method(kb: KBData, method: str, dim: int = 128, *,
         out[f"rprec_{sim}"] = r_precision(queries, docs, kb.relevant,
                                           sim=sim)
     return out
+
+
+def git_sha() -> str:
+    """Short HEAD sha for per-commit artifact names ("nogit" off-repo)."""
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True,
+                             cwd=os.path.dirname(os.path.abspath(__file__)),
+                             timeout=10)
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except OSError:
+        pass
+    return "nogit"
 
 
 def print_csv(rows: list[dict], columns: list[str]) -> None:

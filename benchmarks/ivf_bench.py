@@ -26,15 +26,19 @@ toward ``nprobe/nlist``, which is worth seeing once.
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import base_parser, default_kb, print_csv
+from benchmarks.common import base_parser, default_kb, git_sha, print_csv
 from repro.core import CenterNorm, CompressionPipeline
 from repro.data import make_dpr_like_kb
 from repro.retrieval import CompressedIndex, backend_tail_stages, recall_at_k
+from repro.retrieval.ivf import PROBE_BLOCK, probe_and_score
+from repro.retrieval.topk import merge_topk_block, similarity
 
 SERVE_Q = 4          # rows per dispatched request block
 
@@ -51,6 +55,61 @@ def _bench_stream(search, queries, reps: int = 3) -> float:
         for b in blocks:
             jax.block_until_ready(search(b))
     return (time.perf_counter() - t0) / reps
+
+
+def _timeit(fn, reps: int = 5) -> float:
+    jax.block_until_ready(fn())                    # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps
+
+
+def stage_timings(ivf, queries, k: int, nprobe: int) -> dict:
+    """Decomposed IVF hot-path timings in ms: route / gather+score / top-k.
+
+    Stages are separated by nested jit graphs — ``route`` is coarse
+    similarity + probe selection, ``gather_score`` is the list gather plus
+    backend scoring *minus* the routing it re-runs, ``topk`` is the
+    sort-free streaming merge on the candidate scores, scanned in the
+    same ``PROBE_BLOCK``-list blocks as the search path.  The sum tracks
+    (not equals) the fused end-to-end search, which overlaps these phases.
+    """
+    qf = jnp.asarray(ivf.encode_queries(queries), jnp.float32)
+    params = ivf.scorer.params()
+    max_len = int(ivf.lists.shape[1])
+
+    f_route = jax.jit(lambda q: jax.lax.top_k(
+        similarity(q, ivf.centroids, ivf.sim), nprobe))
+    f_ps = jax.jit(lambda q: probe_and_score(
+        q, ivf.centroids, ivf.lists, ivf.storage, ivf.scorer, params,
+        ivf.sim, nprobe))
+
+    @jax.jit
+    def f_topk(s, c):
+        n_q, width = s.shape
+        g = min(PROBE_BLOCK, nprobe) * max_len
+        pad = -width % g
+        s_p = jnp.pad(s, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+        c_p = jnp.pad(c, ((0, 0), (0, pad)), constant_values=-1)
+        steps = (jnp.moveaxis(s_p.reshape(n_q, -1, g), 1, 0),
+                 jnp.moveaxis(c_p.reshape(n_q, -1, g), 1, 0))
+        init = (jnp.full((n_q, k), -jnp.inf, jnp.float32),
+                jnp.full((n_q, k), -1, jnp.int32))
+        out, _ = jax.lax.scan(
+            lambda run, blk: (merge_topk_block(*run, *blk, k), None),
+            init, steps)
+        return out
+
+    t_route = _timeit(lambda: f_route(qf))
+    t_ps = _timeit(lambda: f_ps(qf))
+    s, cand, valid = f_ps(qf)
+    cand = jnp.where(valid, cand, -1)
+    t_topk = _timeit(lambda: f_topk(s, cand))
+    return {"n_queries": int(qf.shape[0]), "nprobe": nprobe,
+            "route_ms": t_route * 1e3,
+            "gather_score_ms": max(t_ps - t_route, 0.0) * 1e3,
+            "topk_ms": t_topk * 1e3}
 
 
 def main(argv=None) -> list[dict]:
@@ -74,6 +133,7 @@ def main(argv=None) -> list[dict]:
                       max(1, nlist // 8), max(1, nlist // 4), nlist // 2})
 
     rows = []
+    stages: dict[str, dict] = {}
     for name, tail in backend_tail_stages().items():
         pipe = CompressionPipeline([CenterNorm()] + tail)
         idx = CompressedIndex.build(kb.docs, queries[:256], pipe)
@@ -99,6 +159,8 @@ def main(argv=None) -> list[dict]:
                          "us_per_query": t / queries.shape[0] * 1e6,
                          "qps": queries.shape[0] / t,
                          "speedup_vs_exact": t_exact / t})
+        stages[name] = stage_timings(ivf, queries[:64], args.k,
+                                     max(1, nlist // 8))
 
     for r in rows:
         tag = ("exact" if r["nprobe"] == 0
@@ -108,9 +170,28 @@ def main(argv=None) -> list[dict]:
               f"{r['qps']:9.0f} q/s  {r['speedup_vs_exact']:5.2f}x",
               flush=True)
     print()
+    for name, st in stages.items():
+        print(f"  stages[{name}] nprobe={st['nprobe']} "
+              f"({st['n_queries']} queries): route {st['route_ms']:.2f} ms  "
+              f"gather+score {st['gather_score_ms']:.2f} ms  "
+              f"top-k {st['topk_ms']:.2f} ms", flush=True)
+    print()
     print_csv(rows, ["backend", "bytes_per_doc", "nlist", "nprobe",
                      "recall_at_k", "us_per_query", "qps",
                      "speedup_vs_exact"])
+    # per-sha artifact: the recall/qps sweep plus the per-stage breakdown,
+    # uploadable next to ci_gate's BENCH_<sha>.json
+    artifact = f"BENCH_{git_sha()}_ivf.json"
+    with open(artifact, "w") as f:
+        json.dump({"sha": git_sha(),
+                   "config": {"dataset": args.dataset,
+                              "n_docs": int(args.n_docs),
+                              "n_queries": int(args.n_queries),
+                              "nlist": int(nlist), "k": int(args.k)},
+                   "rows": rows, "stages": stages},
+                  f, indent=2, sort_keys=True, default=float)
+        f.write("\n")
+    print(f"wrote {artifact}")
     return rows
 
 

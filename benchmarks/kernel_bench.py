@@ -21,8 +21,10 @@ from repro.core.preprocess import CenterNorm
 from repro.core.quantization import Int8Quantizer, pack_bits
 from repro.kernels.binary_ip import ops as bops
 from repro.kernels.int8_ip import ops as iops
+from repro.kernels.ivf_fused import ops as fivf
 from repro.retrieval.index import CompressedIndex
 from repro.retrieval.scorers import backend_tail_stages
+from repro.retrieval.topk import similarity
 
 
 def _bench(fn, reps=5):
@@ -89,9 +91,27 @@ def main(argv=None) -> list[dict]:
                      "bytes_per_doc": ivf.nbytes // n_docs,
                      "us_per_call": t * 1e6,
                      "gdocs_per_s": n_q_serve * n_docs / t / 1e9})
+        # fused IVF hot-path op (gather+score+top-k in one kernel) over the
+        # same probed lists.  On TPU this is the Pallas kernel; on CPU the
+        # jnp reference mirror is timed instead (interpret mode executes
+        # the kernel body in Python — correct, but not a perf number).
+        on_tpu = jax.default_backend() == "tpu"
+        lst_s, lst_i = ivf._list_major_layout()
+        qf = jnp.asarray(ivf.encode_queries(q_serve), jnp.float32)
+        probe = jax.lax.top_k(
+            similarity(qf, ivf.centroids, ivf.sim), nprobe)[1]
+        params = ivf.scorer.params()
+        t = _bench(lambda: fivf.fused_ivf_topk(
+            probe, qf, lst_s, lst_i, 10, ivf.scorer.name, params=params,
+            use_pallas=on_tpu))
+        impl = "pallas" if on_tpu else "ref"
+        rows.append({"kernel": f"fused_ivf[{idx.scorer.name},{impl}]",
+                     "bytes_per_doc": ivf.nbytes // n_docs,
+                     "us_per_call": t * 1e6,
+                     "gdocs_per_s": n_q_serve * n_docs / t / 1e9})
 
     for r in rows:
-        print(f"  {r['kernel']:18s} {r['bytes_per_doc']:5d} B/doc "
+        print(f"  {r['kernel']:26s} {r['bytes_per_doc']:5d} B/doc "
               f"{r['us_per_call']:12.0f} us "
               f"{r['gdocs_per_s']:.3f} Gdoc-score/s", flush=True)
     print()

@@ -20,6 +20,7 @@ from repro.core.quantization import (FloatCast, Int8Quantizer,
 from repro.core.random_projection import (DimensionDrop, GaussianProjection,
                                           GreedyDimensionDrop,
                                           SparseProjection)
+from repro.core.rotation import LearnedRotation
 from repro.core.registry import (METHODS, TRANSFORMS, build_method,
                                  build_pipeline_from_spec, build_transform,
                                  method_compression_ratio, pipeline_spec,
@@ -36,6 +37,7 @@ __all__ = [
     "pack_bits", "unpack_bits",
     "DimensionDrop", "GaussianProjection", "GreedyDimensionDrop",
     "SparseProjection",
+    "LearnedRotation",
     "METHODS", "build_method", "method_compression_ratio",
     "TRANSFORMS", "build_pipeline_from_spec", "build_transform",
     "pipeline_spec", "register_transform", "transform_spec",

@@ -22,6 +22,7 @@ from repro.core.quantization import (FloatCast, Int8Quantizer,
 from repro.core.random_projection import (DimensionDrop, GaussianProjection,
                                           GreedyDimensionDrop,
                                           SparseProjection)
+from repro.core.rotation import LearnedRotation
 
 import jax.numpy as jnp
 
@@ -33,7 +34,7 @@ METHODS = (
     "ae_linear", "ae_full", "ae_shallow",
     "ae_linear_l1", "ae_full_l1", "ae_shallow_l1",
     "fp16", "int8", "onebit", "onebit_offset0",
-    "pca_onebit", "pca_int8",
+    "pca_onebit", "pca_int8", "pca_rot_onebit",
     "distance_learning", "contrastive",
 )
 
@@ -74,6 +75,11 @@ def _core_stages(name: str, dim: int, *, greedy_scorer=None,
     if name == "pca_int8":
         # paper: PCA(128) + int8 = 24× compression
         return [PCA(dim), Int8Quantizer()]
+    if name == "pca_rot_onebit":
+        # same 100×-compression storage as pca_onebit, but an OPQ-style
+        # learned rotation re-aims the sign grid after PCA concentrates
+        # variance on few axes — free at search time (orthogonal)
+        return [PCA(dim), LearnedRotation(), OneBitQuantizer(offset=0.5)]
     if name == "distance_learning":
         return [SimilarityPreservingProjection(dim=dim)]
     if name == "contrastive":
@@ -129,7 +135,7 @@ for _cls in (Center, CenterNorm, Normalize, ZScore, PCA, FloatCast,
              Int8Quantizer, OneBitQuantizer, DimensionDrop,
              GreedyDimensionDrop, GaussianProjection, SparseProjection,
              Autoencoder, SimilarityPreservingProjection,
-             ContrastiveProjection):
+             ContrastiveProjection, LearnedRotation):
     register_transform(_cls)
 
 

@@ -13,4 +13,8 @@ BlockSpec), ``ops.py`` (jit'd public wrapper with jnp fallback) and ``ref.py``
 - ``topk_blocks``    : streaming two-stage top-k (per-block partial top-k in
                        VMEM; global merge outside) — avoids materialising the
                        (Q, D) score matrix in HBM.
+- ``ivf_fused``      : the IVF hot path (probe → gather → score → top-k) as
+                       one kernel — scalar-prefetched probe table drives
+                       data-dependent list DMA, per-backend in-VMEM scoring,
+                       and a streaming (score desc, id asc) top-k merge.
 """

@@ -1,0 +1,51 @@
+"""Pure-jnp reference for the fused IVF kernel — bitwise oracle.
+
+Runs the *same* per-block score math (``kernel.score_block``) and the same
+list-by-list streaming merge, but expressed as a ``lax.scan`` over probe
+slots with the shared :func:`~repro.retrieval.topk.masked_topk_by_id`
+merge.  Because (score desc, id asc) is a strict total order the two merge
+formulations are equivalent, so the parity tests can demand exact id *and*
+value equality against the interpret-mode kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ivf_fused.kernel import score_block
+from repro.retrieval.topk import masked_topk_by_id
+
+
+@functools.partial(jax.jit, static_argnames=("k", "backend"))
+def fused_ivf_topk_ref(probes: jax.Array, qe: jax.Array,
+                       list_storage: jax.Array, list_ids: jax.Array,
+                       base: jax.Array, k: int, backend: str
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Same contract as ``kernel.fused_ivf_topk_pallas`` (Q, k) outputs."""
+    n_q = probes.shape[0]
+
+    def step(carry, inp):
+        pj, bj = inp                              # (Q,) list ids, corrections
+        ids_j = list_ids[pj]                      # (Q, L)
+        blocks = list_storage[pj]                 # (Q, L, w)
+        # lax.map, not vmap: each (query, block) pair hits dot_general with
+        # the kernel's exact (1, d) × (L, d) shape, so the f32/bf16
+        # accumulation order — and hence every score bit — matches the
+        # interpret-mode kernel (vmap would batch the GEMM and reassociate)
+        s = jax.lax.map(
+            lambda qb: score_block(qb[0][None, :], qb[1], backend)[0],
+            (qe, blocks))
+        s = s + bj[:, None]
+        s = jnp.where(ids_j >= 0, s, -jnp.inf)
+        rv, ri = carry
+        cv = jnp.concatenate([rv, s], axis=1)
+        ci = jnp.concatenate([ri, jnp.where(ids_j >= 0, ids_j, -1)], axis=1)
+        return masked_topk_by_id(cv, ci, k), None
+
+    init = (jnp.full((n_q, k), -jnp.inf, jnp.float32),
+            jnp.full((n_q, k), -1, jnp.int32))
+    (vals, ids), _ = jax.lax.scan(step, init, (probes.T, base.T))
+    return vals, ids

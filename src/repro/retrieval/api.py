@@ -156,6 +156,9 @@ class IndexSpec:
     shard: Optional[ShardSpec] = None
     kmeans_iters: int = 15
     mutable: bool = False
+    ivf_residual: bool = False
+    kmeans_init: str = "random"
+    balanced_lists: bool = False
 
     def __post_init__(self):
         if (self.method is None) == (self.stages is None):
@@ -183,6 +186,17 @@ class IndexSpec:
             raise ValueError(f"unknown sim {self.sim!r}")
         if self.backend not in ("auto", "jnp", "pallas"):
             raise ValueError(f"unknown backend {self.backend!r}")
+        if self.kmeans_init not in ("random", "++"):
+            raise ValueError(f"unknown kmeans_init {self.kmeans_init!r}")
+        if self.ivf_residual:
+            if self.ivf is None:
+                raise ValueError("ivf_residual=True needs ivf=(nlist, "
+                                 "nprobe)")
+            if self.shard is not None or self.mutable:
+                raise ValueError("ivf_residual=True is single-host / "
+                                 "immutable only (the residual re-encode "
+                                 "is incompatible with shared-storage "
+                                 "promotion and delta layers)")
 
     # -- pipeline ----------------------------------------------------------
     def build_pipeline(self) -> Optional[CompressionPipeline]:
@@ -298,7 +312,10 @@ def build_index(spec: IndexSpec, docs: jax.Array,
         idx = IVFIndex.build(docs, queries_sample, pipeline, nlist=nlist,
                              nprobe=nprobe, sim=spec.sim,
                              backend=spec.backend,
-                             kmeans_iters=spec.kmeans_iters, rng=rng)
+                             kmeans_iters=spec.kmeans_iters,
+                             residual=spec.ivf_residual,
+                             kmeans_init=spec.kmeans_init,
+                             balanced=spec.balanced_lists, rng=rng)
     elif pipeline is None:
         idx = DenseIndex(docs, sim=spec.sim)
     else:
@@ -430,6 +447,9 @@ def _collect_index(index, arrays: dict, meta: dict) -> None:
             "nlist": int(ivf_sd["nlist"]),
             "nlist_requested": int(ivf_sd["nlist_requested"]),
             "nprobe": int(ivf_sd["nprobe"]),
+            "residual": bool(ivf_sd.get("residual", False)),
+            "kmeans_init": str(ivf_sd.get("kmeans_init", "random")),
+            "balanced": bool(ivf_sd.get("balanced", False)),
             "kmeans_iters": int(ivf.kmeans_iters),
         }
         if isinstance(index, ShardedIVFIndex):
@@ -463,7 +483,10 @@ def _rebuild_ivf(meta: dict, data, pipeline: CompressionPipeline,
         ivf = IVFIndex(pipeline, nlist=m["nlist_requested"],
                        nprobe=m["nprobe"], sim=m["sim"],
                        backend=backend or m["backend"],
-                       kmeans_iters=m["kmeans_iters"])
+                       kmeans_iters=m["kmeans_iters"],
+                       residual=bool(m.get("residual", False)),
+                       kmeans_init=str(m.get("kmeans_init", "random")),
+                       balanced=bool(m.get("balanced", False)))
     ivf.load_state_dict({
         "pipeline": _gather_pipeline_sd(data, [n for n, _ in meta["stages"]],
                                         meta["stage_fitted"]),
@@ -474,6 +497,9 @@ def _rebuild_ivf(meta: dict, data, pipeline: CompressionPipeline,
         "scorer_extra": m.get("scorer_extra", {}),
         "nlist": m["nlist"], "nlist_requested": m["nlist_requested"],
         "nprobe": m["nprobe"], "n_docs": m["n_docs"], "dim": m["dim"],
+        "residual": bool(m.get("residual", False)),
+        "kmeans_init": str(m.get("kmeans_init", "random")),
+        "balanced": bool(m.get("balanced", False)),
         "version": m.get("version", 0)})
     return ivf
 

@@ -214,6 +214,12 @@ class SegmentedIndex:
                 "then shard the artifact)")
         if len(main) == 0:
             raise ValueError("main index is empty — build it first")
+        if getattr(main, "residual", False):
+            raise TypeError(
+                "SegmentedIndex cannot wrap a residual-encoded IVF main: "
+                "delta rows are encoded without the routed-centroid "
+                "subtraction, so cross-layer scores would not be "
+                "comparable — build the main with residual=False")
         self.main = main
         self.spec = getattr(main, "spec", None) if spec is None else spec
         self.sim = main.sim
@@ -512,12 +518,14 @@ class SegmentedIndex:
             if isinstance(main, IVFFlatIndex):
                 new_main = IVFFlatIndex(
                     nlist=main._nlist_requested, nprobe=main.nprobe,
-                    sim=main.sim, kmeans_iters=main.kmeans_iters)
+                    sim=main.sim, kmeans_iters=main.kmeans_iters,
+                    kmeans_init=main.kmeans_init, balanced=main.balanced)
             else:
                 new_main = IVFIndex(
                     main.pipeline, nlist=main._nlist_requested,
                     nprobe=main.nprobe, sim=main.sim, backend=main.backend,
-                    kmeans_iters=main.kmeans_iters)
+                    kmeans_iters=main.kmeans_iters,
+                    kmeans_init=main.kmeans_init, balanced=main.balanced)
             new_main.float_stages = self.float_stages
             new_main.scorer.load_extra_state(self.scorer.extra_state())
             x_route = new_main.scorer.decode(storage)

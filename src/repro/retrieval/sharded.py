@@ -381,6 +381,11 @@ class ShardedIVFIndex:
                  query_axis: Optional[AxisName] = None):
         if ivf.storage is None:
             raise ValueError("IVFIndex must be fitted before sharding")
+        if getattr(ivf, "residual", False):
+            raise ValueError(
+                "ShardedIVFIndex cannot wrap a residual-encoded IVFIndex: "
+                "the shard-local probe_and_score path has no routed "
+                "q\u00b7centroid correction — build with residual=False")
         self.ivf = ivf
         self.mesh = mesh
         self.doc_axes = _as_tuple(doc_axis)

@@ -29,6 +29,22 @@ def resolve_k(k: int, n_docs: int) -> int:
     return min(int(k), int(n_docs))
 
 
+def resolve_nprobe(nprobe, nlist: int, default=None) -> int:
+    """The one ``nprobe`` contract, mirroring :func:`resolve_k`.
+
+    ``None`` falls back to ``default``; the result must be ≥ 1 and clamps
+    to ``nlist`` (probing every list is simply exact search over the
+    clustered corpus).  :class:`~repro.retrieval.ivf.IVFIndex`, the sharded
+    IVF wrapper, and :class:`~repro.retrieval.segments.SegmentedIndex` all
+    route through this guard so the clamping behaviour cannot drift.
+    """
+    if nprobe is None:
+        nprobe = default
+    if nprobe is None or nprobe < 1:
+        raise ValueError(f"nprobe must be ≥ 1, got {nprobe}")
+    return min(int(nprobe), int(nlist))
+
+
 def topk_score_then_id(s: jax.Array, ids: jax.Array, k: int
                        ) -> tuple[jax.Array, jax.Array]:
     """Top-k by (score desc, doc id asc) — a strict total order.
@@ -66,6 +82,70 @@ def masked_topk_by_id(s: jax.Array, ids: jax.Array, k: int
         vals = jnp.pad(vals, ((0, 0), (0, pad)), constant_values=-jnp.inf)
         out = jnp.pad(out, ((0, 0), (0, pad)), constant_values=-1)
     return vals, out
+
+
+def merge_topk_block(run_v: jax.Array, run_i: jax.Array, cand_v: jax.Array,
+                     cand_i: jax.Array, k: int
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Merge a scored block into a (Q, k) running top-k — no sort.
+
+    Same (score desc, id asc) strict total order as
+    :func:`masked_topk_by_id`, computed as ``k`` rounds of max score →
+    min doc id among the hits → retire the winner, instead of a variadic
+    lexsort (XLA lowers that sort to a scalar comparator loop on CPU —
+    ~1000× the cost of these k vectorised passes, and it has no TPU
+    lowering at all; this formulation is what the fused Pallas kernel
+    runs in VMEM).  Pad entries are (−inf, −1) throughout, matching
+    ``masked_topk_by_id``'s normalisation.
+
+    Requires distinct (score, id) pairs among *reachable* candidates
+    (every −inf entry is normalised to id −1, so pads are exempt): a
+    round retires every entry matching the winning pair at once.  IVF
+    candidate streams satisfy this — each doc id appears in exactly one
+    probed list and the running buffer holds previously-merged distinct
+    ids.
+    """
+    cv = jnp.concatenate([run_v, cand_v], axis=1)
+    ci = jnp.concatenate([run_i, cand_i], axis=1)
+    kw = run_v.shape[1]
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, kw), 1)
+    new_v = jnp.full((1, kw), float("-inf"), jnp.float32)
+    new_i = jnp.full((1, kw), -1, jnp.int32)
+    int_max = 2**31 - 1
+    for t in range(k):
+        m = jnp.max(cv, axis=1)                              # (Q,)
+        hit = cv == m[:, None]
+        sel = jnp.min(jnp.where(hit, ci, int_max), axis=1)   # min id among max
+        new_v = jnp.where(col == t, m[:, None], new_v)
+        new_i = jnp.where(col == t, sel[:, None], new_i)
+        cv = jnp.where(hit & (ci == sel[:, None]), float("-inf"), cv)
+    # unreachable rounds picked a (−inf, ·) entry: normalise the id to −1
+    new_i = jnp.where(new_v == float("-inf"), -1, new_i)
+    return new_v, new_i
+
+
+def streaming_masked_topk(s: jax.Array, ids: jax.Array, k: int,
+                          block: int) -> tuple[jax.Array, jax.Array]:
+    """Blockwise-streamed :func:`masked_topk_by_id`.
+
+    Scans the candidate axis in ``block``-wide slices, keeping a running
+    (k,) partial top-k per query and merging each new block into it.
+    Because (score desc, id asc) is a *strict total order*, the blockwise
+    merge is associative and exact: the result is bit-identical to the
+    monolithic ``masked_topk_by_id(s, ids, k)`` for **any** block size
+    (property-tested in tests/test_ivf_fused.py).  This is the schedule the
+    fused Pallas IVF kernel uses on TPU, expressed in jnp for the
+    host/reference path.
+    """
+    n = s.shape[1]
+    if block < 1:
+        raise ValueError(f"block must be ≥ 1, got {block}")
+    run_v, run_i = masked_topk_by_id(s[:, :block], ids[:, :block], k)
+    for ds in range(block, n, block):
+        cv = jnp.concatenate([run_v, s[:, ds: ds + block]], axis=1)
+        ci = jnp.concatenate([run_i, ids[:, ds: ds + block]], axis=1)
+        run_v, run_i = masked_topk_by_id(cv, ci, k)
+    return run_v, run_i
 
 
 def similarity(queries: jax.Array, docs: jax.Array, sim: str) -> jax.Array:

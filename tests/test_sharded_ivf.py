@@ -67,6 +67,34 @@ def test_sharded_ivf_matches_single_host(parity_output, backend):
     assert f"BACKEND {backend} ids=True vals=True" in parity_output
 
 
+def test_nprobe_guards_single_and_sharded():
+    """nprobe resolution mirrors resolve_k: ``None`` → configured default,
+    over-wide requests clamp to nlist, and nprobe < 1 is a loud error on
+    both the single-host index and the sharded wrapper."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.launch.mesh import make_test_mesh
+    from repro.retrieval import IVFIndex, ShardedIVFIndex
+
+    rng = np.random.default_rng(5)
+    docs = jnp.asarray(rng.standard_normal((96, 16)), jnp.float32)
+    queries = docs[:4]
+    ivf = IVFIndex(nlist=6, nprobe=3, kmeans_iters=3).fit(docs)
+    assert ivf._resolve_nprobe(None) == 3
+    assert ivf._resolve_nprobe(999) == 6       # clamped to nlist
+    # over-wide nprobe behaves exactly like full probe
+    v_full, i_full = ivf.search(queries, 5, nprobe=6)
+    v_wide, i_wide = ivf.search(queries, 5, nprobe=999)
+    np.testing.assert_array_equal(np.asarray(i_full), np.asarray(i_wide))
+    for bad in (0, -2):
+        with pytest.raises(ValueError, match="nprobe must be ≥ 1"):
+            ivf.search(queries, 5, nprobe=bad)
+    sharded = ShardedIVFIndex(ivf, make_test_mesh(1, model=1))
+    with pytest.raises(ValueError, match="nprobe must be ≥ 1"):
+        sharded.search(queries, 5, nprobe=0)
+
+
 def test_mutating_wrapped_ivf_is_rejected():
     """The list partition is frozen at construction: growing the wrapped
     IVFIndex afterwards must fail loudly, not silently drop the new docs."""
