@@ -35,9 +35,12 @@ import time
 
 import numpy as np
 
+import threading
+
 from repro.data import make_dpr_like_kb
 from repro.retrieval import IndexSpec, build_index, recall_at_k
-from repro.serve import MicroBatcher, ServeEngine
+from repro.serve import AdaptiveBatcher, MicroBatcher, QueryOptions, \
+    RetrievalService, ServeEngine
 
 HERE = os.path.dirname(os.path.abspath(__file__))
 DEFAULT_BASELINE = os.path.join(HERE, "BENCH_baseline.json")
@@ -50,6 +53,12 @@ GATE_BACKENDS = {"int8": "pca_int8", "onebit": "pca_rot_onebit"}
 #: IVF must stay a *good* index, not merely a fast one
 RECALL_FLOOR = 0.80
 
+#: the serving SLO row, machine-independent by construction: the threaded
+#: front door (admission control + micro-batching + async handles) must
+#: sustain at least this fraction of the bare exact engine's qps on the
+#: same index, same machine — a ratio, so runner speed cancels out
+SERVICE_RATIO_FLOOR = 0.40
+
 #: metric name → direction ("higher" is better, or "lower")
 METRICS = {
     "exact_qps_int8": "higher", "ivf_qps_int8": "higher",
@@ -59,6 +68,9 @@ METRICS = {
     "ivf_p50_ms_onebit": "lower", "ivf_p99_ms_onebit": "lower",
     "ivf_recall_at_10_onebit": "recall",
     "update_qps": "higher",
+    "service_qps": "higher",
+    "service_exact_ratio": "higher",
+    "service_p99_ms": "lower",
 }
 
 
@@ -94,6 +106,58 @@ def serve_rounds(engine, queries, n_requests, batch, warmup: int = 3):
     ms = np.asarray(lat) * 1000.0
     return (n_rows / wall, float(np.percentile(ms, 50)),
             float(np.percentile(ms, 99)))
+
+
+def serve_service(index, queries, n_requests, batch, k,
+                  n_threads: int = 4):
+    """Stream the same request load through the RetrievalService front
+    door (threaded producers, background dispatcher, admission control).
+    Returns (qps, request_p99_ms, lost, cache_identical).
+
+    Throughput runs with the result cache OFF so every row really hits
+    the engine; cache bit-identity is then checked separately on a
+    cache-enabled service over the same index.
+    """
+    svc = RetrievalService(default_k=k,
+                           batcher=AdaptiveBatcher(min_batch=8,
+                                                   max_batch=64))
+    svc.register("kb", index)
+    for _ in range(3):                         # compile outside the window
+        svc.query(queries[:batch], index="kb").result(timeout=300)
+    per_thread = max(1, n_requests // n_threads)
+
+    def producer(t):
+        for r in range(per_thread):
+            off = ((t * per_thread + r) * batch) % (len(queries) - batch)
+            svc.query(queries[off: off + batch],
+                      QueryOptions(index="kb")).result(timeout=300)
+
+    threads = [threading.Thread(target=producer, args=(t,))
+               for t in range(n_threads)]
+    t0 = time.perf_counter()
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    wall = time.perf_counter() - t0
+    stats = svc.stats()
+    svc.close()
+    lost = (stats["requests_submitted"] - stats["requests_served"]
+            + stats["queue_depth"])
+    qps = per_thread * n_threads * batch / wall
+
+    cached = RetrievalService(default_k=k, cache_rows=4096,
+                              batcher=AdaptiveBatcher(min_batch=8,
+                                                      max_batch=64))
+    cached.register("kb", index)
+    probe = queries[:batch] + 0.125            # never seen above: a miss
+    first = cached.query(probe, index="kb").result(timeout=300)
+    again = cached.query(probe, index="kb")
+    identical = (again.done()                  # hit resolves at submit
+                 and np.array_equal(first.scores, again.result().scores)
+                 and np.array_equal(first.ids, again.result().ids))
+    cached.close()
+    return qps, stats["request_p99_ms"], lost, identical
 
 
 def measure(n_docs: int, n_requests: int, batch: int, k: int,
@@ -162,6 +226,23 @@ def measure(n_docs: int, n_requests: int, batch: int, k: int,
         qps, _, _ = serve_rounds(e, queries, n_requests, batch)
         out["update_qps"] = max(out["update_qps"], qps)
 
+    # the SLO row: the threaded front door over the int8 exact index,
+    # measured against that index's bare-engine qps from the loop above
+    out["service_qps"] = 0.0
+    out["service_p99_ms"] = np.inf
+    out["service_lost_requests"] = 0.0
+    out["service_cache_identical"] = 1.0
+    for _ in range(repeats):
+        qps, p99, lost, identical = serve_service(
+            pairs["int8"][0], queries, n_requests, batch, k)
+        out["service_qps"] = max(out["service_qps"], qps)
+        out["service_p99_ms"] = min(out["service_p99_ms"], p99)
+        out["service_lost_requests"] += float(lost)
+        out["service_cache_identical"] = min(
+            out["service_cache_identical"], 1.0 if identical else 0.0)
+    out["service_exact_ratio"] = out["service_qps"] / \
+        max(out["exact_qps_int8"], 1e-9)
+
     return out
 
 
@@ -181,6 +262,21 @@ def invariants(measured: dict) -> list[str]:
             failures.append(
                 f"ivf_qps_{bname}: {iq:.1f} <= exact_qps_{bname} {eq:.1f} "
                 "(IVF must beat brute force)")
+    ratio = measured["service_exact_ratio"]
+    if ratio < SERVICE_RATIO_FLOOR:
+        failures.append(
+            f"service_exact_ratio: {ratio:.2f} < floor "
+            f"{SERVICE_RATIO_FLOOR} (the front door may not cost more "
+            "than this much of the bare engine's throughput)")
+    if measured["service_lost_requests"]:
+        failures.append(
+            f"service_lost_requests: "
+            f"{measured['service_lost_requests']:.0f} != 0 (every "
+            "admitted request must resolve)")
+    if measured["service_cache_identical"] != 1.0:
+        failures.append(
+            "service_cache_identical: cached result differed from the "
+            "dispatch it replaced (must be bit-identical)")
     return failures
 
 

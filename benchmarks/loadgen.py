@@ -1,0 +1,512 @@
+"""Open-loop load generation: drive the RetrievalService to saturation.
+
+    PYTHONPATH=src:. python benchmarks/loadgen.py            # fixed-rate trial
+    PYTHONPATH=src:. python benchmarks/loadgen.py --sweep    # find qps @ SLO
+    PYTHONPATH=src:. python benchmarks/loadgen.py --quick    # CI smoke
+
+A closed-loop driver (submit, wait, submit …) can never see a queue: its
+offered rate collapses to whatever the service sustains, and the latency
+it reports silently omits every request the service *would* have delayed
+— the classic coordinated-omission trap.  This generator is **open
+loop**: an arrival schedule is drawn up front (Poisson, or an on/off
+bursty process with the same mean rate), the submitter fires each request
+at its scheduled instant whether or not earlier ones came back, and a
+request's latency runs from its *scheduled* arrival to the moment its
+last micro-batch completes (``ServeResult.latency_s`` plus any submitter
+lag).  Queueing delay under overload is therefore measured, not hidden.
+
+Realism knobs, all exercised by the default run:
+
+* **Zipf-skewed popularity** — every query row is drawn from a fixed pool
+  with P(rank r) ∝ r^-alpha, so a hot head repeats (what a result cache
+  sees in production) while a long tail stays cold.
+* **Mixed request menu** — weighted (rows, k, nprobe, lane) combinations:
+  1-row interactive lookups next to multi-row bulk blocks, fast/full
+  probe widths, distinct rate-limit lanes.
+* **Interleaved update/delete traffic** — a mutator thread applies
+  ``service.update(add=…, delete=…)`` against the live mutable index at a
+  fixed cadence while queries fly, and the collector verifies that no
+  query submitted after a delete returned ever surfaces the deleted id.
+
+Verification is part of every trial: zero lost requests (every admitted
+handle resolves; ``requests_submitted == requests_served`` and an empty
+queue at quiesce), and — when the cache is on — a cached block is
+bit-identical to the dispatch it skipped.
+
+``--sweep`` ramps the offered rate geometrically until the p99 SLO
+breaks, then bisects to the saturation point, reporting the largest
+offered rate (rows/s) the service sustains within the SLO.
+"""
+
+import argparse
+import dataclasses
+import sys
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.data import make_dpr_like_kb
+from repro.retrieval import IndexSpec, build_index
+from repro.serve import AdaptiveBatcher, QueryOptions, RateLimited, \
+    RetrievalService
+from repro.serve.service import QueueFull
+
+
+@dataclasses.dataclass(frozen=True)
+class MenuItem:
+    """One request shape: how many rows, search width, rate-limit lane."""
+
+    weight: float
+    rows: int
+    k: int
+    nprobe: Optional[int]
+    lane: str
+
+
+DEFAULT_MENU = (
+    MenuItem(0.55, 1, 10, 4, "interactive"),    # hot path: 1-row, fast probe
+    MenuItem(0.25, 4, 10, 8, "interactive"),    # small block, default probe
+    MenuItem(0.15, 16, 20, 8, "bulk"),          # bulk scoring block
+    MenuItem(0.05, 32, 20, 16, "bulk"),         # recall-heavy bulk block
+)
+
+
+@dataclasses.dataclass
+class Workload:
+    """A fully pre-drawn trial: no randomness left on the hot path."""
+
+    arrivals: np.ndarray          # (n,) seconds from trial start, sorted
+    menu_ids: np.ndarray          # (n,) index into menu
+    row_ids: list                 # per request: pool indices, len = rows
+    offered_rows_per_s: float
+
+
+def zipf_weights(n: int, alpha: float) -> np.ndarray:
+    w = 1.0 / np.arange(1, n + 1, dtype=np.float64) ** alpha
+    return w / w.sum()
+
+
+def build_workload(rng, *, duration_s: float, rows_per_s: float,
+                   arrival: str, menu, pool_size: int,
+                   zipf_alpha: float, burst_period_s: float = 0.25,
+                   burst_duty: float = 0.25) -> Workload:
+    """Draw the arrival schedule + per-request shapes for one trial.
+
+    ``rows_per_s`` is the offered rate in query *rows*; the request rate
+    follows from the menu's mean rows/request.  ``arrival="poisson"``
+    gives exponential inter-arrivals; ``"bursty"`` keeps the same mean
+    rate but concentrates arrivals in the first ``burst_duty`` fraction
+    of every ``burst_period_s`` window — same load, far meaner queues.
+    """
+    weights = np.asarray([m.weight for m in menu], np.float64)
+    weights = weights / weights.sum()
+    mean_rows = float(sum(w * m.rows for w, m in zip(weights, menu)))
+    req_rate = rows_per_s / mean_rows
+    n = max(1, int(round(req_rate * duration_s)))
+
+    if arrival == "poisson":
+        gaps = rng.exponential(1.0 / req_rate, size=n)
+        arrivals = np.cumsum(gaps)
+    elif arrival == "bursty":
+        # on/off modulated Poisson: arrivals land only inside the duty
+        # window of each period, at rate/duty, so the mean matches
+        on_rate = req_rate / burst_duty
+        t, out = 0.0, []
+        while len(out) < n:
+            window_start = (t // burst_period_s) * burst_period_s
+            window_end = window_start + burst_duty * burst_period_s
+            if t < window_start:            # (never: t advances forward)
+                t = window_start
+            if t >= window_end:             # past this window's duty: hop
+                t = window_start + burst_period_s
+                continue
+            t += rng.exponential(1.0 / on_rate)
+            if t < window_end:
+                out.append(t)
+        arrivals = np.asarray(out[:n])
+    else:
+        raise ValueError(f"unknown arrival process {arrival!r} "
+                         "(poisson | bursty)")
+
+    menu_ids = rng.choice(len(menu), size=n, p=weights)
+    pool_p = zipf_weights(pool_size, zipf_alpha)
+    row_ids = [rng.choice(pool_size, size=menu[m].rows, p=pool_p)
+               for m in menu_ids]
+    return Workload(arrivals=arrivals, menu_ids=menu_ids, row_ids=row_ids,
+                    offered_rows_per_s=rows_per_s)
+
+
+class Mutator(threading.Thread):
+    """Interleaved update/delete traffic against the live mutable index.
+
+    Every ``interval_s``: add a small doc block, and delete a couple of
+    ids from a block added earlier.  Keeps a timestamped delete log so
+    the collector can assert no query submitted after a delete returned
+    ever sees the deleted id.
+    """
+
+    def __init__(self, service, name: str, fresh_docs: np.ndarray,
+                 interval_s: float, rng, block: int = 4):
+        super().__init__(name="loadgen-mutator", daemon=True)
+        self.service = service
+        self.index_name = name
+        self.fresh = fresh_docs
+        self.interval_s = interval_s
+        self.block = block
+        self.rng = rng
+        self.deleted_log: list = []     # [(wall time, gid)], append-only
+        self.updates = 0
+        self.added = 0
+        self.deleted = 0
+        self._deletable: list = []
+        self._halt = threading.Event()   # NB: Thread itself owns `_stop`
+
+    def stop(self) -> None:
+        self._halt.set()
+
+    def run(self) -> None:
+        off = 0
+        while not self._halt.wait(self.interval_s):
+            add = None
+            if off + self.block <= len(self.fresh):
+                add = self.fresh[off: off + self.block]
+                off += self.block
+            delete = None
+            if len(self._deletable) >= 2:
+                picks = self.rng.choice(len(self._deletable), size=2,
+                                        replace=False)
+                delete = [self._deletable[i] for i in sorted(picks)]
+                for gid in delete:
+                    self._deletable.remove(gid)
+            if add is None and delete is None:
+                return                   # fresh docs exhausted, nothing left
+            report = self.service.update(self.index_name, add=add,
+                                         delete=delete)
+            now = time.perf_counter()
+            self.updates += 1
+            self.added += report["added"]
+            self.deleted += report["deleted"]
+            if delete:
+                self.deleted_log.extend((now, gid) for gid in delete)
+            if report["gid_range"] is not None:
+                self._deletable.extend(range(*report["gid_range"]))
+
+
+def warmup(service, name: str, pool: np.ndarray, menu,
+           max_batch: int, timeout_s: float) -> None:
+    """Compile the search graphs the trial will hit before the clock
+    starts: one small and one full-width block per menu shape.  A cold
+    server pays these once at startup, not per request — measuring them
+    inside the trial would charge steady-state latency for a one-time
+    cost."""
+    sizes, rows = set(), 1
+    while rows <= max_batch:            # every pow2 bucket the batcher forms
+        sizes.add(rows)
+        rows *= 2
+    for item in menu:
+        for rows in sorted(sizes):
+            q = pool[np.arange(rows) % len(pool)]
+            service.query(q, QueryOptions(index=name, k=item.k,
+                                          nprobe=item.nprobe,
+                                          lane=item.lane)) \
+                .result(timeout=timeout_s)
+
+
+def run_trial(service, name: str, pool: np.ndarray, menu,
+              workload: Workload, *, timeout_s: float = 120.0,
+              mutator: Optional[Mutator] = None) -> dict:
+    """Fire one open-loop trial; returns the measured report dict."""
+    records = []          # (handle, scheduled_s, submitted_s)
+    shed_limit = shed_queue = 0
+    base = service.stats()      # don't bill warmup traffic to the trial
+    t0 = time.perf_counter()
+    if mutator is not None:
+        mutator.start()
+    for i in range(len(workload.arrivals)):
+        sched = workload.arrivals[i]
+        lag = sched - (time.perf_counter() - t0)
+        if lag > 0:
+            time.sleep(lag)
+        item = menu[workload.menu_ids[i]]
+        q = pool[workload.row_ids[i]]
+        submitted = time.perf_counter() - t0
+        try:
+            h = service.query(q, QueryOptions(index=name, k=item.k,
+                                              nprobe=item.nprobe,
+                                              lane=item.lane))
+        except RateLimited:
+            shed_limit += 1
+            continue
+        except QueueFull:
+            shed_queue += 1
+            continue
+        records.append((h, sched, submitted))
+    if mutator is not None:
+        mutator.stop()
+        mutator.join(timeout=10.0)
+
+    # collect: latency runs from the *scheduled* arrival (anti-coordinated-
+    # omission) to the request's last micro-batch completing
+    lat, lost, deleted_seen = [], 0, 0
+    log = tuple(mutator.deleted_log) if mutator is not None else ()
+    for h, sched, submitted in records:
+        try:
+            res = h.result(timeout=timeout_s)
+        except Exception:
+            lost += 1
+            continue
+        lat.append((submitted - sched) + res.latency_s)
+        if log:
+            forbidden = {gid for (t, gid) in log if t <= t0 + submitted}
+            if forbidden and np.isin(res.ids, sorted(forbidden)).any():
+                deleted_seen += 1
+    wall = time.perf_counter() - t0
+
+    stats = service.stats()
+    ms = np.asarray(lat) * 1000.0 if lat else np.asarray([np.nan])
+    return {
+        "offered_rows_per_s": workload.offered_rows_per_s,
+        "wall_s": wall,
+        "arrivals": len(workload.arrivals),
+        "admitted": len(records),
+        "shed_rate_limited": shed_limit,
+        "shed_queue_full": shed_queue,
+        "lost": lost,
+        "deleted_ids_resurfaced": deleted_seen,
+        # completed rows/s: engine-dispatched rows plus rows answered
+        # straight from the result cache — both count as served traffic
+        "served_rows_per_s":
+            ((stats["queries_served"] - base["queries_served"])
+             + (stats["cache"]["hits"] - base["cache"]["hits"]
+                if "cache" in stats else 0)) / wall,
+        "cache_hits": stats["cache_hits"] - base["cache_hits"],
+        "queue_high_water": stats["queue_high_water"],
+        "p50_ms": float(np.percentile(ms, 50)),
+        "p95_ms": float(np.percentile(ms, 95)),
+        "p99_ms": float(np.percentile(ms, 99)),
+        "mean_ms": float(np.mean(ms)),
+        "conserved": (stats["requests_submitted"] == stats["requests_served"]
+                      and stats["queue_depth"] == 0),
+        "updates": 0 if mutator is None else mutator.updates,
+        "docs_added": 0 if mutator is None else mutator.added,
+        "docs_deleted": 0 if mutator is None else mutator.deleted,
+    }
+
+
+def verify_cache_identity(service, name: str, pool: np.ndarray,
+                          menu) -> int:
+    """Submit head-of-pool blocks twice: the repeat must be a cache hit
+    and bit-identical to the dispatched original.  Returns rows checked;
+    raises on any mismatch."""
+    checked = 0
+    for item in menu:
+        # offset the pool rows so these blocks were never part of trial
+        # traffic: the first submission is then a guaranteed dispatch and
+        # the repeat a guaranteed cache hit
+        q = pool[np.arange(item.rows) % len(pool)] + 0.25
+        h = service.query(q, QueryOptions(index=name, k=item.k,
+                                          nprobe=item.nprobe))
+        first = h.result(timeout=60.0)
+        if first.request_id < 0:
+            raise SystemExit("cache: probe block was unexpectedly cached")
+        again = service.query(q, QueryOptions(index=name, k=item.k,
+                                              nprobe=item.nprobe))
+        if not again.done():
+            raise SystemExit(f"cache: repeat of a {item.rows}-row block "
+                             "was not served from cache")
+        res = again.result()
+        if not (np.array_equal(first.scores, res.scores)
+                and np.array_equal(first.ids, res.ids)):
+            raise SystemExit("cache hit is not bit-identical to the "
+                             "dispatch it replaced")
+        checked += item.rows
+    return checked
+
+
+def make_service(args) -> RetrievalService:
+    batcher = None if args.fixed_batch else \
+        AdaptiveBatcher(min_batch=8, max_batch=args.max_batch)
+    svc = RetrievalService(default_k=10, max_batch=args.max_batch,
+                           max_pending_queries=args.max_pending,
+                           batcher=batcher, cache_rows=args.cache_rows)
+    return svc
+
+
+def trial_ok(r: dict, slo_ms: float) -> bool:
+    return (r["lost"] == 0 and r["shed_queue_full"] == 0
+            and r["conserved"] and r["p99_ms"] <= slo_ms)
+
+
+def report(tag: str, r: dict) -> None:
+    print(f"  {tag:24s} offered {r['offered_rows_per_s']:7.0f} rows/s "
+          f"served {r['served_rows_per_s']:7.0f}  "
+          f"p50={r['p50_ms']:6.1f}ms p99={r['p99_ms']:7.1f}ms  "
+          f"shed={r['shed_rate_limited'] + r['shed_queue_full']} "
+          f"lost={r['lost']} hiwater={r['queue_high_water']}"
+          + (f"  cache_hits={r['cache_hits']}" if r["cache_hits"] else "")
+          + (f"  updates={r['updates']}" if r["updates"] else ""))
+
+
+def find_saturation(args, name, pool, menu, rng) -> dict:
+    """Geometric ramp then bisection: the largest offered rows/s whose
+    trial stays within the p99 SLO with zero lost/shed requests."""
+    best, lo, hi = None, None, None
+    rate = args.qps
+    while rate <= args.sweep_max:
+        r = sweep_trial(args, name, pool, menu, rng, rate)
+        report(f"ramp @{rate:.0f}", r)
+        if trial_ok(r, args.slo_ms):
+            best, lo = r, rate
+            rate *= 2.0
+        else:
+            hi = rate
+            break
+    if hi is not None and lo is not None:
+        for _ in range(args.sweep_bisect):
+            mid = (lo + hi) / 2.0
+            r = sweep_trial(args, name, pool, menu, rng, mid)
+            report(f"bisect @{mid:.0f}", r)
+            if trial_ok(r, args.slo_ms):
+                best, lo = r, mid
+            else:
+                hi = mid
+    if best is None:
+        raise SystemExit(f"no offered rate ≥ {args.qps} rows/s met the "
+                         f"p99 ≤ {args.slo_ms}ms SLO — lower --qps")
+    return best
+
+
+def sweep_trial(args, name, pool, menu, rng, rate) -> dict:
+    # fresh service per trial point: no queue or counter state bleeds
+    # between rates, so each point is an independent measurement
+    svc = make_service(args)
+    svc.register(name, args.index_factory())
+    try:
+        warmup(svc, name, pool, menu, args.max_batch, args.timeout)
+        wl = build_workload(rng, duration_s=args.duration,
+                            rows_per_s=rate, arrival=args.arrival,
+                            menu=menu, pool_size=len(pool),
+                            zipf_alpha=args.zipf)
+        return run_trial(svc, name, pool, menu, wl,
+                         timeout_s=args.timeout)
+    finally:
+        svc.close()
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="open-loop load generator for RetrievalService")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny corpus / short trial (CI smoke)")
+    ap.add_argument("--arrival", choices=("poisson", "bursty"),
+                    default="poisson")
+    ap.add_argument("--qps", type=float, default=0,
+                    help="offered rate in query rows/s (sweep: start rate)")
+    ap.add_argument("--duration", type=float, default=0,
+                    help="seconds per trial")
+    ap.add_argument("--slo-ms", type=float, default=50.0,
+                    help="p99 latency SLO (scheduled arrival → done)")
+    ap.add_argument("--sweep", action="store_true",
+                    help="ramp + bisect to the saturation rate @ SLO")
+    ap.add_argument("--sweep-max", type=float, default=200_000.0)
+    ap.add_argument("--sweep-bisect", type=int, default=3)
+    ap.add_argument("--n-docs", type=int, default=0)
+    ap.add_argument("--pool", type=int, default=0,
+                    help="distinct queries in the Zipf pool")
+    ap.add_argument("--zipf", type=float, default=1.1,
+                    help="Zipf popularity exponent")
+    ap.add_argument("--cache-rows", type=int, default=4096,
+                    help="result-cache capacity (0 disables)")
+    ap.add_argument("--rate-limit", type=float, default=0,
+                    help="rows/s budget; bulk lane capped at 30%% of it")
+    ap.add_argument("--update-every", type=float, default=0.2,
+                    help="seconds between live update/delete ops "
+                         "(0 disables the mutator)")
+    ap.add_argument("--max-batch", type=int, default=128)
+    ap.add_argument("--max-pending", type=int, default=8192)
+    ap.add_argument("--fixed-batch", action="store_true",
+                    help="fixed-cap MicroBatcher instead of adaptive")
+    ap.add_argument("--timeout", type=float, default=120.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    n_docs = args.n_docs or (2000 if args.quick else 50_000)
+    pool_size = args.pool or (64 if args.quick else 1024)
+    duration = args.duration or (1.5 if args.quick else 10.0)
+    qps = args.qps or (300.0 if args.quick else 2000.0)
+    args.duration, args.qps = duration, qps
+
+    rng = np.random.default_rng(args.seed)
+    kb = make_dpr_like_kb(n_queries=pool_size, n_docs=n_docs,
+                          seed=args.seed)
+    fresh = make_dpr_like_kb(n_queries=8, n_docs=max(64, n_docs // 10),
+                             seed=args.seed + 1)
+    pool = np.asarray(kb.queries, np.float32)
+    fresh_docs = np.asarray(fresh.docs, np.float32)
+    nlist = max(8, int(np.sqrt(n_docs)))
+    spec = IndexSpec(method="pca_int8", dim=64 if args.quick else 128,
+                     ivf=(nlist, max(2, nlist // 8)), mutable=True,
+                     backend="jnp", post=False)
+
+    def index_factory():
+        return build_index(spec, kb.docs, kb.queries[:min(256, pool_size)])
+
+    args.index_factory = index_factory
+    menu = DEFAULT_MENU
+    name = "kb"
+
+    print(f"loadgen: {n_docs} docs, mutable IVF(nlist={nlist}), "
+          f"{args.arrival} arrivals, Zipf(a={args.zipf}) over "
+          f"{pool_size} queries, menu of {len(menu)} shapes, "
+          f"cache={args.cache_rows} rows\n")
+
+    # --- fixed-rate trial with the full production shape ------------------
+    svc = make_service(args)
+    svc.register(name, index_factory())
+    try:
+        warmup(svc, name, pool, menu, args.max_batch, args.timeout)
+        if args.rate_limit:                  # after warmup: don't shed it
+            svc.set_rate_limit(name, qps=args.rate_limit,
+                               lanes={"bulk": 0.3})
+        mut = None
+        if args.update_every:
+            mut = Mutator(svc, name, fresh_docs,
+                          interval_s=args.update_every,
+                          rng=np.random.default_rng(args.seed + 2))
+        wl = build_workload(rng, duration_s=duration, rows_per_s=qps,
+                            arrival=args.arrival, menu=menu,
+                            pool_size=pool_size, zipf_alpha=args.zipf)
+        r = run_trial(svc, name, pool, menu, wl, timeout_s=args.timeout,
+                      mutator=mut)
+        report("fixed-rate", r)
+        if not r["conserved"]:
+            raise SystemExit("conservation violated: submitted != served "
+                             "at quiesce")
+        if r["lost"]:
+            raise SystemExit(f"{r['lost']} requests lost")
+        if r["deleted_ids_resurfaced"]:
+            raise SystemExit(f"{r['deleted_ids_resurfaced']} results "
+                             "contained tombstoned doc ids")
+        if args.cache_rows:
+            n = verify_cache_identity(svc, name, pool, menu)
+            print(f"  cache identity verified on {n} rows "
+                  "(hit == dispatch, bit for bit)")
+        print("  zero lost requests, conservation holds, no deleted id "
+              "resurfaced\n")
+    finally:
+        svc.close()
+
+    # --- saturation sweep -------------------------------------------------
+    if args.sweep:
+        print(f"saturation sweep: p99 ≤ {args.slo_ms:.0f}ms, "
+              f"{duration:.1f}s per point")
+        best = find_saturation(args, name, pool, menu, rng)
+        print(f"\nsaturation: {best['offered_rows_per_s']:.0f} rows/s "
+              f"offered within SLO (p99={best['p99_ms']:.1f}ms ≤ "
+              f"{args.slo_ms:.0f}ms, zero lost)")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

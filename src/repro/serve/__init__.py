@@ -17,20 +17,33 @@ execution cores.
   hot-swap canary mechanism).
 * :class:`~repro.serve.metrics.LatencyStats` — streaming latency
   percentile tracking, mergeable across engines for the service snapshot.
+* :class:`~repro.serve.limits.RateLimiter` — per-index token-bucket rate
+  limiting with priority lanes, consulted before admission
+  (:class:`~repro.serve.service.RateLimited` is the shed signal).
+* :class:`~repro.serve.cache.ResultCache` — hot-query result cache keyed
+  on (index, epoch, version, k, nprobe, query-hash); epoch-keyed
+  invalidation on live updates / compaction / promote.
+* :class:`~repro.serve.batcher.AdaptiveBatcher` — queue-depth-driven
+  micro-batch sizing (small batches at low load, wide at saturation).
 """
 
-from repro.serve.batcher import MicroBatch, MicroBatcher
+from repro.serve.batcher import AdaptiveBatcher, MicroBatch, MicroBatcher
+from repro.serve.cache import ResultCache
 from repro.serve.engine import ServeEngine, ServeResult
+from repro.serve.limits import RateLimiter, TokenBucket
 from repro.serve.metrics import LatencyStats
 from repro.serve.router import IndexEntry, IndexRegistry, IndexVersion
 from repro.serve.service import (CanaryFailed, QueryHandle, QueryOptions,
-                                 QueueFull, RetrievalService, ServiceClosed)
+                                 QueueFull, RateLimited, RetrievalService,
+                                 ServiceClosed)
 from repro.serve.shadow import ShadowScorer
 
 __all__ = [
-    "MicroBatch", "MicroBatcher", "ServeEngine", "ServeResult",
+    "AdaptiveBatcher", "MicroBatch", "MicroBatcher",
+    "ServeEngine", "ServeResult",
     "LatencyStats", "ShadowScorer",
+    "RateLimiter", "TokenBucket", "ResultCache",
     "IndexEntry", "IndexRegistry", "IndexVersion",
     "RetrievalService", "QueryOptions", "QueryHandle",
-    "QueueFull", "CanaryFailed", "ServiceClosed",
+    "QueueFull", "RateLimited", "CanaryFailed", "ServiceClosed",
 ]

@@ -51,8 +51,15 @@ class MicroBatcher:
         self.max_batch = max_batch
         self.pad_batches = pad_batches
 
+    @property
+    def batch_cap(self) -> int:
+        """Effective row cap per micro-batch for the next ``form`` call
+        (constant here; :class:`AdaptiveBatcher` moves it with load)."""
+        return self.max_batch
+
     def form(self, pending: list[tuple[int, np.ndarray]]) -> list[MicroBatch]:
         """``pending`` is FIFO [(request_id, queries (n, d))] → micro-batches."""
+        cap = self.batch_cap
         batches: list[MicroBatch] = []
         cur_rows: list[np.ndarray] = []
         cur_slices: list[Slice] = []
@@ -64,7 +71,7 @@ class MicroBatcher:
                 return
             q = np.concatenate(cur_rows, axis=0)
             if self.pad_batches:
-                target = bucket_rows(cur_n, self.max_batch)
+                target = bucket_rows(cur_n, cap)
                 if target > cur_n:
                     pad = np.zeros((target - cur_n,) + q.shape[1:], q.dtype)
                     q = np.concatenate([q, pad], axis=0)
@@ -82,13 +89,51 @@ class MicroBatcher:
                 raise ValueError(f"request {request_id}: empty query block")
             off = 0
             while off < queries.shape[0]:
-                room = self.max_batch - cur_n
+                room = cap - cur_n
                 take = min(room, queries.shape[0] - off)
                 cur_rows.append(queries[off: off + take])
                 cur_slices.append(Slice(request_id, cur_n, cur_n + take, off))
                 cur_n += take
                 off += take
-                if cur_n == self.max_batch:
+                if cur_n == cap:
                     flush()
         flush()
         return batches
+
+
+class AdaptiveBatcher(MicroBatcher):
+    """Micro-batch sizing that follows queue depth.
+
+    A fixed ``max_batch`` is the wrong trade at both ends of the load
+    curve: shallow queues want small batches (a 4-row burst padded into a
+    wider bucket wastes device compute for no coalescing win) and
+    saturated queues want the widest batch the device can take (fewer
+    dispatches per row is exactly where the throughput comes from).  The
+    engine reports the rows it just popped via :meth:`observe_depth`
+    before forming batches; the effective cap is that depth rounded up to
+    a power of two and clamped to ``[min_batch, max_batch]``, so compiled
+    search-graph shapes stay the usual O(log) bucket set.
+
+    State is one integer; the engines of a service share one batcher and
+    a single dispatcher thread drains them in turn, so the cap each drain
+    observes is its own queue's depth.
+    """
+
+    def __init__(self, min_batch: int = 8, max_batch: int = 256,
+                 pad_batches: bool = True):
+        if min_batch < 1 or min_batch > max_batch:
+            raise ValueError(f"need 1 ≤ min_batch ≤ max_batch, got "
+                             f"{min_batch}/{max_batch}")
+        super().__init__(max_batch=max_batch, pad_batches=pad_batches)
+        self.min_batch = min_batch
+        self._cap = min_batch
+
+    def observe_depth(self, rows_pending: int) -> int:
+        """Adapt the cap to the rows just popped; returns the new cap."""
+        target = bucket_rows(max(int(rows_pending), 1), self.max_batch)
+        self._cap = min(max(target, self.min_batch), self.max_batch)
+        return self._cap
+
+    @property
+    def batch_cap(self) -> int:
+        return self._cap

@@ -47,7 +47,7 @@ class ServeResult:
     request_id: int
     scores: np.ndarray           # (n, k)
     ids: np.ndarray              # (n, k)
-    latency_s: float             # queue-entry → results materialised
+    latency_s: float             # queue-entry → this request's last batch done
 
 
 class ServeEngine:
@@ -60,6 +60,12 @@ class ServeEngine:
         self.batcher = batcher if batcher is not None else MicroBatcher()
         self.shadow = shadow
         self.latency = LatencyStats()          # per micro-batch device time
+        self.request_latency = LatencyStats()  # per-request queue → done
+        # one lock guards the queue AND every counter below: submit,
+        # drain's counter updates, and stats() snapshots all take it, so a
+        # stats() reader can never see requests_served without the matching
+        # queries_served (and conservation — submitted == served + pending
+        # + in flight — holds on every snapshot, not just at quiesce)
         self._lock = threading.Lock()
         self._pending: list[tuple[int, np.ndarray, Optional[int],
                                   Optional[int]]] = []
@@ -69,6 +75,10 @@ class ServeEngine:
         self.queries_served = 0
         self.batches_served = 0
         self.requests_served = 0
+        self.requests_submitted = 0
+        self.queries_submitted = 0
+        self._inflight_requests = 0            # popped by drain, not yet done
+        self._inflight_rows = 0
 
     @classmethod
     def from_artifact(cls, path: str, k: int = 10, *, mesh=None,
@@ -118,12 +128,19 @@ class ServeEngine:
             self._next_id += 1
             self._pending.append((request_id, q, k, nprobe))
             self._submit_time[request_id] = now
+            self.requests_submitted += 1
+            self.queries_submitted += q.shape[0]
         return request_id
 
     @property
     def pending(self) -> int:
         with self._lock:
             return sum(q.shape[0] for _, q, _, _ in self._pending)
+
+    @property
+    def pending_requests(self) -> int:
+        with self._lock:
+            return len(self._pending)
 
     # -- observers ---------------------------------------------------------
     def add_observer(self, observer: ShadowScorer) -> None:
@@ -139,21 +156,33 @@ class ServeEngine:
 
     # -- dispatch side -----------------------------------------------------
     def drain(self) -> dict[int, ServeResult]:
-        """Serve everything pending; returns {request_id: ServeResult}."""
+        """Serve everything pending; returns {request_id: ServeResult}.
+
+        A request completes — and its ``latency_s`` is stamped — the
+        moment the micro-batch carrying its *last* rows finishes, not when
+        the whole drain does: requests answered by the first batch are
+        never charged for later, unrelated batches in the same drain.
+        """
         with self._lock:
             if not self._pending:
                 return {}
             pending, self._pending = self._pending, []
             submit_time = {rid: self._submit_time.pop(rid)
                            for rid, _, _, _ in pending}
+            self._inflight_requests += len(pending)
+            self._inflight_rows += sum(q.shape[0] for _, q, _, _ in pending)
             observers = tuple(([self.shadow] if self.shadow is not None
                                else []) + self._observers)
+        if hasattr(self.batcher, "observe_depth"):   # adaptive sizing hook
+            self.batcher.observe_depth(self._inflight_rows)
         out_scores: dict[int, np.ndarray] = {}
         out_ids: dict[int, np.ndarray] = {}
+        rows_left: dict[int, int] = {}
         for rid, q, _, _ in pending:
             n = q.shape[0]
             out_scores[rid] = np.empty((n, 0), np.float32)
             out_ids[rid] = np.empty((n, 0), np.int32)
+            rows_left[rid] = n
 
         # micro-batch per (k, nprobe) group: one compiled graph per batch.
         # FIFO order is preserved within each group.
@@ -163,18 +192,18 @@ class ServeEngine:
             key = (self.k if k is None else k, nprobe)
             groups.setdefault(key, []).append((rid, q))
 
+        results: dict[int, ServeResult] = {}
         for (k, nprobe), items in groups.items():
             kwargs = {} if nprobe is None else {"nprobe": nprobe}
             for batch in self.batcher.form(items):
                 t0 = time.perf_counter()
                 vals, ids = self.index.search(batch.queries, k, **kwargs)
                 vals, ids = np.asarray(vals), np.asarray(ids)   # blocks
-                self.latency.record(time.perf_counter() - t0)
-                self.batches_served += 1
-                self.queries_served += batch.n_valid
+                done = time.perf_counter()
                 for obs in observers:
                     obs.observe(batch.queries[:batch.n_valid],
                                 ids[:batch.n_valid], k)
+                finished: list[int] = []
                 for s in batch.slices:
                     rid, rows = s.request_id, s.stop - s.start
                     if out_scores[rid].shape[1] == 0:
@@ -187,22 +216,48 @@ class ServeEngine:
                         vals[s.start: s.stop]
                     out_ids[rid][s.req_start: s.req_start + rows] = \
                         ids[s.start: s.stop]
-
-        done = time.perf_counter()
-        results = {}
-        for rid, _, _, _ in pending:
-            results[rid] = ServeResult(
-                request_id=rid, scores=out_scores[rid], ids=out_ids[rid],
-                latency_s=done - submit_time[rid])
-        self.requests_served += len(results)
+                    rows_left[rid] -= rows
+                    if rows_left[rid] == 0:
+                        finished.append(rid)
+                for rid in finished:
+                    results[rid] = ServeResult(
+                        request_id=rid, scores=out_scores[rid],
+                        ids=out_ids[rid],
+                        latency_s=done - submit_time[rid])
+                with self._lock:
+                    self.latency.record(done - t0)
+                    self.batches_served += 1
+                    self.queries_served += batch.n_valid
+                    self.requests_served += len(finished)
+                    self._inflight_requests -= len(finished)
+                    for rid in finished:
+                        self._inflight_rows -= out_ids[rid].shape[0]
+                        self.request_latency.record(results[rid].latency_s)
         return results
 
     # -- observability -----------------------------------------------------
     def stats(self) -> dict:
-        s = {"requests_served": self.requests_served,
-             "queries_served": self.queries_served,
-             "batches_served": self.batches_served,
-             **self.latency.summary()}
+        """Lock-consistent snapshot: every counter is read under the same
+        lock drain/submit mutate them under, so
+        ``requests_submitted == requests_served + pending_requests +
+        inflight_requests`` holds on *every* snapshot, not just at
+        quiesce.  Latency keys (``count``/``p50_ms``/…) are the per-batch
+        device time; ``request_*`` keys are per-request queue-entry →
+        last-batch-done."""
+        with self._lock:
+            s = {"requests_served": self.requests_served,
+                 "queries_served": self.queries_served,
+                 "batches_served": self.batches_served,
+                 "requests_submitted": self.requests_submitted,
+                 "queries_submitted": self.queries_submitted,
+                 "pending_requests": len(self._pending),
+                 "pending_rows": sum(q.shape[0]
+                                     for _, q, _, _ in self._pending),
+                 "inflight_requests": self._inflight_requests,
+                 "inflight_rows": self._inflight_rows,
+                 **self.latency.summary()}
+            s.update({f"request_{key}": val for key, val
+                      in self.request_latency.summary().items()})
         if self.shadow is not None:
             s["shadow_overlap"] = self.shadow.mean_overlap
             s["shadow_batches"] = len(self.shadow.overlaps)

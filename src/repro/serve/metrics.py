@@ -2,6 +2,7 @@
 
 from __future__ import annotations
 
+import threading
 from typing import Iterable
 
 import numpy as np
@@ -14,6 +15,11 @@ class LatencyStats:
     long-lived serving engine neither grows without bound nor pays
     O(uptime) per percentile query; ``count`` still reports the total
     recorded.
+
+    Thread-safe: ``record`` may race ``summary``/``percentile``/``merge``
+    from any number of reader threads (the service stats rollup reads
+    every engine's collector while drains keep recording) — each call
+    sees a consistent window.
     """
 
     def __init__(self, window: int = 8192) -> None:
@@ -22,12 +28,14 @@ class LatencyStats:
         self.window = window
         self.total_recorded = 0
         self._samples: list[float] = []
+        self._mu = threading.Lock()
 
     def record(self, seconds: float) -> None:
-        self._samples.append(float(seconds))
-        self.total_recorded += 1
-        if len(self._samples) > self.window:
-            del self._samples[: len(self._samples) - self.window]
+        with self._mu:
+            self._samples.append(float(seconds))
+            self.total_recorded += 1
+            if len(self._samples) > self.window:
+                del self._samples[: len(self._samples) - self.window]
 
     def __len__(self) -> int:
         return self.total_recorded
@@ -35,7 +43,12 @@ class LatencyStats:
     @property
     def samples(self) -> tuple[float, ...]:
         """Snapshot of the retained window, in seconds."""
-        return tuple(self._samples)
+        with self._mu:
+            return tuple(self._samples)
+
+    def _snapshot(self) -> tuple[int, tuple[float, ...]]:
+        with self._mu:
+            return self.total_recorded, tuple(self._samples)
 
     @classmethod
     def merge(cls, parts: Iterable["LatencyStats"]) -> "LatencyStats":
@@ -46,22 +59,29 @@ class LatencyStats:
         parts = list(parts)
         merged = cls(window=max(1, sum(p.window for p in parts)))
         for p in parts:
-            merged._samples.extend(p.samples)
-            merged.total_recorded += p.total_recorded
+            total, samples = p._snapshot()
+            merged._samples.extend(samples)
+            merged.total_recorded += total
         return merged
 
     def percentile(self, p: float) -> float:
         """p-th percentile latency in milliseconds (nan when empty)."""
-        if not self._samples:
+        _, samples = self._snapshot()
+        if not samples:
             return float("nan")
-        return float(np.percentile(np.asarray(self._samples) * 1000.0, p))
+        return float(np.percentile(np.asarray(samples) * 1000.0, p))
 
     def summary(self) -> dict[str, float]:
+        total, samples = self._snapshot()
+        if not samples:
+            return {"count": total, "mean_ms": float("nan"),
+                    "p50_ms": float("nan"), "p95_ms": float("nan"),
+                    "p99_ms": float("nan")}
+        ms = np.asarray(samples) * 1000.0
         return {
-            "count": self.total_recorded,
-            "mean_ms": (float(np.mean(self._samples) * 1000.0)
-                        if self._samples else float("nan")),
-            "p50_ms": self.percentile(50),
-            "p95_ms": self.percentile(95),
-            "p99_ms": self.percentile(99),
+            "count": total,
+            "mean_ms": float(np.mean(ms)),
+            "p50_ms": float(np.percentile(ms, 50)),
+            "p95_ms": float(np.percentile(ms, 95)),
+            "p99_ms": float(np.percentile(ms, 99)),
         }

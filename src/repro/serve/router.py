@@ -112,8 +112,11 @@ class IndexEntry:
         # counters carried over from GC'd versions, so service-level
         # totals never go backwards across hot-swaps
         self.retired_totals = {"requests_served": 0, "queries_served": 0,
-                               "batches_served": 0}
+                               "batches_served": 0,
+                               "requests_submitted": 0,
+                               "queries_submitted": 0}
         self.retired_latency = LatencyStats()
+        self.retired_request_latency = LatencyStats()
         self._next_version = 1
 
     def allocate(self) -> int:

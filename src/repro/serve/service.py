@@ -52,13 +52,16 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Optional
 
 import numpy as np
 
 from repro.retrieval.segments import SegmentedIndex
 from repro.serve.batcher import MicroBatcher
+from repro.serve.cache import ResultCache
 from repro.serve.engine import ServeResult
+from repro.serve.limits import RateLimiter
 from repro.serve.metrics import LatencyStats
 from repro.serve.router import IndexEntry, IndexRegistry, IndexVersion
 from repro.serve.shadow import ShadowScorer
@@ -66,6 +69,11 @@ from repro.serve.shadow import ShadowScorer
 
 class QueueFull(RuntimeError):
     """Admission control rejected the request: queue depth at the bound."""
+
+
+class RateLimited(QueueFull):
+    """The index's rate-limit policy shed this request (subclass of
+    :class:`QueueFull` so one ``except`` arm handles both shed paths)."""
 
 
 class CanaryFailed(RuntimeError):
@@ -86,17 +94,24 @@ class QueryOptions:
     probe width for IVF-backed indexes.  Each distinct ``(k, nprobe)``
     value forms its own micro-batch group and compiles its own search
     graph — offer a small fixed menu, not a continuous knob.
+
+    ``lane`` names the rate-limit lane this request bills against (see
+    :meth:`RetrievalService.set_rate_limit`); lanes without a configured
+    cap share the index's full budget.
     """
 
     index: str = "default"
     k: Optional[int] = None
     nprobe: Optional[int] = None
+    lane: str = "default"
 
     def __post_init__(self):
         if self.k is not None and self.k < 1:
             raise ValueError("k must be ≥ 1")
         if self.nprobe is not None and self.nprobe < 1:
             raise ValueError("nprobe must be ≥ 1")
+        if not self.lane:
+            raise ValueError("lane must be a non-empty string")
 
 
 class QueryHandle:
@@ -117,6 +132,7 @@ class QueryHandle:
         self._event = threading.Event()
         self._result: Optional[ServeResult] = None
         self._error: Optional[BaseException] = None
+        self._cache_keys = None             # set when a result cache is on
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -150,16 +166,34 @@ class RetrievalService:
 
     def __init__(self, *, default_k: int = 10, max_batch: int = 64,
                  max_pending_queries: int = 4096,
-                 poll_interval_s: float = 0.05, start: bool = True):
+                 poll_interval_s: float = 0.05, start: bool = True,
+                 batcher: Optional[MicroBatcher] = None,
+                 cache_rows: int = 0,
+                 limiter: Optional[RateLimiter] = None):
+        """``batcher`` overrides the default fixed-cap
+        :class:`~repro.serve.batcher.MicroBatcher` (pass an
+        :class:`~repro.serve.batcher.AdaptiveBatcher` for depth-driven
+        micro-batch sizing); ``cache_rows > 0`` enables the hot-query
+        result cache (:mod:`repro.serve.cache`) bounded to that many row
+        entries; ``limiter`` installs per-index rate-limit policies (or
+        use :meth:`set_rate_limit`)."""
         self.default_k = default_k
         self.max_pending_queries = max_pending_queries
-        self._batcher = MicroBatcher(max_batch=max_batch)
+        self._batcher = batcher if batcher is not None \
+            else MicroBatcher(max_batch=max_batch)
         self._registry = IndexRegistry()
         self._lock = threading.RLock()      # registry + version pointers
         self._admission = threading.Lock()  # pending-row accounting
         self._update_lock = threading.Lock()  # serialise update/compact
         self._pending_queries = 0
+        self._pending_high_water = 0
+        self._cache = ResultCache(max_rows=cache_rows) if cache_rows else None
+        self._cache_epochs: dict[str, int] = {}   # guarded by self._lock
+        self._limiter = limiter if limiter is not None else RateLimiter()
+        self.requests_admitted = 0
         self.requests_rejected = 0
+        self.requests_rate_limited = 0
+        self.cache_hits = 0
         self.updates_applied = 0
         self.compactions_run = 0
         self._poll_interval_s = poll_interval_s
@@ -252,6 +286,24 @@ class RetrievalService:
         with self._lock:
             return self._registry.names()
 
+    # -- rate limiting -----------------------------------------------------
+    def set_rate_limit(self, name: str, *, qps: float,
+                       burst: Optional[float] = None,
+                       lanes: Optional[dict[str, float]] = None) -> None:
+        """Install/replace the rate-limit policy for index ``name``:
+        sustained ``qps`` in query *rows* per second, ``burst`` bucket
+        capacity (default one second of qps), and ``lanes`` mapping a
+        :class:`QueryOptions` lane name to the fraction of qps it may use
+        (capped lanes shed their own overload; unlisted lanes share the
+        full budget).  Raises ``KeyError`` for an unregistered index."""
+        with self._lock:
+            self._check_open()
+            self._registry.get(name)          # raise before installing
+        self._limiter.configure(name, qps=qps, burst=burst, lanes=lanes)
+
+    def clear_rate_limit(self, name: str) -> bool:
+        return self._limiter.remove(name)
+
     # -- request side ------------------------------------------------------
     def query(self, queries, options: Optional[QueryOptions] = None,
               **kw) -> QueryHandle:
@@ -260,7 +312,12 @@ class RetrievalService:
         ``options`` is a :class:`QueryOptions`; as a convenience the same
         fields may be given as keywords (``service.query(q, index="wiki",
         k=5)``).  Raises :class:`QueueFull` when admission control rejects
-        the block, ``KeyError`` for an unknown index name.
+        the block, :class:`RateLimited` when the index's rate-limit policy
+        sheds it, ``KeyError`` for an unknown index name.
+
+        With the result cache enabled, a block whose every row is cached
+        for the live version resolves immediately — no admission charge,
+        no dispatch — with results bit-identical to the search it skipped.
         """
         if options is None:
             options = QueryOptions(**kw)
@@ -279,8 +336,40 @@ class RetrievalService:
             entry = self._registry.get(options.index)
             version = entry.live_version()
             version.binders += 1       # pin against GC until submitted
+            epoch = self._cache_epochs.get(entry.name, 0)
         try:
             engine = version.ensure_engine()   # lazy load, outside the lock
+
+            cache_keys = None
+            if self._cache is not None:
+                t0 = time.perf_counter()
+                k_eff = engine.k if options.k is None else options.k
+                cache_keys = ResultCache.keys_for(
+                    entry.name, epoch, version.version, k_eff,
+                    options.nprobe, q)
+                hit = self._cache.lookup(cache_keys)
+                if hit is not None:
+                    scores, ids = hit
+                    handle = QueryHandle(entry.name, version.version, -1, n)
+                    handle._resolve(ServeResult(
+                        request_id=-1, scores=scores, ids=ids,
+                        latency_s=time.perf_counter() - t0))
+                    with self._admission:
+                        self.cache_hits += 1
+                    return handle
+
+            # shed *before* admission: rate-limited traffic must never
+            # occupy queue capacity that surviving traffic needs
+            if not self._limiter.allow(entry.name, options.lane, n):
+                with self._admission:
+                    self.requests_rate_limited += 1
+                raise RateLimited(
+                    f"index {options.index!r}: lane {options.lane!r} "
+                    f"over its rate-limit budget ({n} rows shed)")
+
+            # the depth check and the counter bump are one atomic step
+            # under the admission lock: concurrent producers can never
+            # both pass a check that only has room for one of them
             with self._admission:
                 if self._pending_queries + n > self.max_pending_queries:
                     self.requests_rejected += 1
@@ -290,6 +379,9 @@ class RetrievalService:
                         f"{self.max_pending_queries} "
                         f"({self._pending_queries} pending)")
                 self._pending_queries += n
+                self.requests_admitted += 1
+                if self._pending_queries > self._pending_high_water:
+                    self._pending_high_water = self._pending_queries
             try:
                 # holding version.lock across submit+register means the
                 # drain loop (which takes it before popping handles) can
@@ -299,6 +391,7 @@ class RetrievalService:
                                         k=options.k)
                     handle = QueryHandle(entry.name, version.version, rid,
                                          n)
+                    handle._cache_keys = cache_keys
                     version.handles[rid] = handle
             except BaseException:
                 with self._admission:
@@ -353,6 +446,12 @@ class RetrievalService:
             for rid, res in results.items():
                 h = handles.get(rid)
                 if h is not None:
+                    if self._cache is not None and \
+                            h._cache_keys is not None:
+                        # keys carry the epoch read at submit time: if an
+                        # update landed since, these rows are already
+                        # unreachable — the insert is harmlessly stale
+                        self._cache.put(h._cache_keys, res.scores, res.ids)
                     h._resolve(res)
             resolved += len(handles)
         self._gc()
@@ -389,6 +488,9 @@ class RetrievalService:
                                 getattr(iv.engine, key)
                         entry.retired_latency = LatencyStats.merge(
                             [entry.retired_latency, iv.engine.latency])
+                        entry.retired_request_latency = LatencyStats.merge(
+                            [entry.retired_request_latency,
+                             iv.engine.request_latency])
                     del entry.versions[vid]
 
     # -- hot swap ----------------------------------------------------------
@@ -475,7 +577,9 @@ class RetrievalService:
                         f"({len(c.overlaps)} batches)")
             self._detach_canary(entry)
             entry.staged_compact = False
-            return entry.promote()
+            vid = entry.promote()
+            self._invalidate_cache(name)
+            return vid
 
     def rollback(self, name: str) -> int:
         """Flip live back to the previous version (atomic, same contract
@@ -488,7 +592,9 @@ class RetrievalService:
             entry = self._registry.get(name)
             self._detach_canary(entry)
             entry.staged_compact = False
-            return entry.rollback()
+            vid = entry.rollback()
+            self._invalidate_cache(name)
+            return vid
 
     # -- live updates ------------------------------------------------------
     def _live_mutable(self, name: str) -> tuple[IndexVersion, SegmentedIndex]:
@@ -550,6 +656,11 @@ class RetrievalService:
                 deleted = idx.delete(delete)
             self.updates_applied += 1
             report = idx.mutable_stats()
+            # bump *after* the mutation lands: every cache row whose epoch
+            # was read before this line — including results computed
+            # against the pre-update index but inserted later — is now
+            # unreachable
+            self._invalidate_cache(name)
         self._kick.set()
         return {"index": name, "version": iv.version, "added": added,
                 "deleted": deleted, "gid_range": gid_range, **report}
@@ -596,22 +707,42 @@ class RetrievalService:
             entry.canary = None
             entry.canary_host = None
 
+    def _invalidate_cache(self, name: str) -> None:
+        """Bump the index's cache epoch (race-free: in-flight inserts keyed
+        on the old epoch become unreachable the instant this returns) and
+        eagerly reclaim the dead entries."""
+        with self._lock:
+            self._cache_epochs[name] = self._cache_epochs.get(name, 0) + 1
+        if self._cache is not None:
+            self._cache.invalidate(name)
+
     # -- observability -----------------------------------------------------
     def stats(self) -> dict:
         """Service-level snapshot: per-index version table + rolled-up
-        totals and merged latency percentiles across every engine."""
+        totals and merged latency percentiles across every engine.
+
+        Top-level latency keys (``p50_ms``/``p99_ms``/…) are per-batch
+        device time; ``request_*`` keys are per-request queue-entry →
+        last-batch-done — the number an SLO is written against.
+        ``queue_depth``/``queue_high_water``/``shed_rate`` are the
+        backpressure gauges: depth is rows currently admitted-but-
+        unresolved, shed rate is the fraction of arrivals turned away
+        (admission bound + rate limit) over the service's lifetime.
+        """
         with self._lock:
             snapshot = [(entry.name, entry.live, entry.staged,
                          entry.previous, entry.canary,
                          dict(entry.versions), dict(entry.retired_totals),
-                         entry.retired_latency)
+                         entry.retired_latency, entry.retired_request_latency)
                         for entry in self._registry.entries()]
         indexes: dict[str, dict] = {}
         latencies: list[LatencyStats] = []
+        request_latencies: list[LatencyStats] = []
         totals = {"requests_served": 0, "queries_served": 0,
-                  "batches_served": 0}
+                  "batches_served": 0, "requests_submitted": 0,
+                  "queries_submitted": 0}
         for (name, live, staged, previous, canary, versions, retired,
-             retired_latency) in snapshot:
+             retired_latency, retired_request_latency) in snapshot:
             table = {}
             for vid, iv in sorted(versions.items()):
                 row = dict(iv.info)
@@ -619,6 +750,7 @@ class RetrievalService:
                 if iv.loaded:
                     row.update(iv.engine.stats())
                     latencies.append(iv.engine.latency)
+                    request_latencies.append(iv.engine.request_latency)
                     for key in totals:
                         totals[key] += row[key]
                     if isinstance(iv.engine.index, SegmentedIndex):
@@ -630,6 +762,7 @@ class RetrievalService:
             for key in totals:              # GC'd versions still count
                 totals[key] += retired[key]
             latencies.append(retired_latency)
+            request_latencies.append(retired_request_latency)
             indexes[name] = {
                 "live": live, "staged": staged, "previous": previous,
                 "canary": (None if canary is None else
@@ -638,10 +771,33 @@ class RetrievalService:
                 "versions": table,
                 "retired": retired,
             }
-        return {"indexes": indexes,
-                "pending_queries": self.pending_queries,
-                "requests_rejected": self.requests_rejected,
-                "updates_applied": self.updates_applied,
-                "compactions_run": self.compactions_run,
-                **totals,
-                **LatencyStats.merge(latencies).summary()}
+        with self._admission:
+            queue_depth = self._pending_queries
+            high_water = self._pending_high_water
+            admitted = self.requests_admitted
+            rejected = self.requests_rejected
+            rate_limited = self.requests_rate_limited
+            cache_hits = self.cache_hits
+        arrivals = admitted + rejected + rate_limited
+        shed = rejected + rate_limited
+        out = {"indexes": indexes,
+               "pending_queries": queue_depth,
+               "queue_depth": queue_depth,
+               "queue_high_water": high_water,
+               "requests_admitted": admitted,
+               "requests_rejected": rejected,
+               "requests_rate_limited": rate_limited,
+               "shed_rate": (shed / arrivals) if arrivals else 0.0,
+               "cache_hits": cache_hits,
+               "updates_applied": self.updates_applied,
+               "compactions_run": self.compactions_run,
+               **totals,
+               **LatencyStats.merge(latencies).summary()}
+        out.update({f"request_{key}": val for key, val in
+                    LatencyStats.merge(request_latencies).summary().items()})
+        if self._cache is not None:
+            out["cache"] = self._cache.stats()
+        limits = self._limiter.stats()
+        if limits:
+            out["limits"] = limits
+        return out

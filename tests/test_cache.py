@@ -1,0 +1,233 @@
+"""Hot-query result cache: per-row LRU, epoch invalidation, bit-identity
+through the serving front door."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.retrieval import IndexSpec, build_index
+from repro.serve import ResultCache, RetrievalService
+from repro.serve.cache import hash_query_row
+
+D = 32
+K = 5
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(11)
+    return {
+        "docs1": rng.standard_normal((400, D)).astype(np.float32),
+        "docs2": rng.standard_normal((400, D)).astype(np.float32),
+        "queries": rng.standard_normal((64, D)).astype(np.float32),
+    }
+
+
+def make_mutable(corpus):
+    spec = IndexSpec(method="pca_int8", dim=16, backend="jnp", post=False,
+                     mutable=True)
+    return build_index(spec, jnp.asarray(corpus["docs1"]),
+                       jnp.asarray(corpus["queries"]))
+
+
+# ---------------------------------------------------------------------------
+# ResultCache mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_row_hash_exact_bytes():
+    a = np.ones(8, np.float32)
+    assert hash_query_row(a) == hash_query_row(a.copy())
+    b = a.copy()
+    b[3] += 1e-7                                # any bit flip → new key
+    assert hash_query_row(a) != hash_query_row(b)
+
+
+def test_lookup_is_all_rows_or_nothing():
+    c = ResultCache(max_rows=64)
+    q = np.arange(12, dtype=np.float32).reshape(3, 4)
+    keys = ResultCache.keys_for("kb", 0, 1, K, None, q)
+    assert c.lookup(keys) is None
+    c.put(keys[:2], np.zeros((2, K), np.float32), np.zeros((2, K), np.int32))
+    assert c.lookup(keys) is None               # one row missing → miss
+    c.put(keys[2:], np.ones((1, K), np.float32), np.ones((1, K), np.int32))
+    scores, ids = c.lookup(keys)
+    assert scores.shape == ids.shape == (3, K)
+    np.testing.assert_array_equal(ids[:2], 0)
+    np.testing.assert_array_equal(ids[2], 1)
+    st = c.stats()
+    assert st["hits"] == 3 and st["misses"] == 6
+
+
+def test_rows_reassemble_across_block_compositions():
+    """Rows cached from one block composition answer any other block that
+    wants them, in any order — per-row entries, not per-block."""
+    c = ResultCache(max_rows=64)
+    q = np.random.default_rng(0).standard_normal((4, 8)).astype(np.float32)
+    keys = ResultCache.keys_for("kb", 0, 1, K, 4, q)
+    scores = np.arange(4 * K, dtype=np.float32).reshape(4, K)
+    ids = np.arange(4 * K, dtype=np.int32).reshape(4, K)
+    c.put(keys, scores, ids)
+    perm = [2, 0, 3]
+    got_s, got_i = c.lookup(ResultCache.keys_for("kb", 0, 1, K, 4, q[perm]))
+    np.testing.assert_array_equal(got_s, scores[perm])
+    np.testing.assert_array_equal(got_i, ids[perm])
+
+
+def test_key_isolation():
+    """index, epoch, version, k and nprobe all partition the cache."""
+    c = ResultCache(max_rows=64)
+    q = np.ones((1, 8), np.float32)
+    base = ("kb", 0, 1, K, 4)
+    c.put(ResultCache.keys_for(*base, q),
+          np.zeros((1, K), np.float32), np.zeros((1, K), np.int32))
+    assert c.lookup(ResultCache.keys_for(*base, q)) is not None
+    for variant in [("other", 0, 1, K, 4), ("kb", 1, 1, K, 4),
+                    ("kb", 0, 2, K, 4), ("kb", 0, 1, K + 1, 4),
+                    ("kb", 0, 1, K, 8), ("kb", 0, 1, K, None)]:
+        assert c.lookup(ResultCache.keys_for(*variant, q)) is None
+
+
+def test_lru_eviction_bounded():
+    c = ResultCache(max_rows=4)
+    for i in range(8):
+        q = np.full((1, 4), i, np.float32)
+        c.put(ResultCache.keys_for("kb", 0, 1, K, None, q),
+              np.zeros((1, K), np.float32), np.zeros((1, K), np.int32))
+    assert len(c) == 4
+    assert c.stats()["evictions"] == 4
+    # oldest rows gone, newest retained
+    q_old = np.full((1, 4), 0, np.float32)
+    q_new = np.full((1, 4), 7, np.float32)
+    assert c.lookup(ResultCache.keys_for("kb", 0, 1, K, None, q_old)) is None
+    assert c.lookup(ResultCache.keys_for("kb", 0, 1, K, None, q_new)) \
+        is not None
+
+
+def test_invalidate_by_index():
+    c = ResultCache(max_rows=64)
+    q = np.arange(8, dtype=np.float32).reshape(2, 4)   # two distinct rows
+    for name in ("a", "b"):
+        c.put(ResultCache.keys_for(name, 0, 1, K, None, q),
+              np.zeros((2, K), np.float32), np.zeros((2, K), np.int32))
+    assert c.invalidate("a") == 2
+    assert len(c) == 2                          # b untouched
+    assert c.invalidate() == 2                  # None → everything
+    assert len(c) == 0
+
+
+def test_cached_arrays_are_isolated_copies():
+    """Mutating a returned array must not corrupt the cache (and vice
+    versa): results are copied in and out."""
+    c = ResultCache(max_rows=16)
+    q = np.ones((1, 4), np.float32)
+    keys = ResultCache.keys_for("kb", 0, 1, K, None, q)
+    src = np.zeros((1, K), np.float32)
+    c.put(keys, src, np.zeros((1, K), np.int32))
+    src[:] = 99.0                               # caller reuses its buffer
+    s1, _ = c.lookup(keys)
+    np.testing.assert_array_equal(s1, 0.0)
+    s1[:] = 42.0                                # reader scribbles on result
+    s2, _ = c.lookup(keys)
+    np.testing.assert_array_equal(s2, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# through the service: hits, bit-identity, epoch invalidation
+# ---------------------------------------------------------------------------
+
+
+def test_service_cache_hit_bit_identical(corpus):
+    with RetrievalService(start=False, cache_rows=512) as svc:
+        svc.register("kb", make_mutable(corpus))
+        q = corpus["queries"][:8]
+        h1 = svc.query(q, index="kb", k=K)
+        assert not h1.done()                    # miss: must dispatch
+        svc.drain_once()
+        r1 = h1.result(30)
+        h2 = svc.query(q, index="kb", k=K)
+        assert h2.done()                        # hit: resolves at submit
+        r2 = h2.result()
+        assert r2.request_id == -1
+        np.testing.assert_array_equal(r1.scores, r2.scores)
+        np.testing.assert_array_equal(r1.ids, r2.ids)
+        s = svc.stats()
+        assert s["cache_hits"] == 1
+        assert s["cache"]["hits"] == 8
+        # a cache hit bypasses admission: engine conservation undisturbed
+        assert s["requests_submitted"] == s["requests_served"] == 1
+
+
+def test_service_cache_subset_rows_hit(corpus):
+    """Per-row caching: a new block made of already-seen rows (different
+    order, different composition) is served from cache and matches a
+    direct dispatch bit for bit."""
+    with RetrievalService(start=False, cache_rows=512) as svc:
+        idx = make_mutable(corpus)
+        svc.register("kb", idx)
+        q = corpus["queries"][:8]
+        h = svc.query(q, index="kb", k=K)
+        svc.drain_once()
+        h.result(30)
+        sub = q[[5, 1, 6]]
+        h2 = svc.query(sub, index="kb", k=K)
+        assert h2.done()
+        want_s, want_i = idx.search(sub, K)
+        np.testing.assert_array_equal(h2.result().ids, np.asarray(want_i))
+        np.testing.assert_array_equal(h2.result().scores,
+                                      np.asarray(want_s))
+
+
+def test_service_cache_invalidated_on_update_promote_rollback(corpus):
+    with RetrievalService(start=False, cache_rows=512) as svc:
+        svc.register("kb", make_mutable(corpus))
+        q = corpus["queries"][:4]
+
+        def prime():
+            h = svc.query(q, index="kb", k=K)
+            if not h.done():
+                svc.drain_once()
+            return h.result(30)
+
+        # update() must invalidate: the deleted doc may not resurface
+        # from cache even though the query bytes are identical
+        r1 = prime()
+        doomed = int(np.asarray(r1.ids)[0, 0])
+        svc.update("kb", delete=[doomed])
+        h = svc.query(q, index="kb", k=K)
+        assert not h.done()                     # stale rows unreachable
+        svc.drain_once()
+        assert doomed not in set(np.asarray(h.result(30).ids).ravel())
+
+        # compact → promote: new live version, fresh cache space
+        prime()
+        svc.compact("kb")
+        h = svc.query(q, index="kb", k=K)
+        assert not h.done()
+        svc.drain_once()
+        h.result(30)
+
+        # rollback flips live again: must not serve the other version's
+        # rows
+        prime()
+        svc.rollback("kb")
+        h = svc.query(q, index="kb", k=K)
+        assert not h.done()
+        svc.drain_once()
+        h.result(30)
+        assert svc.stats()["cache"]["invalidations"] > 0
+
+
+def test_service_cache_disabled_by_default(corpus):
+    with RetrievalService(start=False) as svc:
+        svc.register("kb", make_mutable(corpus))
+        q = corpus["queries"][:4]
+        for _ in range(2):
+            h = svc.query(q, index="kb", k=K)
+            assert not h.done()                 # identical block: no cache
+            svc.drain_once()
+            h.result(30)
+        s = svc.stats()
+        assert s["cache_hits"] == 0
+        assert "cache" not in s
+        assert s["requests_submitted"] == s["requests_served"] == 2

@@ -1,0 +1,181 @@
+"""Token-bucket rate limiting: buckets, priority lanes, service wiring."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.retrieval import IndexSpec, build_index
+from repro.serve import QueueFull, RateLimited, RateLimiter, \
+    RetrievalService, TokenBucket
+
+D = 32
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(3)
+    return {
+        "docs": rng.standard_normal((300, D)).astype(np.float32),
+        "queries": rng.standard_normal((64, D)).astype(np.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# TokenBucket
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_burst_then_refill():
+    clk = FakeClock()
+    b = TokenBucket(rate=10.0, burst=5.0, clock=clk)
+    assert b.try_acquire(5)                    # starts full: whole burst
+    assert not b.try_acquire(1)                # empty now
+    clk.advance(0.1)                           # +1 token
+    assert b.try_acquire(1)
+    assert not b.try_acquire(1)
+    clk.advance(100.0)                         # refill caps at burst
+    assert b.available == pytest.approx(5.0)
+    assert not b.try_acquire(6)                # can never exceed burst
+    assert b.try_acquire(5)
+
+
+def test_bucket_all_or_nothing_and_refund():
+    clk = FakeClock()
+    b = TokenBucket(rate=1.0, burst=4.0, clock=clk)
+    assert not b.try_acquire(5)                # too big: bucket untouched
+    assert b.available == pytest.approx(4.0)
+    assert b.try_acquire(3)
+    b.refund(3)
+    assert b.available == pytest.approx(4.0)
+    b.refund(100)                              # refund never exceeds burst
+    assert b.available == pytest.approx(4.0)
+
+
+def test_bucket_validates():
+    with pytest.raises(ValueError):
+        TokenBucket(rate=0, burst=1)
+    with pytest.raises(ValueError):
+        TokenBucket(rate=1, burst=0)
+
+
+# ---------------------------------------------------------------------------
+# RateLimiter: lanes and the guaranteed-share contract
+# ---------------------------------------------------------------------------
+
+
+def test_unconfigured_index_is_unlimited():
+    lim = RateLimiter()
+    assert lim.allow("kb", "default", 10_000)
+    assert "kb" not in lim
+    assert lim.stats() == {}
+
+
+def test_capped_lane_sheds_alone_uncapped_lane_keeps_share():
+    """The core serving contract: a bulk lane capped at 30% shedding its
+    overload must leave the interactive lane's budget untouched."""
+    clk = FakeClock()
+    lim = RateLimiter(clock=clk)
+    lim.configure("kb", qps=100.0, burst=100.0, lanes={"bulk": 0.3})
+    # bulk burns through its 30-row lane burst, then sheds...
+    assert lim.allow("kb", "bulk", 30)
+    assert not lim.allow("kb", "bulk", 10)
+    # ...while interactive still has the rest of the shared budget: the
+    # bulk lane's failed attempts took nothing from it (two-phase refund)
+    assert lim.allow("kb", "interactive", 70)
+    assert not lim.allow("kb", "interactive", 10)   # shared budget now dry
+    st = lim.stats()["kb"]
+    assert st["rows_allowed"] == 100
+    assert st["rows_denied"] == 20
+    assert st["denied_by_lane"] == {"bulk": 10, "interactive": 10}
+
+
+def test_lane_denial_does_not_drain_shared_bucket():
+    """When the *shared* bucket denies a capped lane, the lane tokens it
+    took in phase one must be refunded — otherwise the failed attempt
+    would eat the lane's future budget too."""
+    clk = FakeClock()
+    lim = RateLimiter(clock=clk)
+    lim.configure("kb", qps=100.0, burst=10.0, lanes={"bulk": 1.0})
+    assert lim.allow("kb", "bulk", 10)         # shared burst (10) now empty
+    assert not lim.allow("kb", "bulk", 10)     # shared denies
+    clk.advance(0.1)                           # +10 shared, +10 lane
+    assert lim.allow("kb", "bulk", 10)         # lane was refunded: fits
+
+
+def test_configure_replaces_policy_and_remove():
+    lim = RateLimiter(clock=FakeClock())
+    lim.configure("kb", qps=1.0, burst=1.0)
+    assert not lim.allow("kb", "default", 5)
+    lim.configure("kb", qps=100.0, burst=50.0)   # live replacement
+    assert lim.allow("kb", "default", 5)
+    assert lim.remove("kb")
+    assert not lim.remove("kb")
+    assert lim.allow("kb", "default", 10_000)    # unlimited again
+
+
+def test_lane_fraction_validated():
+    lim = RateLimiter(clock=FakeClock())
+    with pytest.raises(ValueError, match="fraction"):
+        lim.configure("kb", qps=10.0, lanes={"bulk": 1.5})
+    with pytest.raises(ValueError, match="fraction"):
+        lim.configure("kb", qps=10.0, lanes={"bulk": 0.0})
+
+
+# ---------------------------------------------------------------------------
+# service wiring
+# ---------------------------------------------------------------------------
+
+
+def test_service_sheds_rate_limited_before_admission(corpus):
+    clk = FakeClock()
+    idx = build_index(IndexSpec(method="dense"), jnp.asarray(corpus["docs"]))
+    svc = RetrievalService(start=False, limiter=RateLimiter(clock=clk))
+    svc.register("kb", idx)
+    svc.set_rate_limit("kb", qps=10.0, burst=16.0, lanes={"bulk": 0.5})
+
+    svc.query(corpus["queries"][:8], index="kb", lane="bulk")   # lane burst
+    with pytest.raises(RateLimited):
+        svc.query(corpus["queries"][:8], index="kb", lane="bulk")
+    # RateLimited is a QueueFull: one except arm covers both shed paths
+    with pytest.raises(QueueFull):
+        svc.query(corpus["queries"][:8], index="kb", lane="bulk")
+    # shed traffic must not occupy queue capacity
+    assert svc.pending_queries == 8
+    s = svc.stats()
+    assert s["requests_rate_limited"] == 2
+    assert s["requests_admitted"] == 1
+    assert s["shed_rate"] == pytest.approx(2 / 3)
+    assert s["limits"]["kb"]["rows_denied"] == 16
+    svc.drain_once()
+    svc.close()
+
+
+def test_service_rate_limit_unknown_index(corpus):
+    with RetrievalService(start=False) as svc:
+        with pytest.raises(KeyError):
+            svc.set_rate_limit("nope", qps=10.0)
+
+
+def test_service_clear_rate_limit(corpus):
+    clk = FakeClock()
+    idx = build_index(IndexSpec(method="dense"), jnp.asarray(corpus["docs"]))
+    svc = RetrievalService(start=False, limiter=RateLimiter(clock=clk))
+    svc.register("kb", idx)
+    svc.set_rate_limit("kb", qps=1.0, burst=1.0)
+    with pytest.raises(RateLimited):
+        svc.query(corpus["queries"][:8], index="kb")
+    assert svc.clear_rate_limit("kb")
+    svc.query(corpus["queries"][:8], index="kb")     # unlimited again
+    svc.drain_once()
+    svc.close()

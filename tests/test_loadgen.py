@@ -1,0 +1,144 @@
+"""Open-loop load generator: workload statistics and a miniature trial."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+
+import loadgen  # noqa: E402
+from repro.retrieval import IndexSpec, build_index  # noqa: E402
+from repro.serve import AdaptiveBatcher, RetrievalService  # noqa: E402
+
+D = 32
+MENU = (
+    loadgen.MenuItem(0.7, 1, 5, None, "interactive"),
+    loadgen.MenuItem(0.3, 8, 5, None, "bulk"),
+)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(5)
+    return {
+        "docs": rng.standard_normal((300, D)).astype(np.float32),
+        "fresh": rng.standard_normal((64, D)).astype(np.float32),
+        "queries": rng.standard_normal((32, D)).astype(np.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# workload construction
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_schedule_hits_offered_rate():
+    rng = np.random.default_rng(0)
+    wl = loadgen.build_workload(rng, duration_s=20.0, rows_per_s=100.0,
+                                arrival="poisson", menu=MENU,
+                                pool_size=64, zipf_alpha=1.1)
+    mean_rows = 0.7 * 1 + 0.3 * 8
+    want_requests = 100.0 * 20.0 / mean_rows
+    assert len(wl.arrivals) == pytest.approx(want_requests, rel=0.01)
+    assert np.all(np.diff(wl.arrivals) >= 0)            # sorted
+    # realised mean arrival rate within sampling noise of the request rate
+    assert len(wl.arrivals) / wl.arrivals[-1] == \
+        pytest.approx(want_requests / 20.0, rel=0.15)
+    total_rows = sum(len(r) for r in wl.row_ids)
+    assert total_rows == pytest.approx(100.0 * 20.0, rel=0.1)
+
+
+def test_bursty_schedule_same_mean_meaner_peaks():
+    rng = np.random.default_rng(1)
+    kw = dict(duration_s=20.0, rows_per_s=200.0, menu=MENU,
+              pool_size=64, zipf_alpha=1.1)
+    smooth = loadgen.build_workload(rng, arrival="poisson", **kw)
+    bursty = loadgen.build_workload(rng, arrival="bursty", **kw)
+    assert len(bursty.arrivals) == len(smooth.arrivals)
+    # same request count, but arrivals concentrate: count the busiest
+    # 50ms window of each — the bursty one must be markedly taller
+    def peak(arr):
+        bins = np.bincount((arr / 0.05).astype(int))
+        return bins.max()
+    assert peak(bursty.arrivals) > 2 * peak(smooth.arrivals)
+
+
+def test_bursty_respects_duty_windows():
+    rng = np.random.default_rng(2)
+    period, duty = 0.25, 0.25
+    wl = loadgen.build_workload(rng, duration_s=10.0, rows_per_s=100.0,
+                                arrival="bursty", menu=MENU, pool_size=64,
+                                zipf_alpha=1.1, burst_period_s=period,
+                                burst_duty=duty)
+    phase = np.mod(wl.arrivals, period)
+    assert np.all(phase <= duty * period + 1e-9)
+
+
+def test_unknown_arrival_process_rejected():
+    with pytest.raises(ValueError, match="arrival"):
+        loadgen.build_workload(np.random.default_rng(0), duration_s=1.0,
+                               rows_per_s=10.0, arrival="constant",
+                               menu=MENU, pool_size=8, zipf_alpha=1.0)
+
+
+def test_zipf_popularity_is_skewed():
+    rng = np.random.default_rng(3)
+    wl = loadgen.build_workload(rng, duration_s=50.0, rows_per_s=100.0,
+                                arrival="poisson", menu=MENU,
+                                pool_size=128, zipf_alpha=1.1)
+    counts = np.bincount(np.concatenate(wl.row_ids), minlength=128)
+    # the head dominates: rank-0 beats the whole bottom half combined
+    assert counts[0] > counts[64:].sum()
+    # but the tail is not empty (it is a distribution, not a constant)
+    assert (counts[64:] > 0).any()
+
+
+def test_menu_mix_follows_weights():
+    rng = np.random.default_rng(4)
+    wl = loadgen.build_workload(rng, duration_s=100.0, rows_per_s=100.0,
+                                arrival="poisson", menu=MENU,
+                                pool_size=16, zipf_alpha=1.0)
+    frac_bulk = np.mean(wl.menu_ids == 1)
+    assert frac_bulk == pytest.approx(0.3, abs=0.05)
+    for mid, rows in zip(wl.menu_ids, wl.row_ids):
+        assert len(rows) == MENU[mid].rows
+
+
+# ---------------------------------------------------------------------------
+# a miniature end-to-end trial (the CI smoke in-process)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_mini_trial_zero_lost_and_conserved(corpus):
+    spec = IndexSpec(method="pca_int8", dim=16, backend="jnp", post=False,
+                     mutable=True)
+    idx = build_index(spec, corpus["docs"], corpus["queries"])
+    svc = RetrievalService(cache_rows=256,
+                           batcher=AdaptiveBatcher(min_batch=8,
+                                                   max_batch=32))
+    svc.register("kb", idx)
+    pool = corpus["queries"]
+    try:
+        loadgen.warmup(svc, "kb", pool, MENU, max_batch=32, timeout_s=60.0)
+        rng = np.random.default_rng(6)
+        wl = loadgen.build_workload(rng, duration_s=1.0, rows_per_s=150.0,
+                                    arrival="bursty", menu=MENU,
+                                    pool_size=len(pool), zipf_alpha=1.2)
+        mut = loadgen.Mutator(svc, "kb", corpus["fresh"], interval_s=0.15,
+                              rng=np.random.default_rng(7))
+        r = loadgen.run_trial(svc, "kb", pool, MENU, wl, timeout_s=60.0,
+                              mutator=mut)
+        assert r["lost"] == 0
+        assert r["conserved"]
+        assert r["deleted_ids_resurfaced"] == 0
+        assert r["admitted"] + r["shed_queue_full"] + \
+            r["shed_rate_limited"] == r["arrivals"]
+        assert r["updates"] >= 1                 # mutator really ran
+        assert np.isfinite(r["p99_ms"])
+        assert loadgen.verify_cache_identity(svc, "kb", pool, MENU) > 0
+    finally:
+        svc.close()

@@ -262,3 +262,196 @@ def test_shadow_sampling_cadence(kb):
     assert [o is not None for o in seen] == [True, False, False,
                                              True, False, False, True]
     assert shadow.mean_overlap == 1.0          # identical indexes
+
+
+# ---------------------------------------------------------------------------
+# latency attribution + lock-consistent stats (the accounting bugfixes)
+# ---------------------------------------------------------------------------
+
+
+class _SlowOnWideK:
+    """Index wrapper: searches with k >= threshold stall for ``delay_s`` —
+    two request groups with very different per-batch cost."""
+
+    def __init__(self, inner, wide_k, delay_s):
+        self.inner = inner
+        self.wide_k = wide_k
+        self.delay_s = delay_s
+
+    def search(self, queries, k, **kw):
+        import time
+        if k >= self.wide_k:
+            time.sleep(self.delay_s)
+        return self.inner.search(queries, k, **kw)
+
+    def __len__(self):
+        return len(self.inner)
+
+
+def test_engine_latency_attributed_per_batch_not_per_drain(kb):
+    """A cheap request answered by the first micro-batch of a drain must
+    not be charged for an expensive batch that happens to share the same
+    drain call: latency stamps at the request's own last batch."""
+    delay = 0.25
+    idx = _SlowOnWideK(DenseIndex(kb.docs), wide_k=9, delay_s=delay)
+    engine = ServeEngine(idx, k=5, batcher=MicroBatcher(max_batch=64))
+    q = np.asarray(kb.queries[:4])
+    r_cheap = engine.submit(q)              # k=5 group: fast, drains first
+    r_slow = engine.submit(q, k=9)          # k=9 group: sleeps in search
+    results = engine.drain()
+    assert engine.batches_served == 2
+    assert results[r_slow].latency_s >= delay
+    # before the fix the cheap request inherited the whole drain's wall
+    # time (>= delay); now it sees only its own fast batch
+    assert results[r_cheap].latency_s < delay / 2
+    # the request-level collector recorded both, separately
+    s = engine.stats()
+    assert s["request_count"] == 2
+    assert s["request_p99_ms"] >= delay * 1000.0
+
+
+def test_engine_stats_conservation_on_every_snapshot(kb):
+    """Multi-producer stress: counters are mutated under the engine lock,
+    so *every* stats() snapshot satisfies exact request conservation
+    (submitted == served + pending + inflight) — not only at quiesce."""
+    idx = DenseIndex(kb.docs)
+    engine = ServeEngine(idx, k=5, batcher=MicroBatcher(max_batch=32))
+    queries = np.asarray(kb.queries)
+    n_threads, per_thread = 6, 40
+    stop = threading.Event()
+    violations = []
+
+    def producer(t):
+        rng = np.random.default_rng(t)
+        for _ in range(per_thread):
+            n = int(rng.integers(1, 6))
+            off = int(rng.integers(0, 200))
+            engine.submit(queries[off: off + n])
+
+    def watcher():
+        while not stop.is_set():
+            s = engine.stats()
+            req_balance = s["requests_submitted"] - (
+                s["requests_served"] + s["pending_requests"]
+                + s["inflight_requests"])
+            if req_balance != 0:
+                violations.append(("requests", s))
+            # row-level conservation is an inequality mid-drain (a half-
+            # served multi-batch request counts rows on both sides) but
+            # may never go negative
+            row_balance = s["queries_submitted"] - (
+                s["queries_served"] + s["pending_rows"]
+                + s["inflight_rows"])
+            if row_balance > 0:
+                violations.append(("rows", s))
+
+    threads = [threading.Thread(target=producer, args=(t,))
+               for t in range(n_threads)]
+    w = threading.Thread(target=watcher)
+    w.start()
+    for th in threads:
+        th.start()
+    while any(th.is_alive() for th in threads) or engine.pending:
+        engine.drain()
+    for th in threads:
+        th.join()
+    engine.drain()
+    stop.set()
+    w.join()
+    assert not violations, violations[:3]
+    s = engine.stats()
+    assert s["requests_submitted"] == n_threads * per_thread
+    assert s["requests_served"] == s["requests_submitted"]   # quiesce
+    assert s["queries_served"] == s["queries_submitted"]
+    assert s["pending_requests"] == s["inflight_requests"] == 0
+    assert s["request_count"] == s["requests_served"]
+
+
+def test_latency_stats_thread_safe_record_vs_summary():
+    """record() racing summary()/merge() must never crash or produce an
+    inconsistent window (the pre-fix list could resize mid-read)."""
+    ls = LatencyStats(window=256)
+    stop = threading.Event()
+    errors = []
+
+    def writer():
+        i = 0
+        while not stop.is_set():
+            ls.record(i * 1e-6)
+            i += 1
+
+    def reader():
+        while not stop.is_set():
+            try:
+                s = ls.summary()
+                assert s["count"] >= 0
+                LatencyStats.merge([ls, LatencyStats()])
+                ls.percentile(99)
+            except Exception as e:          # pragma: no cover
+                errors.append(e)
+                return
+
+    ths = [threading.Thread(target=writer) for _ in range(2)] + \
+        [threading.Thread(target=reader) for _ in range(2)]
+    for t in ths:
+        t.start()
+    import time
+    time.sleep(0.3)
+    stop.set()
+    for t in ths:
+        t.join()
+    assert not errors
+    assert len(ls.samples) <= 256
+
+
+# ---------------------------------------------------------------------------
+# adaptive micro-batch sizing
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_batcher_follows_depth():
+    from repro.serve import AdaptiveBatcher
+    b = AdaptiveBatcher(min_batch=8, max_batch=128)
+    assert b.batch_cap == 8                     # idle: smallest bucket
+    assert b.observe_depth(3) == 8              # clamped up to min_batch
+    assert b.observe_depth(20) == 32            # pow2 round-up
+    assert b.observe_depth(1000) == 128         # clamped to max_batch
+    assert b.observe_depth(64) == 64
+    with pytest.raises(ValueError):
+        AdaptiveBatcher(min_batch=0)
+    with pytest.raises(ValueError):
+        AdaptiveBatcher(min_batch=64, max_batch=32)
+
+
+def test_adaptive_batcher_shapes_stay_pow2(kb):
+    """Under a deep queue the adaptive cap widens and the formed batches
+    use it; under a shallow queue they shrink — but every padded shape is
+    still a power-of-two bucket."""
+    from repro.serve import AdaptiveBatcher
+    b = AdaptiveBatcher(min_batch=8, max_batch=64)
+    rows = [(i, np.ones((10, 4), np.float32)) for i in range(10)]  # 100 rows
+    b.observe_depth(100)
+    deep = b.form(rows)
+    assert max(mb.queries.shape[0] for mb in deep) == 64
+    b.observe_depth(10)
+    shallow = b.form([(0, np.ones((10, 4), np.float32))])
+    assert [mb.queries.shape[0] for mb in shallow] == [16]
+    for mb in deep + shallow:
+        assert mb.queries.shape[0] & (mb.queries.shape[0] - 1) == 0
+
+
+def test_engine_drives_adaptive_batcher(kb):
+    """The engine reports popped depth to an adaptive batcher before
+    forming batches: a deep backlog widens the cap with no manual step."""
+    from repro.serve import AdaptiveBatcher
+    idx = DenseIndex(kb.docs)
+    b = AdaptiveBatcher(min_batch=8, max_batch=64)
+    engine = ServeEngine(idx, k=5, batcher=b)
+    queries = np.asarray(kb.queries)
+    engine.submit(queries[:2])
+    engine.drain()
+    assert b.batch_cap == 8                     # 2 rows popped → min bucket
+    for r in range(10):
+        engine.submit(queries[r * 10: r * 10 + 10])
+    engine.drain()                              # 100 rows popped
+    assert b.batch_cap == 64

@@ -567,3 +567,122 @@ def test_mid_traffic_update_never_serves_stale_delete(corpus):
         np.testing.assert_array_equal(res.ids, np.asarray(oi))
         np.testing.assert_allclose(res.scores, np.asarray(ov),
                                    rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# per-request nprobe through the front door on mutable (segmented) indexes
+# ---------------------------------------------------------------------------
+
+
+def make_mutable_ivf(corpus, **spec_kw):
+    spec = IndexSpec(method="pca_int8", dim=16, backend="jnp", post=False,
+                     ivf=(8, 4), mutable=True, **spec_kw)
+    return build_index(spec, jnp.asarray(corpus["docs1"]),
+                       jnp.asarray(corpus["queries"]))
+
+
+def test_service_nprobe_on_mutable_ivf(corpus):
+    """SegmentedIndex delegates its IVF main's probe width, so a
+    per-request nprobe must flow through service.query exactly as it does
+    on a bare IVF index — including after live updates and compaction."""
+    q = corpus["queries"][:8]
+    idx = make_mutable_ivf(corpus)
+    with RetrievalService() as svc:
+        svc.register("kb", idx)
+        res = svc.query(q, index="kb", k=K, nprobe=8).result(30)
+        want_s, want_i = idx.search(q, K, nprobe=8)
+        np.testing.assert_array_equal(res.ids, np.asarray(want_i))
+        # narrow probe is a genuinely different (approximate) answer
+        narrow = svc.query(q, index="kb", k=K, nprobe=1).result(30)
+        _, want_n = idx.search(q, K, nprobe=1)
+        np.testing.assert_array_equal(narrow.ids, np.asarray(want_n))
+
+        # survives live churn: delta segments + tombstones on the side
+        svc.update("kb", add=corpus["docs2"][:30], delete=[2, 5])
+        res = svc.query(q, index="kb", k=K, nprobe=8).result(30)
+        _, want_u = idx.search(q, K, nprobe=8)
+        np.testing.assert_array_equal(res.ids, np.asarray(want_u))
+
+        # and compaction: the folded index is again IVF-backed
+        svc.compact("kb")
+        res = svc.query(q, index="kb", k=K, nprobe=8).result(30)
+
+
+def test_service_nprobe_rejected_on_non_ivf_mutable(corpus):
+    """A mutable index whose main is flat has no probe width: the
+    override must be rejected at submit, not silently ignored."""
+    spec = IndexSpec(method="pca_int8", dim=16, backend="jnp", post=False,
+                     mutable=True)
+    idx = build_index(spec, jnp.asarray(corpus["docs1"]),
+                      jnp.asarray(corpus["queries"]))
+    with RetrievalService() as svc:
+        svc.register("kb", idx)
+        with pytest.raises(ValueError, match="nprobe"):
+            svc.query(corpus["queries"][:4], index="kb", nprobe=4)
+        # the rejected request must not leak admission budget
+        assert svc.pending_queries == 0
+
+
+# ---------------------------------------------------------------------------
+# admission control: exact at the bound under concurrent producers
+# ---------------------------------------------------------------------------
+
+
+def test_admission_exact_at_bound_under_contention(corpus):
+    """The depth check and the counter bump are one atomic step: with the
+    dispatcher stopped, N concurrent 1-row producers racing for a bound
+    of B admit *exactly* B requests — never one past the bound, and never
+    a rejection while room remains."""
+    bound = 16
+    svc = RetrievalService(start=False, max_pending_queries=bound)
+    svc.register("kb", DenseIndex(jnp.asarray(corpus["docs1"])))
+    n_threads, per_thread = 8, 8            # 64 competing rows for 16 slots
+    admitted, rejected = [], []
+    gate = threading.Barrier(n_threads)
+
+    def producer(t):
+        gate.wait()
+        for i in range(per_thread):
+            try:
+                h = svc.query(corpus["queries"][t: t + 1], index="kb")
+                admitted.append(h)
+            except QueueFull:
+                rejected.append((t, i))
+
+    threads = [threading.Thread(target=producer, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert len(admitted) == bound               # exactly at the bound
+    assert len(rejected) == n_threads * per_thread - bound
+    assert svc.pending_queries == bound
+    s = svc.stats()
+    assert s["requests_admitted"] == bound
+    assert s["requests_rejected"] == len(rejected)
+    assert s["queue_high_water"] == bound
+
+    # below the bound the service must never reject: drain, then refill
+    assert svc.drain_once() == bound
+    for h in admitted:
+        h.result(timeout=30)
+    for i in range(bound):                      # sequential: full room again
+        svc.query(corpus["queries"][i: i + 1], index="kb")
+    assert svc.pending_queries == bound
+    svc.close()
+
+
+def test_admission_multirow_blocks_never_split_the_bound(corpus):
+    """A block either fits whole or is rejected whole — partial admission
+    would strand rows."""
+    svc = RetrievalService(start=False, max_pending_queries=10)
+    svc.register("kb", DenseIndex(jnp.asarray(corpus["docs1"])))
+    svc.query(corpus["queries"][:6], index="kb")        # 6 of 10
+    with pytest.raises(QueueFull):
+        svc.query(corpus["queries"][:5], index="kb")    # 11 would overflow
+    assert svc.pending_queries == 6                      # untouched
+    svc.query(corpus["queries"][:4], index="kb")        # exactly fills
+    assert svc.pending_queries == 10
+    svc.drain_once()
+    svc.close()
