@@ -31,6 +31,7 @@ import json
 import os
 import subprocess
 import sys
+import tempfile
 import time
 
 import numpy as np
@@ -38,7 +39,8 @@ import numpy as np
 import threading
 
 from repro.data import make_dpr_like_kb
-from repro.retrieval import IndexSpec, build_index, recall_at_k
+from repro.retrieval import (IndexSpec, build_index, load_index,
+                             load_index_meta, recall_at_k, save_index)
 from repro.serve import AdaptiveBatcher, MicroBatcher, QueryOptions, \
     RetrievalService, ServeEngine
 
@@ -59,6 +61,12 @@ RECALL_FLOOR = 0.80
 #: same index, same machine — a ratio, so runner speed cancels out
 SERVICE_RATIO_FLOOR = 0.40
 
+#: tiered-storage row, also a ratio: serving the chunked artifact with a
+#: 5% hot-tier budget (encoded lists 20× bigger than the budget) must
+#: sustain at least this fraction of the fully-resident qps under
+#: Zipf-skewed traffic — the cold tier may cost, not collapse
+TIERED_RATIO_FLOOR = 0.25
+
 #: metric name → direction ("higher" is better, or "lower")
 METRICS = {
     "exact_qps_int8": "higher", "ivf_qps_int8": "higher",
@@ -71,6 +79,9 @@ METRICS = {
     "service_qps": "higher",
     "service_exact_ratio": "higher",
     "service_p99_ms": "lower",
+    "tiered_qps_full": "higher",
+    "tiered_qps_cold": "higher",
+    "tiered_cold_ratio": "higher",
 }
 
 
@@ -243,6 +254,30 @@ def measure(n_docs: int, n_requests: int, batch: int, k: int,
     out["service_exact_ratio"] = out["service_qps"] / \
         max(out["exact_qps_int8"], 1e-9)
 
+    # the tiered-storage row: the int8 IVF index streamed to a chunked
+    # artifact, served fully resident vs at a 5% hot-tier budget, under
+    # Zipf-skewed traffic (what the LRU hot tier exists for).  A ratio,
+    # so runner speed cancels out.
+    from benchmarks.loadgen import zipf_weights
+    out["tiered_qps_full"] = 0.0
+    out["tiered_qps_cold"] = 0.0
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "kb.v3")
+        save_index(pairs["int8"][1], path, chunked=True)
+        enc = load_index_meta(path)["encoded_nbytes"]
+        rng = np.random.default_rng(7)
+        qz = queries[rng.choice(len(queries), size=len(queries),
+                                p=zipf_weights(len(queries), 1.1))]
+        for _ in range(repeats):
+            for key, resident in (("tiered_qps_full", "all"),
+                                  ("tiered_qps_cold", enc // 20)):
+                e = ServeEngine(load_index(path, resident=resident), k=k,
+                                batcher=MicroBatcher(max_batch=64))
+                qps, _, _ = serve_rounds(e, qz, n_requests, batch)
+                out[key] = max(out[key], qps)
+    out["tiered_cold_ratio"] = out["tiered_qps_cold"] / \
+        max(out["tiered_qps_full"], 1e-9)
+
     return out
 
 
@@ -277,6 +312,12 @@ def invariants(measured: dict) -> list[str]:
         failures.append(
             "service_cache_identical: cached result differed from the "
             "dispatch it replaced (must be bit-identical)")
+    tiered = measured["tiered_cold_ratio"]
+    if tiered < TIERED_RATIO_FLOOR:
+        failures.append(
+            f"tiered_cold_ratio: {tiered:.2f} < floor "
+            f"{TIERED_RATIO_FLOOR} (a 5% hot-tier budget may not cost "
+            "more than this much of fully-resident throughput)")
     return failures
 
 

@@ -1,0 +1,215 @@
+"""Tiered-storage benchmark: serve an index whose lists don't fit in RAM.
+
+    PYTHONPATH=src:. python benchmarks/tiered_bench.py           # full sweep
+    PYTHONPATH=src:. python benchmarks/tiered_bench.py --quick   # CI smoke
+
+The tentpole claim of the tiered store: the resident-set size of a
+chunked (v3) artifact is a *memory* knob, not a quality knob.  This
+driver sweeps the hot-tier byte budget from 100% of the encoded lists
+down to 5% and, at every point, serves the same open-loop Zipf/Poisson
+workload (PR 7's load generator) through the RetrievalService front
+door, measuring:
+
+* **recall@10** — identical at every fraction by construction (the
+  store-backed search is bit-identical to fully resident; ``--quick``
+  asserts the bits, every budget, before serving),
+* **p50/p99 latency + served qps** — the real cost of the cold tier:
+  misses page encoded chunks off disk mid-query, hits ride the LRU hot
+  tier that Zipf-skewed traffic keeps warm,
+* **tier hit rate** from ``stats()["...tier"]`` — how much of the
+  budgeted hot tier the workload actually exploits,
+* **zero lost requests** — tiering may slow a query, never drop it.
+
+At the smallest fraction the encoded storage exceeds the budget ≥ 4×
+(20× at 5%), which is the "serve an index bigger than RAM" regime the
+subsystem exists for.  Results land in ``BENCH_<git-sha>_tiered.json``.
+"""
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+from repro.data import make_dpr_like_kb
+from repro.retrieval import (IndexSpec, build_index, load_index,
+                             load_index_meta, recall_at_k, save_index)
+from repro.serve import AdaptiveBatcher, RetrievalService
+from repro.utils import human_bytes
+
+from benchmarks.ci_gate import git_sha
+from benchmarks.loadgen import (DEFAULT_MENU, build_workload, run_trial,
+                                warmup)
+
+#: hot-tier budget as a fraction of the artifact's encoded list bytes;
+#: 0.25 and below is the ≥ 4× over-budget regime the ISSUE gates on
+FRACTIONS = (1.0, 0.5, 0.25, 0.1, 0.05)
+
+
+def build_artifact(args, tmp):
+    """Fit the index once, stream it to a chunked v3 artifact, and
+    return (path, encoded_nbytes, pool, ref_ids, recall)."""
+    kb = make_dpr_like_kb(n_queries=args.pool, n_docs=args.n_docs,
+                          seed=args.seed)
+    pool = np.asarray(kb.queries, np.float32)
+    nlist = max(8, int(np.sqrt(args.n_docs)))
+    spec = IndexSpec(method=args.method, dim=args.dim, backend="jnp",
+                     post=False, ivf=(nlist, max(2, nlist // 4)),
+                     kmeans_iters=8, kmeans_init="++", balanced_lists=True)
+    idx = build_index(spec, kb.docs, kb.queries[:min(256, args.pool)])
+    path = os.path.join(tmp, "kb.v3")
+    save_index(idx, path, chunked=True)
+    meta = load_index_meta(path)
+    enc = meta["encoded_nbytes"]
+
+    # recall@10 at the serving probe width vs the index's own exact
+    # ranking (full probe over the same storage): IVF loss isolated from
+    # compression loss, and — by bit-identity — the same number at every
+    # residency fraction below
+    probe_q = pool[:min(128, len(pool))]
+    _, want = idx.search(probe_q, 10, nprobe=nlist)
+    _, got = idx.search(probe_q, 10)
+    rec = recall_at_k(np.asarray(got), np.asarray(want))
+    return path, enc, pool, rec
+
+
+def assert_bit_identity(path, budgets, pool, k=10):
+    """Every budget must reproduce the fully-resident search bit for bit
+    (ids and float32 score bits) before we bother timing anything."""
+    q = pool[:min(64, len(pool))]
+    full = load_index(path, resident="all")
+    want_v, want_i = full.search(q, k)
+    want_bits = np.asarray(want_v, np.float32).view(np.uint32)
+    for budget in budgets:
+        tiered = load_index(path, resident=budget)
+        got_v, got_i = tiered.search(q, k)
+        if not np.array_equal(np.asarray(got_i), np.asarray(want_i)):
+            raise SystemExit(f"budget {budget}: tiered ids diverged from "
+                             "fully resident")
+        got_bits = np.asarray(got_v, np.float32).view(np.uint32)
+        if not np.array_equal(got_bits, want_bits):
+            raise SystemExit(f"budget {budget}: tiered score bits diverged "
+                             "from fully resident")
+    print(f"  bit-identity: {len(budgets)} budgets x {len(q)} queries "
+          "identical to fully resident (ids + score bits)")
+
+
+def serve_point(args, path, resident, pool, rng):
+    """One sweep point: fresh service, register at the budget, warm up,
+    fire the open-loop trial, return (report, tier_stats_or_None)."""
+    svc = RetrievalService(
+        default_k=10, max_batch=args.max_batch,
+        max_pending_queries=args.max_pending,
+        batcher=AdaptiveBatcher(min_batch=8, max_batch=args.max_batch),
+        cache_rows=0)                  # every row must hit the store
+    try:
+        svc.register("kb", artifact=path, resident_budget=resident)
+        warmup(svc, "kb", pool, DEFAULT_MENU, args.max_batch, args.timeout)
+        wl = build_workload(rng, duration_s=args.duration,
+                            rows_per_s=args.qps, arrival="poisson",
+                            menu=DEFAULT_MENU, pool_size=len(pool),
+                            zipf_alpha=args.zipf)
+        r = run_trial(svc, "kb", pool, DEFAULT_MENU, wl,
+                      timeout_s=args.timeout)
+        row = svc.stats()["indexes"]["kb"]["versions"][1]
+        return r, row.get("tier")
+    finally:
+        svc.close()
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="serve a chunked artifact across resident-set budgets")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny corpus / short trials + bit-identity "
+                         "assertion at every budget (CI smoke)")
+    ap.add_argument("--method", default="pca_int8")
+    ap.add_argument("--dim", type=int, default=0)
+    ap.add_argument("--n-docs", type=int, default=0)
+    ap.add_argument("--pool", type=int, default=0,
+                    help="distinct queries in the Zipf pool")
+    ap.add_argument("--zipf", type=float, default=1.1)
+    ap.add_argument("--qps", type=float, default=0,
+                    help="offered rate in query rows/s")
+    ap.add_argument("--duration", type=float, default=0,
+                    help="seconds per sweep point")
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--max-pending", type=int, default=8192)
+    ap.add_argument("--timeout", type=float, default=120.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--output", default=None,
+                    help="result JSON (default BENCH_<sha>_tiered.json)")
+    args = ap.parse_args(argv)
+
+    args.n_docs = args.n_docs or (3000 if args.quick else 40_000)
+    args.pool = args.pool or (48 if args.quick else 512)
+    args.dim = args.dim or (64 if args.quick else 128)
+    args.duration = args.duration or (1.2 if args.quick else 6.0)
+    args.qps = args.qps or (250.0 if args.quick else 1500.0)
+
+    rng = np.random.default_rng(args.seed)
+    with tempfile.TemporaryDirectory() as tmp:
+        print(f"tiered_bench: {args.n_docs} docs, method={args.method} "
+              f"(dim {args.dim}), Zipf(a={args.zipf}) over {args.pool} "
+              f"queries, {args.duration:.1f}s @ {args.qps:.0f} rows/s "
+              "per point")
+        path, enc, pool, rec = build_artifact(args, tmp)
+        budgets = [int(f * enc) for f in FRACTIONS]
+        print(f"  encoded lists: {human_bytes(enc)}  "
+              f"(over-budget factor at 5%: {enc / budgets[-1]:.0f}x)")
+        print(f"  recall@10 vs own exact ranking: {rec:.3f} "
+              "(every fraction — tiering is bit-identical)\n")
+        assert enc >= 4 * budgets[2], "sweep must cover the >=4x regime"
+        if args.quick:
+            assert_bit_identity(path, budgets, pool)
+
+        print(f"  {'resident':>9s} {'budget':>10s} {'served':>8s} "
+              f"{'p50':>8s} {'p99':>9s} {'hit rate':>9s} "
+              f"{'resident bytes':>14s}  lost")
+        rows = []
+        for frac, budget in zip(FRACTIONS, budgets):
+            resident = "all" if frac >= 1.0 else budget
+            r, tier = serve_point(args, path, resident, pool, rng)
+            if r["lost"] or not r["conserved"]:
+                raise SystemExit(
+                    f"fraction {frac}: {r['lost']} lost requests / "
+                    f"conserved={r['conserved']} — tiering may never "
+                    "drop traffic")
+            hit = tier["hit_rate"] if tier else 1.0
+            res_bytes = tier["bytes_resident"] if tier else enc
+            print(f"  {frac:8.0%} {human_bytes(budget):>10s} "
+                  f"{r['served_rows_per_s']:7.0f}/s "
+                  f"{r['p50_ms']:7.1f}ms {r['p99_ms']:8.1f}ms "
+                  f"{hit:8.1%} {human_bytes(res_bytes):>14s}  "
+                  f"{r['lost']}")
+            rows.append({
+                "fraction": frac, "budget_bytes": budget,
+                "resident": "all" if frac >= 1.0 else "mmap",
+                "served_rows_per_s": r["served_rows_per_s"],
+                "p50_ms": r["p50_ms"], "p99_ms": r["p99_ms"],
+                "lost": r["lost"], "arrivals": r["arrivals"],
+                "recall_at_10": rec,
+                "tier": tier,
+            })
+
+        base = rows[0]["served_rows_per_s"]
+        cold = rows[-1]["served_rows_per_s"]
+        print(f"\n  cold-tier qps ratio (5% / fully resident): "
+              f"{cold / max(base, 1e-9):.2f}")
+        out_path = args.output or f"BENCH_{git_sha()}_tiered.json"
+        with open(out_path, "w") as f:
+            json.dump({"sha": git_sha(),
+                       "config": {"n_docs": args.n_docs,
+                                  "method": args.method, "dim": args.dim,
+                                  "zipf": args.zipf, "qps": args.qps,
+                                  "duration_s": args.duration,
+                                  "encoded_nbytes": enc},
+                       "rows": rows}, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"  wrote {out_path}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,6 +16,12 @@ scenario: new documents appended) is built into a second artifact, staged
 off the serving path, canaried against live traffic via shadow overlap,
 and promoted with zero downtime — requests keep flowing throughout and
 each one ranks entirely against the version it bound to.
+
+With ``--ivf-nlist`` the driver adds a third act: the refreshed KB is
+streamed to a *chunked* (v3) artifact and hot-swapped in with only a 25%
+hot-tier byte budget resident — the encoded inverted lists stay on disk,
+Zipf-skewed open-loop traffic (the PR-7 load generator) keeps the LRU hot
+tier warm, and the per-version ``stats()`` row reports the tier hit rate.
 """
 
 import argparse
@@ -27,9 +33,44 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data import make_dpr_like_kb
-from repro.retrieval import IndexSpec, build_index
+from repro.retrieval import (IndexSpec, build_index, load_index_meta,
+                             save_index)
 from repro.serve import QueryOptions, RetrievalService
 from repro.utils import human_bytes
+
+
+def serve_tiered(service, idx, tmp, queries):
+    """Act three: same KB, v3 chunked artifact, 25% resident budget."""
+    # the open-loop Zipf/Poisson generator lives in benchmarks/
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.loadgen import (DEFAULT_MENU, build_workload,
+                                    run_trial, warmup)
+
+    path = os.path.join(tmp, "kb_v3")
+    save_index(idx, path, chunked=True)
+    enc = load_index_meta(path)["encoded_nbytes"]
+    budget = max(1, enc // 4)
+    print(f"\ntiered swap: v3 chunked artifact ({human_bytes(enc)} encoded "
+          f"lists) staged at a 25% resident budget "
+          f"({human_bytes(budget)})")
+    service.stage("kb", artifact=path, resident_budget=budget)
+    live = service.promote("kb")
+    warmup(service, "kb", queries, DEFAULT_MENU, 64, 120.0)
+    wl = build_workload(np.random.default_rng(3), duration_s=1.0,
+                        rows_per_s=150.0, arrival="poisson",
+                        menu=DEFAULT_MENU, pool_size=len(queries),
+                        zipf_alpha=1.1)
+    r = run_trial(service, "kb", queries, DEFAULT_MENU, wl)
+    tier = service.stats()["indexes"]["kb"]["versions"][live]["tier"]
+    print(f"  served {r['admitted']} open-loop requests "
+          f"(p50={r['p50_ms']:.1f}ms p99={r['p99_ms']:.1f}ms, "
+          f"{r['lost']} lost)")
+    print(f"  tier: hit rate {tier['hit_rate']:.1%} "
+          f"({tier['hits']} hits, {tier['misses']} misses), "
+          f"{human_bytes(tier['bytes_resident'])} of "
+          f"{human_bytes(tier['budget_bytes'])} hot tier resident, "
+          f"{human_bytes(tier['bytes_read'])} paged from disk")
 
 
 def main(argv=None) -> None:
@@ -114,7 +155,7 @@ def main(argv=None) -> None:
             print(f"refresh after {served[0]} requests: building v2 "
                   f"(+{len(fresh.docs)} new docs) while serving continues")
             docs_v2 = jnp.concatenate([kb.docs, fresh.docs], axis=0)
-            build_artifact(docs_v2, path_v2, "v2")
+            idx_v2 = build_artifact(docs_v2, path_v2, "v2")
             service.stage("kb", artifact=path_v2, canary_every=2)
             stream(service, half, max(half + 1, three_q))
             canary = service.canary("kb")
@@ -136,6 +177,9 @@ def main(argv=None) -> None:
                   f"p99={stats['p99_ms']:.1f}ms  (CPU host)")
             print(f"  admission: {stats['pending_queries']} pending, "
                   f"{stats['requests_rejected']} rejected")
+
+            if ivf:
+                serve_tiered(service, idx_v2, tmp, queries)
 
 
 if __name__ == "__main__":

@@ -21,6 +21,8 @@ from repro.retrieval.segments import DriftMonitor, SegmentedIndex
 from repro.retrieval.sharded import ShardedCompressedIndex, ShardedIVFIndex
 from repro.retrieval.topk import (masked_topk_by_id, resolve_k,
                                   topk_score_then_id, topk_search)
+from repro.storage import (ArtifactError, ListStore, MmapStore,
+                           ResidentStore, is_chunked_artifact)
 
 __all__ = [
     "Index", "IndexSpec", "ShardSpec", "build_index", "load_index",
@@ -33,4 +35,6 @@ __all__ = [
     "make_dim_drop_scorer", "r_precision", "recall_at_k",
     "retrieved_relevant_counts",
     "masked_topk_by_id", "resolve_k", "topk_score_then_id", "topk_search",
+    "ArtifactError", "ListStore", "MmapStore", "ResidentStore",
+    "is_chunked_artifact",
 ]

@@ -33,6 +33,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import os
 from typing import Any, Optional, Protocol, Sequence, Tuple, Union, \
     runtime_checkable
 
@@ -44,14 +45,25 @@ from repro.core.pipeline import CompressionPipeline
 from repro.core.registry import (build_method, build_pipeline_from_spec,
                                  pipeline_spec)
 from repro.retrieval.index import CompressedIndex, DenseIndex
-from repro.retrieval.ivf import IVFFlatIndex, IVFIndex
+from repro.retrieval.ivf import IVFFlatIndex, IVFIndex, build_padded_lists
 from repro.retrieval.segments import SegmentedIndex, _Segment
 from repro.retrieval.sharded import (ShardedCompressedIndex, ShardedIVFIndex)
+from repro.storage.format import (ArtifactError, ChunkReader, ChunkWriter,
+                                  is_chunked_artifact, npz_member_nbytes)
+from repro.storage.store import MmapStore
 
 ARTIFACT_FORMAT = "repro-index"
-# version 2 adds the mutable-index layer: delta segments, tombstones, and
-# the monotonic doc-id allocator (version-1 artifacts still load)
-ARTIFACT_VERSION = 2
+# version 1: immutable .npz · version 2 adds the mutable-index layer
+# (delta segments, tombstones, doc-id allocator) · version 3 is the
+# chunked tiered layout (directory: manifest.json + per-list chunks.bin +
+# aux.npz, see repro.storage.format) — older artifacts all still load
+ARTIFACT_VERSION = 3
+#: what a v2 (mutable .npz) artifact stamps itself as
+SEGMENTED_NPZ_VERSION = 2
+
+#: ``resident="auto"`` loads fully resident up to this encoded size, and
+#: tiers (MmapStore at this budget) beyond it
+AUTO_RESIDENT_BYTES = 1 << 30
 
 #: stage-descriptor type: ``(transform class name, constructor kwargs)``
 StageSpec = Tuple[str, dict]
@@ -362,8 +374,8 @@ def _gather_pipeline_sd(data, types: Sequence[str],
                        for t, st, f in zip(types, per_stage, fitted)]}
 
 
-def save_index(index, path: str) -> None:
-    """Write the full index artifact (spec + state) to one ``.npz``.
+def save_index(index, path: str, *, chunked: bool = False) -> None:
+    """Write the full index artifact (spec + state).
 
     The artifact is self-contained: :func:`load_index` reconstructs a
     bit-identically-ranking index from it with no access to the raw corpus
@@ -373,7 +385,23 @@ def save_index(index, path: str) -> None:
     persists its delta segments, tombstone set, and monotonic doc-id
     allocator (format version 2); immutable indexes keep writing
     version-1 artifacts that older builds can still read.
+
+    ``chunked=True`` writes the v3 *tiered* layout instead of one
+    ``.npz``: a directory with per-inverted-list chunks streamed to disk
+    list-by-list (peak save RSS stays O(largest list)) that
+    :func:`load_index` can serve with a byte-budgeted hot tier
+    (``resident=``).  IVF indexes only (plain or under a
+    ``SegmentedIndex``); a store-backed (tiered) index *must* be saved
+    chunked — it has no resident storage to pack into an ``.npz``.
     """
+    main = index.main if isinstance(index, SegmentedIndex) else index
+    if chunked:
+        return _save_index_chunked(index, path)
+    if getattr(main, "store", None) is not None:
+        raise ValueError(
+            "store-backed (tiered) index cannot be packed into a .npz — "
+            "save_index(..., chunked=True) streams it to a v3 artifact, "
+            "or reload with resident='all' first")
     arrays: dict[str, np.ndarray] = {}
     meta: dict[str, Any] = {
         "format": ARTIFACT_FORMAT, "format_version": 1,
@@ -383,7 +411,7 @@ def save_index(index, path: str) -> None:
         _collect_index(index.main, arrays, meta)
         meta["main_kind"] = meta["kind"]
         meta["kind"] = "SegmentedIndex"
-        meta["format_version"] = ARTIFACT_VERSION
+        meta["format_version"] = SEGMENTED_NPZ_VERSION
         sd = index.state_dict()
         arrays["main_gids"] = np.asarray(sd["main_gids"], np.int32)
         arrays["tombstones"] = np.asarray(sd["tombstones"], np.int64)
@@ -409,6 +437,105 @@ def save_index(index, path: str) -> None:
         _collect_index(index, arrays, meta)
     arrays["__meta__"] = np.asarray(json.dumps(meta, sort_keys=True))
     np.savez(path, **arrays)
+
+
+def _chunked_header(ivf: IVFIndex, seg: Optional[SegmentedIndex],
+                    spec) -> tuple[dict, dict]:
+    """(meta, aux arrays) for a v3 artifact — same header fields as the v2
+    ``.npz`` writes, so load-side reconstruction is shared."""
+    aux: dict[str, np.ndarray] = {}
+    meta: dict[str, Any] = {
+        "format": ARTIFACT_FORMAT, "format_version": ARTIFACT_VERSION,
+        "spec": spec.to_dict() if spec is not None else None,
+        "kind": type(ivf).__name__,
+    }
+    pipeline = _pipeline_of(ivf)
+    meta["stages"] = pipeline_spec(pipeline) if pipeline is not None else []
+    meta["stage_fitted"] = _flatten_pipeline_sd(ivf.pipeline.state_dict(),
+                                                aux)
+    aux["centroids"] = np.asarray(ivf.centroids)
+    meta["index"] = {
+        "sim": ivf.sim, "backend": ivf.backend,
+        "n_docs": int(ivf._n_docs), "dim": int(ivf._dim),
+        "version": int(ivf._version),
+        "scorer_extra": ivf.scorer.extra_state(),
+        "nlist": int(ivf.nlist),
+        "nlist_requested": int(ivf._nlist_requested),
+        "nprobe": int(ivf.nprobe),
+        "residual": bool(ivf.residual),
+        "kmeans_init": str(ivf.kmeans_init),
+        "balanced": bool(ivf.balanced),
+        "kmeans_iters": int(ivf.kmeans_iters),
+    }
+    if seg is not None:
+        meta["main_kind"] = meta["kind"]
+        meta["kind"] = "SegmentedIndex"
+        st = seg._state
+        aux["main_gids"] = np.asarray(seg._main_gids, np.int32)
+        aux["tombstones"] = np.flatnonzero(st.tomb).astype(np.int64)
+        for i, s in enumerate(st.segments):
+            aux[f"seg:{i}:storage"] = np.asarray(s.storage)
+            aux[f"seg:{i}:gids"] = np.asarray(s.gids, np.int32)
+            if s.labels is not None:
+                aux[f"seg:{i}:labels"] = np.asarray(s.labels, np.int32)
+        drift_sd = seg.drift.state_dict()
+        if drift_sd["sum"] is not None:
+            aux["drift:sum"] = np.asarray(drift_sd["sum"])
+        meta["segmented"] = {
+            "next_gid": int(st.next_gid),
+            "n_segments": len(st.segments),
+            "n_live": len(seg),
+            "drift": {"n_added": int(drift_sd["n_added"]),
+                      "norm_sum": float(drift_sd["norm_sum"])},
+            "drift_threshold": seg.drift_threshold,
+            "max_delta_fraction": seg.max_delta_fraction,
+        }
+    return meta, aux
+
+
+def _write_chunked(path: str, meta: dict, aux: dict, rows_iter, *,
+                   storage_dtype, storage_width: int, n_lists: int) -> dict:
+    """Stream ``(rows, ids)`` per list into a v3 artifact directory."""
+    writer = ChunkWriter(path, storage_dtype=storage_dtype,
+                         storage_width=storage_width)
+    n = 0
+    for rows, ids in rows_iter:
+        writer.write_list(rows, ids)
+        n += 1
+    if n != n_lists:
+        raise ValueError(f"chunk stream yielded {n} lists, expected "
+                         f"{n_lists}")
+    return writer.finish(meta, aux)
+
+
+def _save_index_chunked(index, path: str) -> None:
+    seg = index if isinstance(index, SegmentedIndex) else None
+    ivf = seg.main if seg is not None else index
+    if not isinstance(ivf, IVFIndex):
+        raise TypeError(
+            "chunked (v3) artifacts lay out per-IVF-list storage — "
+            f"{type(index).__name__} has no inverted lists; save it "
+            "without chunked=True")
+    if ivf.centroids is None or (ivf.storage is None and ivf.store is None):
+        raise ValueError("cannot save an empty index")
+    meta, aux = _chunked_header(ivf, seg, index.spec)
+    if ivf.store is not None:
+        rows_iter = ((rows, ids) for _, rows, ids in ivf.store.iter_lists())
+        dtype, width = ivf.store.storage_dtype, ivf.store.storage_width
+    else:
+        lists_np = np.asarray(ivf.lists)
+        storage_np = np.asarray(ivf.storage)
+        dtype, width = storage_np.dtype, int(storage_np.shape[1])
+
+        def _iter_resident():
+            for lid in range(ivf.nlist):
+                members = lists_np[lid]
+                members = members[members >= 0]
+                yield storage_np[members], members
+
+        rows_iter = _iter_resident()
+    _write_chunked(path, meta, aux, rows_iter, storage_dtype=dtype,
+                   storage_width=width, n_lists=ivf.nlist)
 
 
 def _collect_index(index, arrays: dict, meta: dict) -> None:
@@ -473,39 +600,54 @@ def _collect_index(index, arrays: dict, meta: dict) -> None:
         raise TypeError(f"don't know how to save {kind}")
 
 
-def _rebuild_ivf(meta: dict, data, pipeline: CompressionPipeline,
-                 backend: Optional[str], kind: str) -> IVFIndex:
+def _make_ivf(meta: dict, pipeline: CompressionPipeline,
+              backend: Optional[str], kind: str) -> IVFIndex:
+    """Construct the (unloaded) IVF shell an artifact header describes."""
     m = meta["index"]
     if kind == "IVFFlatIndex":
-        ivf = IVFFlatIndex(nlist=m["nlist_requested"], nprobe=m["nprobe"],
-                           sim=m["sim"], kmeans_iters=m["kmeans_iters"])
-    else:
-        ivf = IVFIndex(pipeline, nlist=m["nlist_requested"],
-                       nprobe=m["nprobe"], sim=m["sim"],
-                       backend=backend or m["backend"],
-                       kmeans_iters=m["kmeans_iters"],
-                       residual=bool(m.get("residual", False)),
-                       kmeans_init=str(m.get("kmeans_init", "random")),
-                       balanced=bool(m.get("balanced", False)))
-    ivf.load_state_dict({
+        return IVFFlatIndex(nlist=m["nlist_requested"], nprobe=m["nprobe"],
+                            sim=m["sim"], kmeans_iters=m["kmeans_iters"])
+    return IVFIndex(pipeline, nlist=m["nlist_requested"],
+                    nprobe=m["nprobe"], sim=m["sim"],
+                    backend=backend or m["backend"],
+                    kmeans_iters=m["kmeans_iters"],
+                    residual=bool(m.get("residual", False)),
+                    kmeans_init=str(m.get("kmeans_init", "random")),
+                    balanced=bool(m.get("balanced", False)))
+
+
+def _ivf_sd_common(meta: dict, data) -> dict:
+    """The storage-independent slice of an IVF ``load_state_dict`` dict
+    (shared between the ``.npz`` and chunked load paths — ``data`` only
+    needs ``.files`` and ``__getitem__``, so an ``aux.npz`` handle works)."""
+    m = meta["index"]
+    return {
         "pipeline": _gather_pipeline_sd(data, [n for n, _ in meta["stages"]],
                                         meta["stage_fitted"]),
-        "storage": data["storage"],
         "centroids": data["centroids"],
-        "lists": data["lists"],
-        "labels": data["labels"] if "labels" in data.files else None,
         "scorer_extra": m.get("scorer_extra", {}),
         "nlist": m["nlist"], "nlist_requested": m["nlist_requested"],
         "nprobe": m["nprobe"], "n_docs": m["n_docs"], "dim": m["dim"],
         "residual": bool(m.get("residual", False)),
         "kmeans_init": str(m.get("kmeans_init", "random")),
         "balanced": bool(m.get("balanced", False)),
-        "version": m.get("version", 0)})
+        "version": m.get("version", 0)}
+
+
+def _rebuild_ivf(meta: dict, data, pipeline: CompressionPipeline,
+                 backend: Optional[str], kind: str) -> IVFIndex:
+    ivf = _make_ivf(meta, pipeline, backend, kind)
+    ivf.load_state_dict({
+        **_ivf_sd_common(meta, data),
+        "storage": data["storage"],
+        "lists": data["lists"],
+        "labels": data["labels"] if "labels" in data.files else None})
     return ivf
 
 
 def load_index(path: str, *, mesh=None, backend: Optional[str] = None,
-               expect: Optional[type] = None):
+               expect: Optional[type] = None,
+               resident: Union[str, int] = "auto"):
     """Reconstruct an index from a :func:`save_index` artifact.
 
     Cold-start path: no raw corpus, no re-fit, no re-encode — rankings are
@@ -515,10 +657,58 @@ def load_index(path: str, *, mesh=None, backend: Optional[str] = None,
     (e.g. load a TPU-built artifact with ``backend="jnp"`` on a host).
     ``expect`` asserts the artifact kind (used by the per-class ``load``
     classmethods).
+
+    ``resident`` governs residency for chunked (v3) artifacts:
+
+    * ``"all"`` — materialise every inverted list (today's behaviour:
+      the result is bit-identical to loading the equivalent ``.npz``,
+      fused-kernel capable, and owns no store).
+    * an ``int`` — byte budget for an :class:`~repro.storage.store.
+      MmapStore` hot tier; the encoded lists stay on disk behind an
+      ``np.memmap`` and searches stream through the store
+      (bit-identical results at any budget).
+    * ``"auto"`` (default) — ``"all"`` when the encoded storage fits
+      ``AUTO_RESIDENT_BYTES``, else a tier at that budget.
+
+    ``.npz`` (v1/v2) artifacts load exactly as before; ``resident`` is
+    ignored for them.
     """
+    if is_chunked_artifact(path):
+        if mesh is not None:
+            raise ValueError("chunked (v3) artifacts are single-host — "
+                             "load resident='all' and shard explicitly")
+        return _load_index_chunked(path, backend=backend, expect=expect,
+                                   resident=resident)
     with np.load(path, allow_pickle=False) as data:
         return _load_index_from(data, path, mesh=mesh, backend=backend,
                                 expect=expect)
+
+
+def _resolve_resident(resident: Union[str, int],
+                      encoded_nbytes: int) -> Optional[int]:
+    """``None`` = load fully resident; an int = MmapStore byte budget."""
+    if isinstance(resident, str):
+        if resident == "all":
+            return None
+        if resident == "auto":
+            return (None if encoded_nbytes <= AUTO_RESIDENT_BYTES
+                    else AUTO_RESIDENT_BYTES)
+        raise ValueError(f"resident must be 'auto', 'all', or a byte "
+                         f"budget, got {resident!r}")
+    if isinstance(resident, bool) or int(resident) < 0:
+        raise ValueError(f"resident byte budget must be ≥ 0, "
+                         f"got {resident!r}")
+    return int(resident)
+
+
+def _validate_header(meta: dict, path: str) -> None:
+    if meta.get("format") != ARTIFACT_FORMAT:
+        raise ValueError(f"{path}: unknown artifact format "
+                         f"{meta.get('format')!r}")
+    if meta.get("format_version", 0) > ARTIFACT_VERSION:
+        raise ValueError(
+            f"{path}: artifact version {meta['format_version']} is newer "
+            f"than this build ({ARTIFACT_VERSION})")
 
 
 def _parse_meta(data, path: str) -> dict:
@@ -527,38 +717,63 @@ def _parse_meta(data, path: str) -> dict:
         raise ValueError(f"{path} is not a {ARTIFACT_FORMAT} artifact "
                          "(no __meta__ entry)")
     meta = json.loads(data["__meta__"].item())
-    if meta.get("format") != ARTIFACT_FORMAT:
-        raise ValueError(f"{path}: unknown artifact format "
-                         f"{meta.get('format')!r}")
-    if meta.get("format_version", 0) > ARTIFACT_VERSION:
-        raise ValueError(
-            f"{path}: artifact version {meta['format_version']} is newer "
-            f"than this build ({ARTIFACT_VERSION})")
+    _validate_header(meta, path)
     return meta
+
+
+def _is_seg_storage(name: str) -> bool:
+    return name.startswith("seg:") and name.endswith(":storage")
 
 
 def load_index_meta(path: str) -> dict:
     """Read an artifact's identity header without materialising any arrays.
 
     ``.npz`` members decompress lazily, so this touches only the JSON
-    header — the serving registry (:mod:`repro.serve.router`) uses it to
-    label a staged/registered version (kind, corpus size, spec) before, or
-    instead of, paying the full :func:`load_index` cost.  ``fingerprint``
-    hashes the canonical header: two artifacts agree iff their recipe,
-    shape, and scalar state agree (storage bytes are *not* hashed).
+    header plus per-member ``.npy`` headers — the serving registry
+    (:mod:`repro.serve.router`) uses it to label a staged/registered
+    version (kind, corpus size, spec) before, or instead of, paying the
+    full :func:`load_index` cost.  ``fingerprint`` hashes the canonical
+    header: two artifacts agree iff their recipe, shape, and scalar state
+    agree (storage bytes are *not* hashed).
+
+    Size accounting (matches the on-disk members exactly, see
+    ``tests/test_storage.py``): ``encoded_nbytes`` is the encoded document
+    storage — the main layer plus any delta segments; ``aux_nbytes`` is
+    everything else an index must hold resident (router centroids, list
+    ids, pipeline state, allocator arrays).  ``artifact_version`` is the
+    on-disk format version (1/2 = ``.npz``, 3 = chunked directory).
     """
-    with np.load(path, allow_pickle=False) as data:
-        meta = _parse_meta(data, path)
+    if is_chunked_artifact(path):
+        reader = ChunkReader(path)       # manifest only — map stays closed
+        meta = reader.meta
+        _validate_header(meta, path)
+        aux_sizes = npz_member_nbytes(os.path.join(path, "aux.npz"))
+        seg_storage = sum(v for k, v in aux_sizes.items()
+                          if _is_seg_storage(k))
+        encoded = reader.encoded_nbytes + seg_storage
+        aux = (sum(aux_sizes.values()) - seg_storage
+               + int(reader.manifest["ids_nbytes"]))
+    else:
+        with np.load(path, allow_pickle=False) as data:
+            meta = _parse_meta(data, path)
+        sizes = npz_member_nbytes(path)
+        encoded = sizes.get("storage", 0) + sum(
+            v for k, v in sizes.items() if _is_seg_storage(k))
+        aux = sum(v for k, v in sizes.items()
+                  if k != "__meta__") - encoded
     m = meta.get("index") or {}
     seg = meta.get("segmented")
     return {
         "format_version": meta.get("format_version"),
+        "artifact_version": meta.get("format_version"),
         "kind": meta["kind"],
         "spec": meta.get("spec"),
         "n_docs": seg["n_live"] if seg is not None else m.get("n_docs"),
         "dim": m.get("dim"),
         "index_version": m.get("version", 0),
         "mutable": seg is not None,
+        "encoded_nbytes": int(encoded),
+        "aux_nbytes": int(aux),
         "fingerprint": hashlib.sha256(
             json.dumps(meta, sort_keys=True).encode()).hexdigest()[:16],
     }
@@ -576,34 +791,107 @@ def _load_index_from(data, path: str, *, mesh, backend, expect):
                           mesh=mesh, backend=backend)
         if meta.get("spec") is not None:
             main.spec = IndexSpec.from_dict(meta["spec"])
-        seg_info = meta["segmented"]
-        idx = SegmentedIndex(
-            main,
-            drift_threshold=seg_info.get("drift_threshold", 0.35),
-            max_delta_fraction=seg_info.get("max_delta_fraction", 0.25))
-        segments = []
-        for i in range(seg_info["n_segments"]):
-            lkey = f"seg:{i}:labels"
-            labels = (np.asarray(data[lkey], np.int32)
-                      if lkey in data.files else None)
-            segments.append(_Segment(
-                jnp.asarray(data[f"seg:{i}:storage"]),
-                np.asarray(data[f"seg:{i}:gids"], np.int32), labels))
-        next_gid = int(seg_info["next_gid"])
-        tomb = np.zeros(next_gid, bool)
-        tomb[np.asarray(data["tombstones"], np.int64)] = True
-        drift_m = seg_info["drift"]
-        idx._restore(
-            main_gids=np.asarray(data["main_gids"], np.int32), tomb=tomb,
-            next_gid=next_gid, segments=segments,
-            drift_sd={"n_added": drift_m["n_added"],
-                      "norm_sum": drift_m["norm_sum"],
-                      "sum": (data["drift:sum"]
-                              if "drift:sum" in data.files else None)})
+        idx = _wrap_segmented(main, meta, data)
     else:
         idx = _load_core(kind, meta, data, path, pipeline, mesh=mesh,
                          backend=backend)
 
+    if meta.get("spec") is not None:
+        idx.spec = IndexSpec.from_dict(meta["spec"])
+    if expect is not None and not isinstance(idx, expect):
+        raise TypeError(f"{path} holds a {kind}, expected "
+                        f"{expect.__name__} — use api.load_index for "
+                        "kind-dispatching loads")
+    return idx
+
+
+def _wrap_segmented(main, meta: dict, data) -> SegmentedIndex:
+    """Restore the mutable layer (segments/tombstones/allocator/drift)
+    around a loaded main — ``data`` is the v2 ``.npz`` handle or a v3
+    ``aux.npz`` handle (same member names)."""
+    seg_info = meta["segmented"]
+    idx = SegmentedIndex(
+        main,
+        drift_threshold=seg_info.get("drift_threshold", 0.35),
+        max_delta_fraction=seg_info.get("max_delta_fraction", 0.25))
+    segments = []
+    for i in range(seg_info["n_segments"]):
+        lkey = f"seg:{i}:labels"
+        labels = (np.asarray(data[lkey], np.int32)
+                  if lkey in data.files else None)
+        segments.append(_Segment(
+            jnp.asarray(data[f"seg:{i}:storage"]),
+            np.asarray(data[f"seg:{i}:gids"], np.int32), labels))
+    next_gid = int(seg_info["next_gid"])
+    tomb = np.zeros(next_gid, bool)
+    tomb[np.asarray(data["tombstones"], np.int64)] = True
+    drift_m = seg_info["drift"]
+    idx._restore(
+        main_gids=np.asarray(data["main_gids"], np.int32), tomb=tomb,
+        next_gid=next_gid, segments=segments,
+        drift_sd={"n_added": drift_m["n_added"],
+                  "norm_sum": drift_m["norm_sum"],
+                  "sum": (data["drift:sum"]
+                          if "drift:sum" in data.files else None)})
+    return idx
+
+
+def _load_index_chunked(path: str, *, backend, expect,
+                        resident: Union[str, int]):
+    """Load a v3 chunked artifact at the requested residency."""
+    reader = ChunkReader(path)
+    meta = reader.meta
+    _validate_header(meta, path)
+    kind = meta["kind"]
+    main_kind = meta.get("main_kind", kind)
+    if main_kind not in ("IVFIndex", "IVFFlatIndex"):
+        raise ValueError(f"{path}: chunked artifact holds unsupported "
+                         f"kind {main_kind!r}")
+    pipeline = (build_pipeline_from_spec(meta["stages"])
+                if meta["stages"] else CompressionPipeline([]))
+    m = meta["index"]
+    budget = _resolve_resident(resident, reader.encoded_nbytes)
+    ivf = _make_ivf(meta, pipeline, backend, main_kind)
+    with reader.load_aux() as aux:
+        sd = _ivf_sd_common(meta, aux)
+        if budget is None:
+            # fully resident: scatter chunks back into row-major storage —
+            # bit-identical to the v2 load (lists rebuilt from the same
+            # labels), fused-kernel capable, no store attached
+            storage = np.empty((m["n_docs"], reader.storage_width),
+                               reader.storage_dtype)
+            labels = np.empty(m["n_docs"], np.int32)
+            filled = 0
+            for lid, rows, ids in reader.iter_lists():
+                storage[ids] = rows
+                labels[ids] = lid
+                filled += int(ids.shape[0])
+            if filled != m["n_docs"]:
+                raise ArtifactError(
+                    f"{path}: chunks hold {filled} rows, header says "
+                    f"{m['n_docs']}")
+            reader.close()
+            ivf.load_state_dict({
+                **sd, "storage": storage,
+                "lists": build_padded_lists(labels, int(m["nlist"])),
+                "labels": labels})
+        else:
+            ivf.load_state_dict({**sd, "storage": None, "lists": None,
+                                 "labels": None})
+            ivf.store = MmapStore(reader, budget)
+            ivf._store_fns = None
+        if meta.get("spec") is not None:
+            ivf.spec = IndexSpec.from_dict(meta["spec"])
+        if kind == "SegmentedIndex":
+            idx = _wrap_segmented(ivf, meta, aux)
+            if ivf.store is not None:
+                # delta rows route to these lists on every probe that can
+                # reach them — keep the write-hot head unevictable
+                for s in idx._state.segments:
+                    if s.labels is not None:
+                        ivf.store.pin(np.unique(s.labels).tolist())
+        else:
+            idx = ivf
     if meta.get("spec") is not None:
         idx.spec = IndexSpec.from_dict(meta["spec"])
     if expect is not None and not isinstance(idx, expect):

@@ -188,6 +188,8 @@ class IVFIndex:
         self._search_fn = None
         self._list_layout = None       # lazy list-major (version, stor, ids)
         self._fused_reference_only = False   # tests: force the jnp ref mirror
+        self.store = None              # ListStore when tiered (storage=None)
+        self._store_fns = None         # lazy (route_fn, step_fn) jit pair
 
     # -- construction -----------------------------------------------------
     @classmethod
@@ -259,6 +261,8 @@ class IVFIndex:
         self._source = None    # fresh fit: no longer a shared-storage view
         self._search_fn = None
         self._list_layout = None
+        self.store = None      # a fresh fit is fully resident
+        self._store_fns = None
         return self
 
     def _install(self, storage: jax.Array, x_route: jax.Array, rng=None,
@@ -277,8 +281,33 @@ class IVFIndex:
         self._fit_router(x_route, rng=rng, train_size=train_size)
         return self._finish_install(storage, x_route)
 
+    def _install_routed(self, storage: jax.Array, labels: np.ndarray,
+                        centroids: jax.Array, dim: int) -> "IVFIndex":
+        """Adopt pre-encoded storage already routed to an *existing* router
+        — no k-means refit, no float decode.  This is the chunked-compaction
+        fold: a store-backed main cannot decode its whole corpus to refit,
+        but its delta rows were routed to the same centroids, so keeping the
+        router and rebuilding only the list table is exact."""
+        if self.residual:
+            raise ValueError("residual IVF cannot adopt pre-encoded storage")
+        storage = jnp.asarray(storage)
+        if storage.shape[0] == 0:
+            raise ValueError("cannot install an empty corpus")
+        self.centroids = jnp.asarray(centroids)
+        self.nlist = int(self.centroids.shape[0])
+        self._labels = np.asarray(labels)
+        if self._labels.shape != (int(storage.shape[0]),):
+            raise ValueError("labels must be one cluster id per storage row")
+        self.lists = jnp.asarray(build_padded_lists(self._labels, self.nlist))
+        return self._finish_install(storage, jnp.zeros((0, dim), jnp.float32))
+
     def add(self, docs: jax.Array) -> "IVFIndex":
         """Append docs, routing them to the *existing* centroids (no refit)."""
+        if self.store is not None:
+            raise ValueError(
+                "store-backed (tiered) IVF index is read-only — wrap it in "
+                "a SegmentedIndex for live updates, or reload with "
+                "resident='all'")
         if self.centroids is None:
             return self.fit(docs)
         x = apply_float_stages(self.float_stages, docs, "docs")
@@ -297,6 +326,7 @@ class IVFIndex:
         self._source = None    # storage was copied on append: now our own
         self._search_fn = None
         self._list_layout = None
+        self._store_fns = None
         return self
 
     def __len__(self) -> int:
@@ -304,9 +334,15 @@ class IVFIndex:
 
     @property
     def nbytes(self) -> int:
-        """Bytes of the quantized document storage (the paper's metric)."""
-        assert self.storage is not None
-        return int(self.storage.size * self.storage.dtype.itemsize)
+        """Bytes of the quantized document storage (the paper's metric).
+
+        For a store-backed index this is the *encoded artifact* size — what
+        a fully-resident load would cost — not the hot-tier residency
+        (``store.stats()['bytes_resident']`` reports that)."""
+        if self.storage is not None:
+            return int(self.storage.size * self.storage.dtype.itemsize)
+        assert self.store is not None
+        return int(self.store.encoded_nbytes)
 
     @property
     def aux_nbytes(self) -> int:
@@ -337,8 +373,13 @@ class IVFIndex:
         1-bit backend additionally needs the paper's α = 0.5 offset (any
         other offset has rank-1 corrections the standalone op applies
         outside the kernel).  Everything else falls back to the streaming
-        jnp path, which is the numerics oracle anyway.
+        jnp path, which is the numerics oracle anyway.  A store-backed
+        index always streams: the fused kernel DMAs a device-resident
+        list-major copy of the whole storage, which is exactly what a
+        tiered index does not have.
         """
+        if self.store is not None:
+            return False
         if not self.scorer.use_pallas or self.sim != "ip":
             return False
         if self.scorer.name == "onebit":
@@ -420,6 +461,129 @@ class IVFIndex:
 
         return _search
 
+    # -- tiered (store-backed) search --------------------------------------
+    def _store_fn_pair(self):
+        """jit'd (route, step) pair for the store-backed streaming search.
+
+        The two graphs together are an exact mirror of
+        :meth:`_streaming_search_fn`, split at the host boundary where list
+        bytes come from the :class:`~repro.storage.store.ListStore` instead
+        of a device gather.  Bit-identity holds unconditionally: the route
+        graph runs the same ops (stages → similarity → top_k →
+        encode_queries); each step scores the same ``(Q, g·max_len)`` block
+        through the same ``scores_gathered`` oracle and folds it with the
+        same associative merge.  Pad slots differ in *content* (zero rows
+        here vs row-0 gathers there) but every pad score is masked to
+        ``-inf`` before the merge, and a matmul output column depends only
+        on its own input column — pad bytes can never reach a kept bit.
+        """
+        if self._store_fns is not None:
+            return self._store_fns
+        stages = tuple(self.float_stages)
+        scorer = self.scorer
+        sim = self.sim
+        residual = self.residual
+
+        @functools.partial(jax.jit, static_argnames=("nprobe",))
+        def _route(queries, centroids, *, nprobe):
+            q = queries
+            for t in stages:
+                q = t(q, "queries")
+            cscores = similarity(q, centroids, sim)
+            cvals, probe = jax.lax.top_k(cscores, nprobe)   # (Q, nprobe)
+            return scorer.encode_queries(q), probe, cvals
+
+        @functools.partial(jax.jit, static_argnames=("k", "max_len"))
+        def _step(qe, gathered, cand_j, cj, rv, ri, params, *, k, max_len):
+            s_j = scorer.scores_gathered(qe, gathered, params=params)
+            if residual:                   # routed q·centroid term
+                s_j = s_j + jnp.repeat(cj, max_len, axis=1)
+            s_j = jnp.where(cand_j >= 0, s_j, -jnp.inf)
+            return merge_topk_block(
+                rv, ri, s_j, jnp.where(cand_j >= 0, cand_j, -1), k)
+
+        self._store_fns = (_route, _step)
+        return self._store_fns
+
+    def _gather_block(self, pj: np.ndarray, g: int, max_len: int
+                      ) -> tuple[np.ndarray, np.ndarray]:
+        """Assemble one scoring block from the store: ``pj`` is the (Q, g)
+        probe slice (phantom pad slots carry id ``nlist``); returns the
+        zero-filled ``(Q, g·L, w)`` gathered rows and the −1-filled
+        ``(Q, g·L)`` candidate ids.  Lists repeated across queries within
+        the block are fetched once (one touch per block, so the store's
+        frequency-aware admission counts probes, not fan-out)."""
+        store = self.store
+        n_q = pj.shape[0]
+        gathered = np.zeros((n_q, g * max_len, store.storage_width),
+                            store.storage_dtype)
+        cand = np.full((n_q, g * max_len), -1, np.int32)
+        block: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        for qi in range(n_q):
+            for j in range(g):
+                lid = int(pj[qi, j])
+                if lid >= self.nlist:          # phantom pad slot
+                    continue
+                entry = block.get(lid)
+                if entry is None:
+                    entry = block[lid] = store.get(lid)
+                rows, ids = entry
+                n = ids.shape[0]
+                if n:
+                    gathered[qi, j * max_len: j * max_len + n] = rows
+                    cand[qi, j * max_len: j * max_len + n] = ids
+        return gathered, cand
+
+    def _store_search(self, queries: jax.Array, k: int, nprobe: int,
+                      query_chunk: int) -> tuple[jax.Array, jax.Array]:
+        """Streaming search with list bytes served by :attr:`store`."""
+        route, step = self._store_fn_pair()
+        params = self.scorer.params()
+        max_len = max(1, int(self.store.max_len))
+        g = min(PROBE_BLOCK, nprobe)
+        npad = -(-nprobe // g) * g
+        vals_out, idx_out = [], []
+        for s in range(0, queries.shape[0], query_chunk):
+            qc = queries[s: s + query_chunk]
+            qe, probe, cvals = route(qc, self.centroids, nprobe=nprobe)
+            probe_np = np.asarray(probe)
+            cvals_np = np.asarray(cvals)
+            n_q = probe_np.shape[0]
+            if npad != nprobe:                 # mirror _pad_probe
+                fill = npad - nprobe
+                probe_np = np.concatenate(
+                    [probe_np,
+                     np.full((n_q, fill), self.nlist, probe_np.dtype)],
+                    axis=1)
+                cvals_np = np.concatenate(
+                    [cvals_np, np.zeros((n_q, fill), cvals_np.dtype)],
+                    axis=1)
+            rv = jnp.full((n_q, k), -jnp.inf, jnp.float32)
+            ri = jnp.full((n_q, k), -1, jnp.int32)
+            for j0 in range(0, npad, g):
+                gathered, cand = self._gather_block(
+                    probe_np[:, j0: j0 + g], g, max_len)
+                rv, ri = step(qe, jnp.asarray(gathered), jnp.asarray(cand),
+                              jnp.asarray(cvals_np[:, j0: j0 + g]),
+                              rv, ri, params, k=k, max_len=max_len)
+            vals_out.append(rv)
+            idx_out.append(ri)
+        return jnp.concatenate(vals_out), jnp.concatenate(idx_out)
+
+    def prefetch(self, queries: jax.Array,
+                 nprobe: Optional[int] = None) -> int:
+        """Warm the store's hot tier with the probe table for ``queries``
+        (route only — no scoring); returns lists touched.  No-op (0) on a
+        fully-resident index."""
+        if self.store is None:
+            return 0
+        nprobe = self._resolve_nprobe(nprobe)
+        route, _ = self._store_fn_pair()
+        _, probe, _ = route(jnp.asarray(queries), self.centroids,
+                            nprobe=nprobe)
+        lids = np.unique(np.asarray(probe).ravel())
+        return self.store.prefetch(lids[lids < self.nlist].tolist())
+
     def _fused_search_fn(self):
         """jit'd route → fused Pallas kernel (gather+score+top-k in VMEM)."""
         from repro.kernels.ivf_fused import ops as fused_ops
@@ -456,7 +620,7 @@ class IVFIndex:
         score ``-inf`` and id ``-1``; with ``nprobe == nlist`` every stored
         doc is reachable and the ranking matches exact search.
         """
-        if self.storage is None:
+        if self.storage is None and self.store is None:
             raise ValueError("IVFIndex is not fitted")
         if self._source is not None and \
                 self._source[0]._version != self._source[1]:
@@ -466,6 +630,9 @@ class IVFIndex:
                 "re-promote with to_ivf()")
         nprobe = self._resolve_nprobe(nprobe)
         k = resolve_k(k, self._n_docs)
+        if self.storage is None:       # tiered: lists come from the store
+            return self._store_search(jnp.asarray(queries), k, nprobe,
+                                      query_chunk)
         fused = self._use_fused_kernel
         if fused:
             list_storage, list_ids = self._list_major_layout()
@@ -494,6 +661,11 @@ class IVFIndex:
     def state_dict(self) -> dict:
         """Pipeline + storage + router + list layout: the full IVF artifact
         (cold-start search needs no access to the raw corpus)."""
+        if self.storage is None and self.store is not None:
+            raise ValueError(
+                "store-backed (tiered) IVF index has no resident storage to "
+                "snapshot — save_index(..., chunked=True) streams it from "
+                "the store, or reload with resident='all' first")
         return {"pipeline": self.pipeline.state_dict(),
                 "storage": self.storage,
                 "centroids": self.centroids,
@@ -511,9 +683,13 @@ class IVFIndex:
 
     def load_state_dict(self, sd: dict) -> "IVFIndex":
         self.pipeline.load_state_dict(sd["pipeline"])
-        self.storage = jnp.asarray(sd["storage"])
+        # storage/lists may be None for a tiered load: the caller attaches
+        # a ListStore afterwards (repro.retrieval.api._load_index_chunked)
+        storage = sd["storage"]
+        self.storage = jnp.asarray(storage) if storage is not None else None
         self.centroids = jnp.asarray(sd["centroids"])
-        self.lists = jnp.asarray(sd["lists"])
+        lists = sd["lists"]
+        self.lists = jnp.asarray(lists) if lists is not None else None
         labels = sd.get("labels")
         self._labels = (np.asarray(labels) if labels is not None else None)
         self.scorer.load_extra_state(sd.get("scorer_extra", {}))
@@ -529,6 +705,8 @@ class IVFIndex:
         self._source = None            # an artifact owns its storage
         self._search_fn = None
         self._list_layout = None
+        self.store = None
+        self._store_fns = None
         return self
 
     def save(self, path: str) -> None:

@@ -327,6 +327,11 @@ class SegmentedIndex:
             self._state = _Snapshot(st.segments + (seg,), tomb,
                                     st.next_gid + n, st.n_live + n,
                                     st.n_main_dead)
+        store = getattr(self.main, "store", None)
+        if labels is not None and store is not None:
+            # a delta row competes whenever its routed list is probed — pin
+            # those lists so merging main + delta never takes a cold miss
+            store.pin(np.unique(labels).tolist())
         return self
 
     def validate_ids(self, ids: Sequence[int],
@@ -452,6 +457,14 @@ class SegmentedIndex:
             vals, ids = vals_m, gids_m
         return masked_topk_by_id(vals, ids, k_eff)
 
+    def prefetch(self, queries: jax.Array,
+                 nprobe: Optional[int] = None) -> int:
+        """Warm a store-backed IVF main's hot tier with the probe table
+        for ``queries``; returns lists touched (0 when fully resident)."""
+        if not self._is_ivf:
+            return 0
+        return self.main.prefetch(queries, nprobe=nprobe)
+
     # -- drift / compaction policy ----------------------------------------
     def needs_compaction(self) -> bool:
         """Fold time?  True when the delta or tombstone fraction outgrows
@@ -485,20 +498,171 @@ class SegmentedIndex:
             return self.main.docs
         return self.main.storage
 
-    def compact(self, rng=None) -> "SegmentedIndex":
+    def _iter_folded_lists(self, st: _Snapshot):
+        """List-major fold stream for IVF compaction.
+
+        Yields ``(lid, rows, new_ids, gids)`` per inverted list in list
+        order: the list's alive main rows (storage-position order)
+        followed by its alive delta rows (segment order), with ``new_ids``
+        the sequential row positions of the folded index.  Works off
+        either a resident main or its store (one list materialised at a
+        time — the whole main is never decoded or concatenated).
+        """
+        main = self.main
+        tomb = st.tomb
+        if st.segments:
+            d_rows = np.concatenate(
+                [np.asarray(s.storage) for s in st.segments])
+            d_gids = np.concatenate([s.gids for s in st.segments])
+            d_labels = np.concatenate([s.labels for s in st.segments])
+            alive_d = ~tomb[d_gids]
+            order = np.argsort(d_labels[alive_d], kind="stable")
+            d_rows = d_rows[alive_d][order]
+            d_gids = d_gids[alive_d][order]
+            d_labels = d_labels[alive_d][order]
+        else:
+            d_labels = np.zeros(0, np.int32)
+            d_rows = d_gids = None
+        if main.store is not None:
+            main_iter = main.store.iter_lists()
+        else:
+            lists_np = np.asarray(main.lists)
+            storage_np = np.asarray(main.storage)
+
+            def _resident_iter():
+                for lid in range(main.nlist):
+                    members = lists_np[lid]
+                    members = members[members >= 0]
+                    yield lid, storage_np[members], members
+
+            main_iter = _resident_iter()
+        pos = 0
+        for lid, rows_m, ids_m in main_iter:
+            gids_m = self._main_gids[np.asarray(ids_m)]
+            alive = ~tomb[gids_m]
+            parts_r = [np.asarray(rows_m)[alive]]
+            parts_g = [gids_m[alive]]
+            lo = np.searchsorted(d_labels, lid, "left")
+            hi = np.searchsorted(d_labels, lid, "right")
+            if hi > lo:
+                parts_r.append(d_rows[lo:hi])
+                parts_g.append(d_gids[lo:hi])
+            rows = (np.concatenate(parts_r) if len(parts_r) > 1
+                    else parts_r[0])
+            gids = (np.concatenate(parts_g) if len(parts_g) > 1
+                    else parts_g[0])
+            new_ids = np.arange(pos, pos + len(gids), dtype=np.int32)
+            pos += len(gids)
+            yield lid, rows, new_ids, gids
+
+    def _make_ivf_like_main(self) -> IVFIndex:
+        """Fresh unfitted shell with the main's ctor params + frozen
+        scorer state (shared by every IVF compaction flavour)."""
+        main = self.main
+        if isinstance(main, IVFFlatIndex):
+            new_main = IVFFlatIndex(
+                nlist=main._nlist_requested, nprobe=main.nprobe,
+                sim=main.sim, kmeans_iters=main.kmeans_iters,
+                kmeans_init=main.kmeans_init, balanced=main.balanced)
+        else:
+            new_main = IVFIndex(
+                main.pipeline, nlist=main._nlist_requested,
+                nprobe=main.nprobe, sim=main.sim, backend=main.backend,
+                kmeans_iters=main.kmeans_iters,
+                kmeans_init=main.kmeans_init, balanced=main.balanced)
+        new_main.float_stages = self.float_stages
+        new_main.scorer.load_extra_state(self.scorer.extra_state())
+        return new_main
+
+    def _wrap_compacted(self, new_main, st: _Snapshot,
+                        gids: np.ndarray) -> "SegmentedIndex":
+        new_main.spec = getattr(self.main, "spec", None)
+        out = SegmentedIndex(new_main, spec=self.spec,
+                             drift_threshold=self.drift_threshold,
+                             max_delta_fraction=self.max_delta_fraction)
+        # tombstoned ids stay marked forever: the gid space has holes after
+        # compaction, and a replayed delete of a folded id must stay a no-op
+        out._restore(main_gids=gids, tomb=st.tomb.copy(),
+                     next_gid=st.next_gid)
+        return out
+
+    def _compact_chunked(self, st: _Snapshot, out_path: str,
+                         resident) -> "SegmentedIndex":
+        """Fold straight into a chunked (v3) artifact at ``out_path`` —
+        list-by-list, keeping the existing router, without decoding (or
+        even concatenating) the main storage — then serve the fold back
+        at the requested residency."""
+        from repro.retrieval.api import (_chunked_header, _write_chunked,
+                                         load_index)
+        main = self.main
+        meta, aux = _chunked_header(main, None, self.spec)
+        meta["index"]["n_docs"] = st.n_live
+        meta["index"]["version"] = main._version + 1
+        if main.store is not None:
+            dtype = main.store.storage_dtype
+            width = main.store.storage_width
+        else:
+            dtype = main.storage.dtype
+            width = int(main.storage.shape[1])
+        gid_parts = []
+
+        def _rows():
+            for _, rows, new_ids, gids in self._iter_folded_lists(st):
+                gid_parts.append(gids)
+                yield rows, new_ids
+
+        _write_chunked(out_path, meta, aux, _rows(), storage_dtype=dtype,
+                       storage_width=width, n_lists=main.nlist)
+        new_main = load_index(out_path, resident=resident)
+        return self._wrap_compacted(new_main, st, np.concatenate(gid_parts))
+
+    def compact(self, rng=None, *, out_path: Optional[str] = None,
+                resident="auto") -> "SegmentedIndex":
         """Fold segments + tombstones into a fresh main; returns a NEW
         SegmentedIndex (self keeps serving unchanged).
 
         Storage rows are moved, never re-encoded — the fitted pipeline,
         scorer codebooks, and global doc ids all carry over, so rankings
-        over the surviving rows are unchanged for exact mains.  IVF mains
-        refit only the k-means router (on the float decode of the moved
-        storage, exactly like ``CompressedIndex.to_ivf``), which is the
-        point of drift-triggered compaction: the router re-centers on what
-        the index now actually contains.
+        over the surviving rows are unchanged for exact mains.  Resident
+        IVF mains refit only the k-means router (on the float decode of
+        the moved storage, exactly like ``CompressedIndex.to_ivf``), which
+        is the point of drift-triggered compaction: the router re-centers
+        on what the index now actually contains.
+
+        Two tiered flavours change that default:
+
+        * ``out_path=`` (IVF mains only) streams the fold list-by-list
+          into a chunked v3 artifact at that path — the existing router is
+          kept (delta rows were routed to it, so the fold is exact), the
+          main storage is never decoded, and the returned index serves the
+          artifact at ``resident=`` residency.
+        * A store-backed main without ``out_path`` folds in memory through
+          the same routed path (no decode, no refit) into a fully-resident
+          new main.
         """
         st = self._state
         main = self.main
+        if st.n_live == 0:
+            raise ValueError("cannot compact to an empty index — every doc "
+                             "is tombstoned")
+        if out_path is not None:
+            if not self._is_ivf:
+                raise TypeError("chunked compaction (out_path=) lays out "
+                                "IVF inverted lists — "
+                                f"{type(main).__name__} has none")
+            return self._compact_chunked(st, out_path, resident)
+        if self._is_ivf and main.store is not None:
+            rows_all, labels_all, gid_parts = [], [], []
+            for lid, rows, _, gids in self._iter_folded_lists(st):
+                rows_all.append(rows)
+                labels_all.append(np.full(len(gids), lid, np.int32))
+                gid_parts.append(gids)
+            new_main = self._make_ivf_like_main()
+            new_main._install_routed(np.concatenate(rows_all),
+                                     np.concatenate(labels_all),
+                                     main.centroids, main._dim)
+            return self._wrap_compacted(new_main, st,
+                                        np.concatenate(gid_parts))
         alive_main = ~st.tomb[self._main_gids]
         parts = [jnp.asarray(self._main_storage())[jnp.asarray(alive_main)]]
         gid_parts = [self._main_gids[alive_main]]
@@ -508,26 +672,11 @@ class SegmentedIndex:
             gid_parts.append(seg.gids[alive])
         storage = jnp.concatenate(parts, axis=0)
         gids = np.concatenate(gid_parts)
-        if storage.shape[0] == 0:
-            raise ValueError("cannot compact to an empty index — every doc "
-                             "is tombstoned")
 
         if isinstance(main, DenseIndex):
             new_main = DenseIndex(storage, sim=main.sim)
         elif isinstance(main, IVFIndex):
-            if isinstance(main, IVFFlatIndex):
-                new_main = IVFFlatIndex(
-                    nlist=main._nlist_requested, nprobe=main.nprobe,
-                    sim=main.sim, kmeans_iters=main.kmeans_iters,
-                    kmeans_init=main.kmeans_init, balanced=main.balanced)
-            else:
-                new_main = IVFIndex(
-                    main.pipeline, nlist=main._nlist_requested,
-                    nprobe=main.nprobe, sim=main.sim, backend=main.backend,
-                    kmeans_iters=main.kmeans_iters,
-                    kmeans_init=main.kmeans_init, balanced=main.balanced)
-            new_main.float_stages = self.float_stages
-            new_main.scorer.load_extra_state(self.scorer.extra_state())
+            new_main = self._make_ivf_like_main()
             x_route = new_main.scorer.decode(storage)
             new_main._install(storage, x_route, rng=rng)
         else:
@@ -539,16 +688,7 @@ class SegmentedIndex:
             new_main._n_docs = int(storage.shape[0])
             new_main._dim = main._dim
             new_main._version = 1
-        new_main.spec = getattr(main, "spec", None)
-
-        out = SegmentedIndex(new_main, spec=self.spec,
-                             drift_threshold=self.drift_threshold,
-                             max_delta_fraction=self.max_delta_fraction)
-        # tombstoned ids stay marked forever: the gid space has holes after
-        # compaction, and a replayed delete of a folded id must stay a no-op
-        out._restore(main_gids=gids, tomb=st.tomb.copy(),
-                     next_gid=st.next_gid)
-        return out
+        return self._wrap_compacted(new_main, st, gids)
 
     # -- persistence -------------------------------------------------------
     def state_dict(self) -> dict:

@@ -44,14 +44,17 @@ class IndexVersion:
     def __init__(self, version: int, *, index=None,
                  artifact: Optional[str] = None, mesh=None,
                  backend: Optional[str] = None, k: int = 10,
-                 batcher: Optional[MicroBatcher] = None):
+                 batcher: Optional[MicroBatcher] = None,
+                 resident="auto"):
         if (index is None) == (artifact is None):
             raise ValueError("IndexVersion needs exactly one of index= "
-                             "(in-memory) or artifact= (saved .npz path)")
+                             "(in-memory) or artifact= (saved artifact "
+                             "path)")
         self.version = version
         self.artifact = artifact
         self.mesh = mesh
         self.backend = backend
+        self.resident = resident       # residency knob for v3 artifacts
         self._k = k
         self._batcher = batcher
         self._engine: Optional[ServeEngine] = None
@@ -88,7 +91,8 @@ class IndexVersion:
                 if self._engine is None:
                     from repro.retrieval.api import load_index
                     index = load_index(self.artifact, mesh=self.mesh,
-                                       backend=self.backend)
+                                       backend=self.backend,
+                                       resident=self.resident)
                     self._engine = ServeEngine(index, k=self._k,
                                                batcher=self._batcher)
         return self._engine

@@ -259,22 +259,30 @@ class RetrievalService:
     def register(self, name: str, index=None, *,
                  artifact: Optional[str] = None, lazy: bool = False,
                  mesh=None, backend: Optional[str] = None,
-                 k: Optional[int] = None) -> int:
+                 k: Optional[int] = None,
+                 resident_budget=None) -> int:
         """Register a named index; returns its version number (1).
 
         Exactly one of ``index`` (an in-memory object implementing the
         :class:`~repro.retrieval.api.Index` protocol) or ``artifact`` (a
-        ``save_index`` ``.npz`` path).  With ``lazy=True`` the artifact's
-        arrays are not loaded until the first query routes to it — only
-        the identity header is read up front.  ``mesh`` / ``backend``
-        forward to :func:`~repro.retrieval.api.load_index`.
+        ``save_index`` ``.npz`` path or chunked artifact directory).  With
+        ``lazy=True`` the artifact's arrays are not loaded until the first
+        query routes to it — only the identity header is read up front.
+        ``mesh`` / ``backend`` forward to
+        :func:`~repro.retrieval.api.load_index`.  ``resident_budget``
+        forwards as ``load_index(..., resident=...)`` for chunked (v3)
+        artifacts: ``None`` means ``"auto"``; an int byte budget serves
+        the encoded lists from a memory-mapped hot/cold tier; ``"all"``
+        forces full materialisation.
         """
         with self._lock:
             self._check_open()
             entry = IndexEntry(name)
             iv = IndexVersion(entry.allocate(), index=index,
                               artifact=artifact, mesh=mesh, backend=backend,
-                              k=k or self.default_k, batcher=self._batcher)
+                              k=k or self.default_k, batcher=self._batcher,
+                              resident=("auto" if resident_budget is None
+                                        else resident_budget))
             entry.versions[iv.version] = iv
             entry.live = iv.version
             self._registry.add(entry)   # raises on duplicate; nothing leaks
@@ -496,7 +504,8 @@ class RetrievalService:
     # -- hot swap ----------------------------------------------------------
     def stage(self, name: str, index=None, *, artifact: Optional[str] = None,
               mesh=None, backend: Optional[str] = None,
-              k: Optional[int] = None, canary_every: int = 0) -> int:
+              k: Optional[int] = None, canary_every: int = 0,
+              resident_budget=None) -> int:
         """Load the next version of ``name`` off the serving path.
 
         The artifact load (or in-memory adoption) and engine construction
@@ -506,7 +515,9 @@ class RetrievalService:
         the live engine: every Nth served batch is re-scored on the staged
         version and the top-k overlap recorded (see :meth:`canary`,
         ``promote(min_overlap=...)``).  Staging again replaces a previous
-        staged version.  Returns the new version number.
+        staged version.  ``resident_budget`` is the chunked-artifact
+        residency knob (see :meth:`register`).  Returns the new version
+        number.
         """
         with self._lock:
             self._check_open()
@@ -515,7 +526,9 @@ class RetrievalService:
             live_iv = entry.live_version()
         iv = IndexVersion(vid, index=index, artifact=artifact, mesh=mesh,
                           backend=backend, k=k or self.default_k,
-                          batcher=self._batcher)
+                          batcher=self._batcher,
+                          resident=("auto" if resident_budget is None
+                                    else resident_budget))
         staged_engine = iv.ensure_engine()  # pay the load here, not at promote
         if canary_every:
             live_iv.ensure_engine()
@@ -758,6 +771,14 @@ class RetrievalService:
                         # mutable["drift"]["mean_shift"] vs the pipeline's
                         # fitted centering stats, plus needs_compaction
                         row["mutable"] = iv.engine.index.mutable_stats()
+                    idx = iv.engine.index
+                    main = idx.main if isinstance(idx, SegmentedIndex) \
+                        else idx
+                    store = getattr(main, "store", None)
+                    if store is not None:
+                        # hot/cold tier gauges for store-backed (v3
+                        # chunked, partially resident) versions
+                        row["tier"] = store.stats()
                 table[vid] = row
             for key in totals:              # GC'd versions still count
                 totals[key] += retired[key]

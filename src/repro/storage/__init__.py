@@ -1,0 +1,29 @@
+"""Tiered index storage: chunked artifacts + byte-budgeted list stores.
+
+The paper's 100× index compression only pays off in production once the
+compressed artifact no longer has to live fully resident: this package
+lets an IVF index serve from disk with a byte-budgeted hot tier.
+
+* :mod:`repro.storage.format` — the chunked (v3) artifact layout:
+  per-inverted-list chunks with a JSON manifest (offsets, lengths,
+  CRC-32 per list), streamed to disk list-by-list and read back through
+  one ``np.memmap``.
+* :mod:`repro.storage.store` — the :class:`ListStore` tier protocol
+  with :class:`ResidentStore` (always hot, unchanged results) and
+  :class:`MmapStore` (LRU hot tier, frequency-aware admission, pinning,
+  hit/miss/eviction counters).
+
+Front door: ``save_index(index, path, chunked=True)`` writes the v3
+layout and ``load_index(path, resident="auto"|"all"|budget_bytes)``
+decides residency (see :mod:`repro.retrieval.api`).
+"""
+
+from repro.storage.format import (ArtifactError, ChunkReader, ChunkWriter,
+                                  is_chunked_artifact, npz_member_nbytes)
+from repro.storage.store import ListStore, MmapStore, ResidentStore
+
+__all__ = [
+    "ArtifactError", "ChunkReader", "ChunkWriter", "is_chunked_artifact",
+    "npz_member_nbytes",
+    "ListStore", "MmapStore", "ResidentStore",
+]
