@@ -101,7 +101,7 @@ def serve_rounds(engine, queries, n_requests, batch, warmup: int = 3):
     """Stream ``n_requests`` blocks through submit/drain; returns
     (qps, p50_ms, p99_ms).  ``warmup`` untimed rounds first, so jit
     compiles never land inside the measured window."""
-    for r in range(warmup):
+    for _ in range(warmup):
         engine.submit(queries[:batch])
         engine.drain()
     lat = []

@@ -37,7 +37,7 @@ def main(argv=None) -> list[dict]:
                     core = Autoencoder(AutoencoderConfig(
                         variant="linear", bottleneck=args.dim,
                         fit_on=fit_on, epochs=args.ae_epochs))
-                pipe = CompressionPipeline(stages + [core])
+                pipe = CompressionPipeline([*stages, core])
                 d, q = pipe.fit_transform(kb.docs, kb.queries,
                                           rng=jax.random.PRNGKey(0))
                 row = {"model": model, "preproc": prep_name,

@@ -135,7 +135,7 @@ def main(argv=None) -> list[dict]:
     rows = []
     stages: dict[str, dict] = {}
     for name, tail in backend_tail_stages().items():
-        pipe = CompressionPipeline([CenterNorm()] + tail)
+        pipe = CompressionPipeline([CenterNorm(), *tail])
         idx = CompressedIndex.build(kb.docs, queries[:256], pipe)
         _, want = idx.search(queries, args.k)
         want = np.asarray(want)

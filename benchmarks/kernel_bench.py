@@ -68,9 +68,9 @@ def main(argv=None) -> list[dict]:
 
     # end-to-end fused search per scorer backend (encode → kernel → top-k,
     # one jit graph; see repro.retrieval.scorers)
-    for name, tail in backend_tail_stages().items():
+    for _name, tail in backend_tail_stages().items():
         idx = CompressedIndex.build(
-            docs, queries, CompressionPipeline([CenterNorm()] + tail))
+            docs, queries, CompressionPipeline([CenterNorm(), *tail]))
         t = _bench(lambda: idx.search(queries, 10))
         rows.append({"kernel": f"search[{idx.scorer.name}]",
                      "bytes_per_doc": idx.nbytes // n_docs,

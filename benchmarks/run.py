@@ -30,10 +30,10 @@ def main() -> None:
     suites = {
         "table2": lambda: table2_compression.main(fast),
         "table2_nq": lambda: table2_compression.main(
-            fast + ["--dataset", "nq-like"]),
+            [*fast, "--dataset", "nq-like"]),
         "table5": lambda: table5_preprocessing.main([]),
         "fig3": lambda: fig3_random_projections.main(
-            fast + ["--runs", "1" if not args.full else "3"]),
+            [*fast, "--runs", "1" if not args.full else "3"]),
         "fig4": lambda: fig4_pca_autoencoder.main(fast),
         "fig5": lambda: fig5_pca_precision.main(fast),
         "fig6": lambda: fig6_datasize.main(fast),

@@ -83,7 +83,7 @@ def main(argv=None) -> None:
         stream(service, quarter, "post-add")
 
         # retractions: tombstone a slice of the new docs + some originals
-        dead = list(range(lo, lo + 32)) + [0, 1, 2, 3]
+        dead = [*range(lo, lo + 32), 0, 1, 2, 3]
         rep = service.update("kb", delete=dead)
         print(f"deleted {rep['deleted']} docs "
               f"({rep['tombstones']} tombstones, {rep['n_live']} live)")

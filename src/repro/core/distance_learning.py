@@ -166,6 +166,7 @@ class ContrastiveProjection(Transform):
         tx = opt_lib.adamw(self.lr)
         opt_state = tx.init(params)
         temp = self.temperature
+        batch_size = self.batch_size
 
         def loss_fn(params, anchors, pos):
             za = anchors @ params["w"]
@@ -179,7 +180,7 @@ class ContrastiveProjection(Transform):
 
         @jax.jit
         def step(params, opt_state, key):
-            idx = jax.random.randint(key, (self.batch_size,), 0, sub)
+            idx = jax.random.randint(key, (batch_size,), 0, sub)
             anchors = xs[idx]
             pos = xs[positives[idx]]
             loss, grads = jax.value_and_grad(loss_fn)(params, anchors, pos)

@@ -159,7 +159,7 @@ class OneBitQuantizer(Transform):
         d = x.shape[-1]
         if d % 32 != 0:
             pad = 32 - d % 32
-            x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)],
+            x = jnp.pad(x, [*[(0, 0)] * (x.ndim - 1), (0, pad)],
                         constant_values=-1.0)  # pad bits decode to 0−α (sign −)
         return pack_bits(x)
 

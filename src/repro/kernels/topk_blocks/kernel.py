@@ -28,19 +28,28 @@ NEG_INF = float("-inf")
 
 
 def _topk_tile_kernel(scores_ref, vals_ref, idx_ref, *, k: int,
-                      block_d: int):
+                      block_d: int, k_pad: int):
     s = scores_ref[...].astype(jnp.float32)            # (bq, bd)
     j = pl.program_id(1)
     base = j * block_d
     iota = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    # Accumulate the k rounds in registers and store the lane-aligned
+    # (bq, k_pad) block once; slots ≥ k stay (−inf, 0) and are trimmed on
+    # the host, so they can never surface in the stage-2 merge.
+    out_iota = jax.lax.broadcasted_iota(jnp.int32, (s.shape[0], k_pad), 1)
+    vals = jnp.full((s.shape[0], k_pad), NEG_INF, jnp.float32)
+    idx = jnp.zeros((s.shape[0], k_pad), jnp.int32)
     for i in range(k):
         m = jnp.max(s, axis=1)                         # (bq,)
         # first column achieving the max
         hit = s == m[:, None]
         am = jnp.min(jnp.where(hit, iota, s.shape[1]), axis=1)
-        vals_ref[:, i] = m
-        idx_ref[:, i] = am + base
+        col = out_iota == i
+        vals = jnp.where(col, m[:, None], vals)
+        idx = jnp.where(col, (am + base)[:, None], idx)
         s = jnp.where(iota == am[:, None], NEG_INF, s)
+    vals_ref[...] = vals
+    idx_ref[...] = idx
 
 
 @functools.partial(jax.jit,
@@ -55,6 +64,7 @@ def topk_blocks_pallas(scores: jax.Array, k: int, block_q: int = 128,
     """
     n_q, n_d = scores.shape
     k = min(k, n_d)
+    k_pad = cdiv(k, 128) * 128        # lane-aligned per-block output width
     q_pad = cdiv(n_q, block_q) * block_q - n_q
     d_pad = cdiv(n_d, block_d) * block_d - n_d
     s_in = jnp.pad(scores, ((0, q_pad), (0, d_pad)),
@@ -63,17 +73,24 @@ def topk_blocks_pallas(scores: jax.Array, k: int, block_q: int = 128,
 
     grid = (s_in.shape[0] // block_q, n_blocks)
     vals, idx = pl.pallas_call(
-        functools.partial(_topk_tile_kernel, k=k, block_d=block_d),
+        functools.partial(_topk_tile_kernel, k=k, block_d=block_d,
+                          k_pad=k_pad),
         grid=grid,
         in_specs=[pl.BlockSpec((block_q, block_d), lambda i, j: (i, j))],
         out_specs=[
-            pl.BlockSpec((block_q, k), lambda i, j: (i, j)),
-            pl.BlockSpec((block_q, k), lambda i, j: (i, j)),
+            pl.BlockSpec((block_q, k_pad), lambda i, j: (i, j)),
+            pl.BlockSpec((block_q, k_pad), lambda i, j: (i, j)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((s_in.shape[0], n_blocks * k), jnp.float32),
-            jax.ShapeDtypeStruct((s_in.shape[0], n_blocks * k), jnp.int32),
+            jax.ShapeDtypeStruct((s_in.shape[0], n_blocks * k_pad),
+                                 jnp.float32),
+            jax.ShapeDtypeStruct((s_in.shape[0], n_blocks * k_pad),
+                                 jnp.int32),
         ],
         interpret=interpret,
     )(s_in)
-    return vals[:n_q], idx[:n_q]
+    # Trim the per-block lane padding back to the documented (Q, n_blocks·k)
+    # contract — bit-identical to the unpadded formulation.
+    vals = vals.reshape(-1, n_blocks, k_pad)[:n_q, :, :k].reshape(n_q, -1)
+    idx = idx.reshape(-1, n_blocks, k_pad)[:n_q, :, :k].reshape(n_q, -1)
+    return vals, idx

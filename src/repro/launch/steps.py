@@ -403,11 +403,15 @@ def _recsys_bundle(arch, shape, rules, mesh, reduced) -> StepBundle:
             flops = lambda: n_cand * per()
 
         def retrieve(params, batch):
+            from repro.retrieval.topk import topk_score_then_id
             with ShardingContext(mesh, rules):
                 scores = cand_fn(params, batch, cfg)
                 if scores.ndim == 1:
                     scores = scores[None, :]
-                return jax.lax.top_k(scores, k_top)
+                ids = jnp.broadcast_to(
+                    jnp.arange(scores.shape[-1], dtype=jnp.int32),
+                    scores.shape)
+                return topk_score_then_id(scores, ids, k_top)
 
         return StepBundle(
             name=f"{arch.name}:{shape.name}", fn=retrieve,
@@ -511,7 +515,7 @@ def _kb_search_bundle(arch, shape, rules, mesh, reduced) -> StepBundle:
                        preferred_element_type=jnp.float32)
         return s + (z @ index["zero"])[:, None]
 
-    from repro.retrieval.topk import merge_topk
+    from repro.retrieval.topk import merge_topk, topk_score_then_id
     from repro.utils import cdiv, first_divisor_leq
 
     doc_axes_t = ()
@@ -561,7 +565,10 @@ def _kb_search_bundle(arch, shape, rules, mesh, reduced) -> StepBundle:
             if topk_impl == "naive" or not doc_axes_t:
                 if topk_impl == "naive":
                     scores = _score_block(index, z, index["storage"])
-                    return jax.lax.top_k(scores, k)
+                    ids = jnp.broadcast_to(
+                        jnp.arange(scores.shape[-1], dtype=jnp.int32),
+                        scores.shape)
+                    return topk_score_then_id(scores, ids, k)
                 return _stream_topk(index, z, index["storage"], 0)
 
         # two_stage distributed: shard_map — each device streams a running

@@ -132,7 +132,7 @@ def forward_features(params: dict, tokens: jax.Array, cfg: LMConfig):
     else:
         aux = jnp.zeros((), jnp.float32)
         for i in range(cfg.n_layers):
-            lp = jax.tree_util.tree_map(lambda p: p[i], params["layers"])
+            lp = jax.tree_util.tree_map(lambda p, i=i: p[i], params["layers"])
             x, a = body(x, lp)
             aux = aux + a
     x = L.rmsnorm(params["final_norm"], x)
@@ -255,7 +255,7 @@ def prefill(params: dict, tokens: jax.Array, cfg: LMConfig,
     else:
         all_k, all_v = [], []
         for i in range(cfg.n_layers):
-            lp = jax.tree_util.tree_map(lambda p: p[i], params["layers"])
+            lp = jax.tree_util.tree_map(lambda p, i=i: p[i], params["layers"])
             x, (k, v) = scan_fn(x, lp)
             all_k.append(k)
             all_v.append(v)
@@ -310,7 +310,7 @@ def decode_step(params: dict, cache: tuple[jax.Array, jax.Array],
     else:
         new_k, new_v = [], []
         for i in range(cfg.n_layers):
-            layer = jax.tree_util.tree_map(lambda p: p[i],
+            layer = jax.tree_util.tree_map(lambda p, i=i: p[i],
                                            (params["layers"], ks, vs))
             x, (k_c, v_c) = scan_fn(x, layer)
             new_k.append(k_c)

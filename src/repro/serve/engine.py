@@ -173,8 +173,9 @@ class ServeEngine:
             self._inflight_rows += sum(q.shape[0] for _, q, _, _ in pending)
             observers = tuple(([self.shadow] if self.shadow is not None
                                else []) + self._observers)
+            inflight_rows = self._inflight_rows
         if hasattr(self.batcher, "observe_depth"):   # adaptive sizing hook
-            self.batcher.observe_depth(self._inflight_rows)
+            self.batcher.observe_depth(inflight_rows)
         out_scores: dict[int, np.ndarray] = {}
         out_ids: dict[int, np.ndarray] = {}
         rows_left: dict[int, int] = {}

@@ -54,7 +54,7 @@ class TokenBucket:
         self._stamp = clock()
         self._mu = threading.Lock()
 
-    def _refill(self) -> None:
+    def _refill_locked(self) -> None:
         now = self._clock()
         self._tokens = min(self.burst,
                            self._tokens + (now - self._stamp) * self.rate)
@@ -62,7 +62,7 @@ class TokenBucket:
 
     def try_acquire(self, n: float = 1.0) -> bool:
         with self._mu:
-            self._refill()
+            self._refill_locked()
             if self._tokens >= n:
                 self._tokens -= n
                 return True
@@ -77,7 +77,7 @@ class TokenBucket:
     @property
     def available(self) -> float:
         with self._mu:
-            self._refill()
+            self._refill_locked()
             return self._tokens
 
 

@@ -38,7 +38,8 @@ class LatencyStats:
                 del self._samples[: len(self._samples) - self.window]
 
     def __len__(self) -> int:
-        return self.total_recorded
+        with self._mu:
+            return self.total_recorded
 
     @property
     def samples(self) -> tuple[float, ...]:

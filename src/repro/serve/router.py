@@ -77,25 +77,31 @@ class IndexVersion:
 
     @property
     def loaded(self) -> bool:
-        return self._engine is not None
+        with self._load_lock:
+            return self._engine is not None
 
     @property
     def engine(self) -> Optional[ServeEngine]:
         """The execution core, or ``None`` while still lazy."""
-        return self._engine
+        with self._load_lock:
+            return self._engine
 
     def ensure_engine(self) -> ServeEngine:
-        """Load the backing artifact (once) and return the engine."""
-        if self._engine is None:
-            with self._load_lock:
-                if self._engine is None:
-                    from repro.retrieval.api import load_index
-                    index = load_index(self.artifact, mesh=self.mesh,
-                                       backend=self.backend,
-                                       resident=self.resident)
-                    self._engine = ServeEngine(index, k=self._k,
-                                               batcher=self._batcher)
-        return self._engine
+        """Load the backing artifact (once) and return the engine.
+
+        Always acquires ``_load_lock`` — the previous double-checked bare
+        read of ``_engine`` raced the loader's assignment with no memory
+        ordering; an uncontended lock costs nothing on the hot path.
+        """
+        with self._load_lock:
+            if self._engine is None:
+                from repro.retrieval.api import load_index
+                index = load_index(self.artifact, mesh=self.mesh,
+                                   backend=self.backend,
+                                   resident=self.resident)
+                self._engine = ServeEngine(index, k=self._k,
+                                           batcher=self._batcher)
+            return self._engine
 
 
 class IndexEntry:

@@ -208,7 +208,7 @@ class RetrievalService:
     def start(self) -> "RetrievalService":
         """Start the background drain loop (idempotent)."""
         with self._lock:
-            self._check_open()
+            self._check_open_locked()
             if self._thread is None:
                 self._stop.clear()
                 self._thread = threading.Thread(
@@ -228,9 +228,10 @@ class RetrievalService:
             self.drain_once()
         self._stop.set()
         self._kick.set()
-        if self._thread is not None:
-            self._thread.join(timeout=10.0)
-            self._thread = None
+        with self._lock:
+            thread, self._thread = self._thread, None
+        if thread is not None:
+            thread.join(timeout=10.0)
         leftovers = []
         with self._lock:
             for entry in self._registry.entries():
@@ -251,7 +252,7 @@ class RetrievalService:
     def __exit__(self, *exc) -> None:
         self.close()
 
-    def _check_open(self) -> None:
+    def _check_open_locked(self) -> None:
         if self._closed:
             raise ServiceClosed("service is closed")
 
@@ -276,7 +277,7 @@ class RetrievalService:
         forces full materialisation.
         """
         with self._lock:
-            self._check_open()
+            self._check_open_locked()
             entry = IndexEntry(name)
             iv = IndexVersion(entry.allocate(), index=index,
                               artifact=artifact, mesh=mesh, backend=backend,
@@ -305,7 +306,7 @@ class RetrievalService:
         (capped lanes shed their own overload; unlisted lanes share the
         full budget).  Raises ``KeyError`` for an unregistered index."""
         with self._lock:
-            self._check_open()
+            self._check_open_locked()
             self._registry.get(name)          # raise before installing
         self._limiter.configure(name, qps=qps, burst=burst, lanes=lanes)
 
@@ -340,7 +341,7 @@ class RetrievalService:
         n = int(q.shape[0])
 
         with self._lock:
-            self._check_open()
+            self._check_open_locked()
             entry = self._registry.get(options.index)
             version = entry.live_version()
             version.binders += 1       # pin against GC until submitted
@@ -434,7 +435,7 @@ class RetrievalService:
             work = [(entry, iv) for entry in self._registry.entries()
                     for iv in list(entry.versions.values()) if iv.loaded]
         resolved = 0
-        for entry, iv in work:
+        for _entry, iv in work:
             engine = iv.engine
             if engine.pending == 0:
                 continue
@@ -520,7 +521,7 @@ class RetrievalService:
         number.
         """
         with self._lock:
-            self._check_open()
+            self._check_open_locked()
             entry = self._registry.get(name)
             vid = entry.allocate()
             live_iv = entry.live_version()
@@ -570,7 +571,7 @@ class RetrievalService:
         live version number.
         """
         with self._lock:
-            self._check_open()
+            self._check_open_locked()
             entry = self._registry.get(name)
             if entry.staged is None:
                 raise ValueError(f"index {name!r}: nothing staged")
@@ -601,7 +602,7 @@ class RetrievalService:
         measured against the version being rolled away from.  Returns the
         now-live version number."""
         with self._lock:
-            self._check_open()
+            self._check_open_locked()
             entry = self._registry.get(name)
             self._detach_canary(entry)
             entry.staged_compact = False
@@ -612,7 +613,7 @@ class RetrievalService:
     # -- live updates ------------------------------------------------------
     def _live_mutable(self, name: str) -> tuple[IndexVersion, SegmentedIndex]:
         with self._lock:
-            self._check_open()
+            self._check_open_locked()
             entry = self._registry.get(name)
             if entry.staged_compact:
                 raise RuntimeError(
@@ -799,6 +800,9 @@ class RetrievalService:
             rejected = self.requests_rejected
             rate_limited = self.requests_rate_limited
             cache_hits = self.cache_hits
+        with self._update_lock:
+            updates_applied = self.updates_applied
+            compactions_run = self.compactions_run
         arrivals = admitted + rejected + rate_limited
         shed = rejected + rate_limited
         out = {"indexes": indexes,
@@ -810,8 +814,8 @@ class RetrievalService:
                "requests_rate_limited": rate_limited,
                "shed_rate": (shed / arrivals) if arrivals else 0.0,
                "cache_hits": cache_hits,
-               "updates_applied": self.updates_applied,
-               "compactions_run": self.compactions_run,
+               "updates_applied": updates_applied,
+               "compactions_run": compactions_run,
                **totals,
                **LatencyStats.merge(latencies).summary()}
         out.update({f"request_{key}": val for key, val in

@@ -137,7 +137,7 @@ class Checkpointer:
         flat_like = _flatten(like)
         flat_shard = _flatten(shardings) if shardings is not None else {}
         out = {}
-        for key, leaf in flat_like.items():
+        for key, _leaf in flat_like.items():
             if key not in data:
                 raise KeyError(f"checkpoint missing {key}")
             arr = data[key]

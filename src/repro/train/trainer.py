@@ -66,7 +66,7 @@ def make_train_step(loss_fn: Callable[[Any, Any], tuple[jax.Array, dict]],
             grads = jax.tree_util.tree_map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)
             for i in range(microbatches):
-                micro = jax.tree_util.tree_map(lambda x: x[i], mb)
+                micro = jax.tree_util.tree_map(lambda x, i=i: x[i], mb)
                 li, metrics, gi = compute_grads(params, micro)
                 loss = loss + li
                 grads = jax.tree_util.tree_map(

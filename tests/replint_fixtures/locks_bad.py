@@ -1,0 +1,47 @@
+"""Fixture: every lock-discipline rule fires exactly where marked.
+
+Parsed by tests/test_replint.py — never imported or executed.
+"""
+
+import threading
+import time
+
+
+class BadCounter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._aux = threading.Lock()
+        self._count = 0
+        self._items = []
+
+    def bump(self):
+        with self._lock:
+            self._count += 1          # establishes: _count guarded by _lock
+            self._items.append(1)     # establishes: _items guarded by _lock
+
+    def peek(self):
+        return self._count            # lock-bare-read
+
+    def reset(self):
+        self._count = 0               # lock-bare-write
+
+    def slow_bump(self):
+        with self._lock:
+            time.sleep(0.1)           # lock-blocking-call
+            self._count += 1
+
+    def _drop_locked(self):
+        self._items.clear()           # exempt: *_locked convention
+
+    def drop(self):
+        self._drop_locked()           # lock-helper-unlocked (no lock held)
+
+    def ab(self):
+        with self._lock:
+            with self._aux:           # order edge: _lock -> _aux
+                self._count += 1
+
+    def ba(self):
+        with self._aux:
+            with self._lock:          # lock-order: conflicting edge
+                self._count += 1

@@ -1,0 +1,32 @@
+"""Fixture: disciplined locking — the locks pass must stay silent.
+
+Parsed by tests/test_replint.py — never imported or executed.
+"""
+
+import threading
+
+
+class GoodCounter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._done = threading.Event()   # sync primitive: exempt
+        self._count = 0
+        self._label = "idle"             # only assigned in __init__: exempt
+
+    def bump(self):
+        with self._lock:
+            self._count += 1
+            self._flush_locked()
+
+    def peek(self):
+        with self._lock:
+            return self._count
+
+    def _flush_locked(self):
+        self._count = max(self._count, 0)
+
+    def wait_done(self):
+        self._done.wait()                # no lock held: fine
+
+    def describe(self):
+        return self._label               # immutable after init: fine

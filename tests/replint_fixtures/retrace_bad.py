@@ -1,0 +1,51 @@
+"""Fixture: every retrace rule fires exactly where marked.
+
+Parsed by tests/test_replint.py — never imported or executed.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def per_request(xs):
+    out = []
+    for x in xs:
+        f = jax.jit(lambda v: v * 2)      # retrace-in-loop
+        out.append(f(x))
+    return out
+
+
+class Scorer:
+    def __init__(self, scale):
+        self.scale = scale
+
+    def build(self):
+        @jax.jit
+        def fn(x):
+            return x * self.scale          # retrace-self-capture
+        return fn
+
+
+@jax.jit
+def syncs(x):
+    y = float(x.sum())                     # retrace-host-sync (float)
+    z = np.asarray(x)                      # retrace-host-sync (np.asarray)
+    return y + z.sum() + x.sum().item()    # retrace-host-sync (.item)
+
+
+def scan_body(carry, x):
+    return carry + int(x), x               # retrace-host-sync (int)
+
+
+def run(xs):
+    return jax.lax.scan(scan_body, 0, xs)
+
+
+def good_builder(scale):
+    s = jnp.asarray(scale)                 # snapshot: no finding
+
+    @jax.jit
+    def fn(x):
+        return x * s
+    return fn

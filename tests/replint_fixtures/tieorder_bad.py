@@ -1,0 +1,24 @@
+"""Fixture: tie-order violations vs. clean routing.
+
+Parsed by tests/test_replint.py — never imported or executed.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def rank_naive(scores, k):
+    return jax.lax.top_k(scores, k)          # tieorder-raw-rank
+
+
+def order_by_sim(similarities):
+    return jnp.argsort(-similarities)        # tieorder-raw-rank
+
+
+def bucket_labels(labels):
+    return jnp.argsort(labels)               # audit-only (not score-like)
+
+
+def rank_clean(scores, ids, k):
+    from repro.retrieval.topk import topk_score_then_id
+    return topk_score_then_id(scores, ids, k)   # canonical route: no finding

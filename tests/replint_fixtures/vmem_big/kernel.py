@@ -1,0 +1,29 @@
+"""Fixture: intentionally-oversized Pallas kernel for the VMEM budget pass.
+
+Two f32 blocks of (1024, 4096) double-buffered = 2 × 16 MiB × 2 — far past
+the 16 MiB budget — plus a lane-misaligned (128, 100) output block.
+
+Parsed by tests/test_replint.py — never imported or executed.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, out_ref):
+    out_ref[...] = (a_ref[...] * b_ref[...]).sum(axis=1)[:, None]
+
+
+def oversized_pallas(a, b):
+    grid = (a.shape[0] // 1024,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1024, 4096), lambda i: (i, 0)),
+            pl.BlockSpec((1024, 4096), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((128, 100), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((a.shape[0], 1024), jnp.float32),
+    )(a, b)

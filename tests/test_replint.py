@@ -1,0 +1,353 @@
+"""replint: golden findings per pass on the fixture corpus, baseline
+round-trip, VMEM report over the real kernels, and the runtime hooks
+(retrace_guard on the IVF streaming hot path, LockSanitizer semantics).
+
+The static passes are pure-AST: fixtures are parsed, never imported.
+"""
+
+import ast
+import json
+import sys
+import threading
+import time
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+FIXTURES = Path(__file__).resolve().parent / "replint_fixtures"
+sys.path.insert(0, str(REPO_ROOT))
+
+from tools.repro_lint import (apply_baseline, check_locks, check_retrace,  # noqa: E402
+                              check_tieorder, check_vmem, load_baseline,
+                              write_baseline)
+from tools.repro_lint.cli import main as replint_main, vmem_report  # noqa: E402
+from tools.repro_lint.vmem import (KernelProfile, VMEM_LIMIT,  # noqa: E402
+                                   estimate_file)
+from tools.repro_lint.runtime import (LockSanitizer, RetraceError,  # noqa: E402
+                                      retrace_guard)
+
+
+def _parse(name: str) -> ast.Module:
+    return ast.parse((FIXTURES / name).read_text())
+
+
+def _rules(findings):
+    return sorted(f.rule for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# lock discipline
+# ---------------------------------------------------------------------------
+
+
+def test_locks_bad_fixture_golden():
+    findings = check_locks(_parse("locks_bad.py"), "serve/locks_bad.py")
+    by_rule = {}
+    for f in findings:
+        by_rule.setdefault(f.rule, []).append(f)
+
+    bare_reads = {f.qualname for f in by_rule.get("lock-bare-read", [])}
+    assert "BadCounter.peek" in bare_reads
+    bare_writes = {f.qualname for f in by_rule.get("lock-bare-write", [])}
+    assert "BadCounter.reset" in bare_writes
+    assert any(f.qualname == "BadCounter.slow_bump" and f.detail == "time.sleep"
+               for f in by_rule.get("lock-blocking-call", []))
+    assert any(f.detail == "_drop_locked"
+               for f in by_rule.get("lock-helper-unlocked", []))
+    assert len(by_rule.get("lock-order", [])) == 1
+
+
+def test_locks_good_fixture_silent():
+    assert check_locks(_parse("locks_good.py"), "serve/locks_good.py") == []
+
+
+def test_locks_finding_keys_stable_across_line_shifts():
+    src = (FIXTURES / "locks_bad.py").read_text()
+    shifted = "# shifted\n# shifted\n" + src
+    a = check_locks(ast.parse(src), "serve/locks_bad.py")
+    b = check_locks(ast.parse(shifted), "serve/locks_bad.py")
+    assert {f.key for f in a} == {f.key for f in b}
+
+
+# ---------------------------------------------------------------------------
+# retrace hazards
+# ---------------------------------------------------------------------------
+
+
+def test_retrace_bad_fixture_golden():
+    findings = check_retrace(_parse("retrace_bad.py"), "core/retrace_bad.py")
+    rules = _rules(findings)
+    assert "retrace-in-loop" in rules
+    assert any(f.rule == "retrace-self-capture" and f.detail == "scale"
+               for f in findings)
+    syncs = {f.detail for f in findings if f.rule == "retrace-host-sync"}
+    assert {"float", "int", "item", "np.asarray"} <= syncs
+    # the snapshot idiom must stay silent
+    assert not any("good_builder" in f.qualname for f in findings)
+
+
+def test_retrace_serve_path_forbids_jit_construction():
+    findings = check_retrace(_parse("retrace_bad.py"),
+                             "src/repro/serve/retrace_bad.py")
+    assert any(f.rule == "retrace-in-serve" for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# tie-order
+# ---------------------------------------------------------------------------
+
+
+def test_tieorder_bad_fixture_golden():
+    findings = check_tieorder(_parse("tieorder_bad.py"),
+                              "examples/tieorder_bad.py")
+    quals = {f.qualname for f in findings if f.rule == "tieorder-raw-rank"}
+    assert quals == {"rank_naive", "order_by_sim"}
+
+
+def test_tieorder_strict_mode_reports_audit_sites():
+    findings = check_tieorder(_parse("tieorder_bad.py"),
+                              "examples/tieorder_bad.py", strict=True)
+    audit = {f.qualname for f in findings
+             if f.rule == "tieorder-raw-rank-audit"}
+    assert "bucket_labels" in audit
+
+
+def test_tieorder_whitelist_covers_topk_module():
+    findings = check_tieorder(_parse("tieorder_bad.py"),
+                              "src/repro/retrieval/topk.py", strict=True)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# VMEM budgets
+# ---------------------------------------------------------------------------
+
+BIG_PROFILE = [KernelProfile(
+    "fixture", {},
+    ["float32", "float32", "float32"],
+    [(4096, 4096), (4096, 4096), (4096, 1024)],
+)]
+
+
+def test_vmem_oversized_fixture_fails_budget():
+    tree = ast.parse((FIXTURES / "vmem_big" / "kernel.py").read_text())
+    findings = check_vmem(tree, "kernels/vmem_big/kernel.py",
+                          profiles=BIG_PROFILE)
+    rules = _rules(findings)
+    assert "vmem-budget" in rules
+    assert "vmem-misaligned" in rules     # the (128, 100) output block
+    ests = estimate_file(tree, "kernels/vmem_big/kernel.py", BIG_PROFILE)
+    assert len(ests) == 1 and ests[0].total_bytes > VMEM_LIMIT
+    assert not ests[0].ok
+
+
+def test_vmem_report_covers_all_five_kernels_and_passes():
+    report, ok = vmem_report(REPO_ROOT)
+    assert ok, report
+    for pkg in ("binary_ip", "int8_ip", "fused_quantize", "topk_blocks",
+                "ivf_fused"):
+        assert pkg in report, report
+    # both fused-IVF storage variants are profiled
+    assert "ivf_fused[float]" in report and "ivf_fused[onebit]" in report
+
+
+def test_vmem_real_kernels_within_budget():
+    for f in sorted((REPO_ROOT / "src/repro/kernels").rglob("kernel.py")):
+        rel = f.relative_to(REPO_ROOT).as_posix()
+        findings = check_vmem(ast.parse(f.read_text()), rel)
+        assert findings == [], [fi.render() for fi in findings]
+
+
+# ---------------------------------------------------------------------------
+# baseline round-trip + CLI
+# ---------------------------------------------------------------------------
+
+
+def test_baseline_round_trip(tmp_path):
+    findings = check_locks(_parse("locks_bad.py"), "serve/locks_bad.py")
+    assert findings
+    path = tmp_path / "baseline.json"
+    write_baseline(path, findings)
+    baseline = load_baseline(path)
+    assert len(baseline) == len({f.key for f in findings})
+
+    # full suppression: nothing active, nothing stale
+    res = apply_baseline(findings, baseline)
+    assert res.active == [] and res.stale_keys == []
+    assert len(res.suppressed) == len(findings)
+
+    # fixing a violation strands its baseline entry -> stale (shrink-only)
+    fixed = [f for f in findings if f.rule != "lock-bare-read"]
+    res2 = apply_baseline(fixed, baseline)
+    assert res2.stale_keys
+    assert all("lock-bare-read" in k for k in res2.stale_keys)
+
+
+def test_cli_repo_is_clean_with_empty_baseline(capsys):
+    rc = replint_main(["src", "benchmarks", "examples",
+                       "--baseline", "tools/repro_lint/baseline.json",
+                       "--root", str(REPO_ROOT)])
+    out = capsys.readouterr().out
+    assert rc == 0, out
+    assert json.loads(
+        (REPO_ROOT / "tools/repro_lint/baseline.json").read_text()) == {}
+
+
+def test_cli_stale_baseline_entry_fails(tmp_path, capsys):
+    stale = tmp_path / "baseline.json"
+    stale.write_text(json.dumps({"lock-bare-read:gone.py:X.y:attr": "old"}))
+    rc = replint_main(["src/repro/serve", "--baseline", str(stale),
+                       "--root", str(REPO_ROOT)])
+    out = capsys.readouterr().out
+    assert rc == 1 and "stale" in out
+
+
+# ---------------------------------------------------------------------------
+# runtime: retrace_guard on the IVF streaming hot path
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_ivf():
+    from repro.retrieval import IVFFlatIndex
+    rng = np.random.default_rng(7)
+    docs = jnp.asarray(rng.standard_normal((300, 32)), jnp.float32)
+    return IVFFlatIndex(nlist=8, nprobe=4, kmeans_iters=3).fit(docs)
+
+
+def test_retrace_guard_ivf_streaming_steady_state(small_ivf):
+    rng = np.random.default_rng(8)
+    qs = jnp.asarray(rng.standard_normal((16, 32)), jnp.float32)
+    small_ivf.search(qs, 5)                      # warm-up: compiles here
+    with retrace_guard(expected=0, what="IVF streaming search") as tally:
+        for _ in range(4):
+            small_ivf.search(qs, 5)              # steady state: cache hits
+    assert tally.compiles == 0
+
+
+def test_retrace_guard_fires_on_shape_churn(small_ivf):
+    rng = np.random.default_rng(9)
+    with pytest.raises(RetraceError):
+        with retrace_guard(expected=0, what="shape churn"):
+            # a never-before-seen query batch shape forces a fresh trace
+            qs = jnp.asarray(rng.standard_normal((13, 32)), jnp.float32)
+            small_ivf.search(qs, 5)
+
+
+# ---------------------------------------------------------------------------
+# runtime: LockSanitizer
+# ---------------------------------------------------------------------------
+
+
+class _Sleeper:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def bad(self):
+        with self._lock:
+            time.sleep(0.001)
+
+    def good(self):
+        with self._lock:
+            pass
+        time.sleep(0.001)
+
+
+def test_lock_sanitizer_catches_sleep_under_lock():
+    s = _Sleeper()
+    san = LockSanitizer().wrap(s, "_lock")
+    with san:
+        s.bad()
+    assert san.violations
+    v = san.violations[0]
+    assert v.kind == "blocking-call" and "time.sleep" in v.detail
+    assert "_Sleeper._lock" in v.held
+    with pytest.raises(AssertionError):
+        san.assert_clean()
+
+
+def test_lock_sanitizer_clean_path_and_restore():
+    s = _Sleeper()
+    san = LockSanitizer().wrap(s, "_lock")
+    orig_sleep = time.sleep
+    with san:
+        s.good()
+        assert time.sleep is not orig_sleep      # detector installed
+    assert time.sleep is orig_sleep              # restored on exit
+    san.assert_clean()
+
+
+def test_lock_sanitizer_flags_conflicting_order():
+    class Two:
+        def __init__(self):
+            self._a = threading.Lock()
+            self._b = threading.Lock()
+
+    t = Two()
+    san = LockSanitizer().wrap(t, "_a", "_b")
+    with san:
+        with t._a:
+            with t._b:
+                pass
+        with t._b:
+            with t._a:
+                pass
+    assert any(v.kind == "lock-order" for v in san.violations)
+
+
+def test_lock_sanitizer_reentrant_rlock():
+    class R:
+        def __init__(self):
+            self._lock = threading.RLock()
+
+    r = R()
+    san = LockSanitizer().wrap(r, "_lock")
+    with san:
+        with r._lock:
+            with r._lock:                         # reentrant: no violation
+                assert san.held_locks() == ("R._lock",)
+    san.assert_clean()
+
+
+# ---------------------------------------------------------------------------
+# regression pin: the representative lock-discipline fix (satellite 1)
+# ---------------------------------------------------------------------------
+
+
+def test_serve_tree_is_lock_discipline_clean():
+    """Pins the PR-9 fixes: engine observe_depth snapshot, service close()
+    thread handoff, stats() counter reads, router always-lock, limits
+    _refill_locked.  Any regression re-introduces a finding here."""
+    serve = REPO_ROOT / "src" / "repro" / "serve"
+    all_findings = []
+    for f in sorted(serve.glob("*.py")):
+        rel = f.relative_to(REPO_ROOT).as_posix()
+        all_findings += check_locks(ast.parse(f.read_text()), rel)
+    assert all_findings == [], [fi.render() for fi in all_findings]
+
+
+def test_engine_observe_depth_sees_rows_under_lock():
+    """Representative case: the adaptive batcher's depth signal is the
+    row count captured *inside* the queue lock, racing producers can't
+    skew it mid-read (the pre-PR-9 code re-read `_inflight_rows` bare)."""
+    from repro.retrieval import DenseIndex
+    from repro.serve.batcher import AdaptiveBatcher
+    from repro.serve.engine import ServeEngine
+
+    rng = np.random.default_rng(3)
+    docs = jnp.asarray(rng.standard_normal((64, 16)), jnp.float32)
+    batcher = AdaptiveBatcher(min_batch=4, max_batch=32)
+    engine = ServeEngine(DenseIndex(docs), k=5, batcher=batcher)
+
+    seen = []
+    orig = batcher.observe_depth
+    batcher.observe_depth = lambda rows: (seen.append(rows), orig(rows))[1]
+
+    qs = np.asarray(rng.standard_normal((7, 16)), np.float32)
+    engine.submit(qs)
+    engine.submit(qs[:3])
+    engine.drain()
+    assert seen == [10]           # exactly the rows popped by this drain

@@ -11,6 +11,7 @@ from repro.retrieval import IndexSpec, build_index, load_index
 from repro.retrieval.index import DenseIndex
 from repro.serve import (CanaryFailed, QueryOptions, QueueFull,
                          RetrievalService, ServiceClosed)
+from tools.repro_lint.runtime import LockSanitizer
 
 D = 32
 K = 5
@@ -427,6 +428,10 @@ def test_hot_swap_parity_under_concurrent_load(tmp_path, corpus, backend,
 
     svc = RetrievalService(max_batch=32)
     svc.register("kb", artifact=p1)
+    # Runtime lock-discipline monitor: the whole stress run executes under
+    # the sanitizer and must finish without a single violation (the dynamic
+    # complement of replint's static lock pass).
+    san = LockSanitizer().wrap(svc, "_lock", "_admission", "_update_lock")
     n_threads, per_thread = 4, 25
     promote_done = threading.Event()
     outcomes: list[list] = [[] for _ in range(n_threads)]
@@ -448,16 +453,18 @@ def test_hot_swap_parity_under_concurrent_load(tmp_path, corpus, backend,
 
     threads = [threading.Thread(target=producer, args=(t,))
                for t in range(n_threads)]
-    for th in threads:
-        th.start()
-    svc.stage("kb", artifact=p2)                   # load off the hot path
-    svc.promote("kb")                              # atomic flip mid-traffic
-    promote_done.set()
-    for th in threads:
-        th.join()
-    # guaranteed post-promote traffic even if producers finished early
-    final = svc.query(queries, QueryOptions(index="kb", k=K)).result(60)
-    svc.close()
+    with san:
+        for th in threads:
+            th.start()
+        svc.stage("kb", artifact=p2)               # load off the hot path
+        svc.promote("kb")                          # atomic flip mid-traffic
+        promote_done.set()
+        for th in threads:
+            th.join()
+        # guaranteed post-promote traffic even if producers finished early
+        final = svc.query(queries, QueryOptions(index="kb", k=K)).result(60)
+        svc.close()
+    san.assert_clean()
 
     assert not errors
     n_post = 0

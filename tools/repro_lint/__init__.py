@@ -1,0 +1,23 @@
+"""replint: project-invariant static analysis for the repro codebase.
+
+Four AST passes (lock discipline, JIT-retrace hazards, tie-order invariant,
+Pallas VMEM budgets) plus runtime sanitizer hooks (``retrace_guard``,
+``LockSanitizer``).  See README "Static analysis" for the contract each pass
+enforces.  The static passes are pure stdlib; ``runtime`` imports jax lazily.
+"""
+
+from .findings import Finding, apply_baseline, load_baseline, write_baseline
+from .cli import main, run_passes
+from .locks import check_locks
+from .retrace import check_retrace
+from .tieorder import check_tieorder
+from .vmem import (DEFAULT_PROFILES, KernelProfile, VMEM_LIMIT, check_vmem,
+                   estimate_file, profiles_for, render_report)
+
+__all__ = [
+    "Finding", "apply_baseline", "load_baseline", "write_baseline",
+    "main", "run_passes",
+    "check_locks", "check_retrace", "check_tieorder", "check_vmem",
+    "DEFAULT_PROFILES", "KernelProfile", "VMEM_LIMIT",
+    "estimate_file", "profiles_for", "render_report",
+]

@@ -1,0 +1,147 @@
+"""replint command line.
+
+Usage:
+
+    python -m tools.repro_lint src/ --baseline tools/repro_lint/baseline.json
+    python -m tools.repro_lint --vmem-report
+    python -m tools.repro_lint src/ --write-baseline
+
+Pure stdlib: the static passes never import jax, so the CI lane needs no heavy
+dependencies.  Exit codes: 0 clean, 1 active findings (or stale baseline
+entries), 2 usage/parse error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import sys
+from pathlib import Path
+
+from .findings import Finding, apply_baseline, load_baseline, write_baseline
+from .locks import check_locks
+from .retrace import check_retrace
+from .tieorder import check_tieorder
+from .vmem import check_vmem, estimate_file, profiles_for, render_report
+
+DEFAULT_PATHS = ["src", "benchmarks", "examples"]
+SKIP_PARTS = {"__pycache__", ".git", "replint_fixtures"}
+
+
+def iter_py_files(paths: list[str], root: Path) -> list[Path]:
+    files: list[Path] = []
+    for p in paths:
+        path = (root / p) if not Path(p).is_absolute() else Path(p)
+        if path.is_file() and path.suffix == ".py":
+            files.append(path)
+        elif path.is_dir():
+            files.extend(sorted(
+                f for f in path.rglob("*.py")
+                if not (SKIP_PARTS & set(f.parts))))
+    return files
+
+
+def run_passes(files: list[Path], root: Path,
+               strict_tieorder: bool = False) -> list[Finding]:
+    findings: list[Finding] = []
+    for f in files:
+        try:
+            rel = f.relative_to(root).as_posix()
+        except ValueError:
+            rel = f.as_posix()
+        try:
+            tree = ast.parse(f.read_text())
+        except SyntaxError as e:
+            findings.append(Finding(
+                rule="parse-error", path=rel, line=e.lineno or 0,
+                qualname="", detail="syntax",
+                message=f"could not parse: {e.msg}"))
+            continue
+        # Lock discipline is scoped to the serving stack (the ISSUE contract):
+        # retrieval-side classes like SegmentedIndex intentionally publish
+        # state via atomic reference swaps and are checked by their own
+        # bit-identity tests instead.
+        if "serve/" in rel:
+            findings.extend(check_locks(tree, rel))
+        findings.extend(check_retrace(tree, rel))
+        findings.extend(check_tieorder(tree, rel, strict=strict_tieorder))
+        findings.extend(check_vmem(tree, rel))
+    return findings
+
+
+def vmem_report(root: Path) -> tuple[str, bool]:
+    kernel_files = sorted((root / "src" / "repro" / "kernels").rglob("kernel.py"))
+    estimates = []
+    for f in kernel_files:
+        rel = f.relative_to(root).as_posix()
+        profs = profiles_for(rel)
+        if profs is None:
+            continue
+        tree = ast.parse(f.read_text())
+        estimates.extend(estimate_file(tree, rel, profs))
+    ok = all(e.ok for e in estimates) and bool(estimates)
+    return render_report(estimates), ok
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.repro_lint",
+        description="replint: project-invariant static analysis "
+                    "(locks, retrace, tie-order, VMEM)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs to lint (default: {DEFAULT_PATHS})")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline.json of suppressed findings (shrink-only)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings to --baseline and exit 0")
+    ap.add_argument("--vmem-report", action="store_true",
+                    help="print per-kernel VMEM estimates and exit")
+    ap.add_argument("--strict-tieorder", action="store_true",
+                    help="also report non-score-like raw rank primitives")
+    ap.add_argument("--root", default=".", help="repo root for relative paths")
+    args = ap.parse_args(argv)
+
+    root = Path(args.root).resolve()
+
+    if args.vmem_report:
+        report, ok = vmem_report(root)
+        print(report)
+        if not ok:
+            print("\nvmem-report: FAIL", file=sys.stderr)
+            return 1
+        return 0
+
+    paths = args.paths or DEFAULT_PATHS
+    files = iter_py_files(paths, root)
+    if not files:
+        print(f"replint: no python files under {paths}", file=sys.stderr)
+        return 2
+
+    findings = run_passes(files, root, strict_tieorder=args.strict_tieorder)
+
+    if args.write_baseline:
+        if not args.baseline:
+            print("--write-baseline requires --baseline", file=sys.stderr)
+            return 2
+        write_baseline(args.baseline, findings)
+        print(f"replint: wrote {len(findings)} finding(s) to {args.baseline}")
+        return 0
+
+    baseline = load_baseline(args.baseline)
+    result = apply_baseline(findings, baseline)
+
+    for f in sorted(result.active, key=lambda f: (f.path, f.line)):
+        print(f.render())
+    for key in result.stale_keys:
+        print(f"stale baseline entry (fixed? delete it): {key}")
+
+    n_files = len(files)
+    print(f"replint: {n_files} files, {len(result.active)} finding(s), "
+          f"{len(result.suppressed)} baselined, "
+          f"{len(result.stale_keys)} stale baseline entr"
+          f"{'y' if len(result.stale_keys) == 1 else 'ies'}")
+    return 1 if (result.active or result.stale_keys) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

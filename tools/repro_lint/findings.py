@@ -1,0 +1,79 @@
+"""Finding model and baseline suppression for replint.
+
+A finding is identified by a *stable key* that deliberately excludes line
+numbers, so that unrelated edits do not churn the baseline:
+
+    rule:relpath:qualname:detail
+
+The baseline (``tools/repro_lint/baseline.json``) maps stable keys to a short
+justification string.  Baseline semantics are shrink-only:
+
+* a finding whose key appears in the baseline is *suppressed* (reported in the
+  summary count but does not fail the run);
+* a baseline entry that matches no current finding is **stale** and is itself
+  an error — entries must be deleted as the underlying violations are fixed,
+  so the baseline can only shrink over time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str          # e.g. "lock-bare-read"
+    path: str          # repo-relative posix path
+    line: int          # 1-based line for human output (not part of the key)
+    qualname: str      # Class.method or function qualname ("" for module level)
+    detail: str        # stable machine detail, e.g. attribute / call name
+    message: str       # human-readable explanation
+
+    @property
+    def key(self) -> str:
+        return f"{self.rule}:{self.path}:{self.qualname}:{self.detail}"
+
+    def render(self) -> str:
+        where = f"{self.path}:{self.line}"
+        ctx = f" [{self.qualname}]" if self.qualname else ""
+        return f"{where}: {self.rule}{ctx}: {self.message}"
+
+
+def load_baseline(path: str | Path | None) -> dict[str, str]:
+    if path is None:
+        return {}
+    p = Path(path)
+    if not p.exists():
+        return {}
+    data = json.loads(p.read_text())
+    if not isinstance(data, dict):
+        raise ValueError(f"baseline {p} must be a JSON object of key -> justification")
+    return {str(k): str(v) for k, v in data.items()}
+
+
+def write_baseline(path: str | Path, findings: list[Finding]) -> None:
+    entries = {f.key: f.message for f in sorted(findings, key=lambda f: f.key)}
+    Path(path).write_text(json.dumps(entries, indent=2, sort_keys=True) + "\n")
+
+
+@dataclasses.dataclass
+class BaselineResult:
+    active: list[Finding]          # findings not covered by the baseline
+    suppressed: list[Finding]      # findings matched by a baseline entry
+    stale_keys: list[str]          # baseline entries that matched nothing
+
+
+def apply_baseline(findings: list[Finding], baseline: dict[str, str]) -> BaselineResult:
+    active: list[Finding] = []
+    suppressed: list[Finding] = []
+    used: set[str] = set()
+    for f in findings:
+        if f.key in baseline:
+            suppressed.append(f)
+            used.add(f.key)
+        else:
+            active.append(f)
+    stale = sorted(k for k in baseline if k not in used)
+    return BaselineResult(active=active, suppressed=suppressed, stale_keys=stale)

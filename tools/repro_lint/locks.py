@@ -1,0 +1,367 @@
+"""Lock-discipline pass.
+
+For every class that owns at least one ``threading.Lock``/``RLock``/
+``Condition`` attribute, infer which ``self._*`` attributes are guarded by
+which lock and flag:
+
+* ``lock-bare-read`` / ``lock-bare-write`` — access to a guarded attribute
+  outside any ``with self.<lock>`` block (outside ``__init__``);
+* ``lock-blocking-call`` — a blocking call (``time.sleep``, ``.wait()``,
+  ``.get()``/``.put()`` without ``block=False``/``timeout=0``, ``.result()``,
+  ``.join()``) made while a lock is lexically held;
+* ``lock-helper-unlocked`` — calling a ``self.*_locked()`` helper without
+  holding any lock;
+* ``lock-order`` — two locks acquired in both nesting orders anywhere in the
+  analyzed set.
+
+Inference rule: an attribute is *guarded* when at least one mutation of it
+happens under a lock; the guard set is the union of locks held at its locked
+mutation sites.  Bare mutations of a guarded attribute are violations (they do
+not un-guard the attribute).  Exempt from inference and checking:
+
+* all accesses inside ``__init__`` (single-threaded construction);
+* attributes assigned a synchronization primitive (locks, events, queues,
+  conditions) — these objects are internally synchronized;
+* attributes only ever assigned in ``__init__`` (immutable after init);
+* methods named ``*_locked`` — by convention the caller holds the lock, and
+  calling one without a lock held is its own finding.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+from .findings import Finding
+
+MUTATOR_METHODS = {
+    "append", "extend", "insert", "remove", "clear", "pop", "popitem",
+    "update", "setdefault", "add", "discard", "move_to_end", "appendleft",
+    "popleft", "rotate",
+}
+
+# Constructors whose product is internally synchronized — attributes holding
+# one of these are exempt from guard inference.
+SYNC_CONSTRUCTORS = {
+    "Lock", "RLock", "Condition", "Semaphore", "BoundedSemaphore",
+    "Event", "Barrier", "Queue", "SimpleQueue", "LifoQueue", "PriorityQueue",
+    "local",
+}
+
+BLOCKING_METHODS = {"wait", "result", "join", "acquire"}
+QUEUE_METHODS = {"get", "put"}
+
+
+def _self_attr(node: ast.expr) -> str | None:
+    """Return attr name if node is ``self.<attr>``."""
+    if (isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def _is_sync_ctor(node: ast.expr) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    fn = node.func
+    name = None
+    if isinstance(fn, ast.Attribute):
+        name = fn.attr
+    elif isinstance(fn, ast.Name):
+        name = fn.id
+    return name in SYNC_CONSTRUCTORS
+
+
+@dataclass
+class _Access:
+    attr: str
+    kind: str                 # "read" | "write"
+    held: frozenset[str]      # lock attrs lexically held
+    method: str               # method qualname suffix
+    line: int
+
+
+@dataclass
+class _ClassInfo:
+    name: str
+    locks: set[str] = field(default_factory=set)
+    sync_attrs: set[str] = field(default_factory=set)
+    init_assigned: set[str] = field(default_factory=set)
+    accesses: list[_Access] = field(default_factory=list)
+    blocking: list[tuple[str, str, frozenset, str, int]] = field(default_factory=list)
+    # (call-desc, detail, held, method, line)
+    helper_calls: list[tuple[str, frozenset, str, int]] = field(default_factory=list)
+    order_edges: list[tuple[str, str, str, int]] = field(default_factory=list)
+    # (outer, inner, method, line)
+
+
+class _MethodWalker:
+    """Walk one method body tracking lexically-held locks."""
+
+    def __init__(self, cls: _ClassInfo, method: str, in_init: bool,
+                 time_aliases: set[str]):
+        self.cls = cls
+        self.method = method
+        self.in_init = in_init
+        self.locked_helper = method.endswith("_locked")
+        self.time_aliases = time_aliases
+
+    def walk(self, body: list[ast.stmt], held: frozenset[str]) -> None:
+        for stmt in body:
+            self._stmt(stmt, held)
+
+    def _stmt(self, stmt: ast.stmt, held: frozenset[str]) -> None:
+        if isinstance(stmt, ast.With) or isinstance(stmt, ast.AsyncWith):
+            new_held = set(held)
+            for item in stmt.items:
+                lock = self._lock_name(item.context_expr)
+                if lock is not None:
+                    for outer in held:
+                        if outer != lock:
+                            self.cls.order_edges.append(
+                                (outer, lock, self.method, stmt.lineno))
+                    new_held.add(lock)
+                else:
+                    self._expr(item.context_expr, held)
+            self.walk(stmt.body, frozenset(new_held))
+            return
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # Nested function: runs later, no lock lexically held.
+            sub = _MethodWalker(self.cls, f"{self.method}.{stmt.name}",
+                                self.in_init, self.time_aliases)
+            sub.walk(stmt.body, frozenset())
+            return
+        if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = stmt.targets if isinstance(stmt, ast.Assign) else [stmt.target]
+            value = stmt.value
+            for t in targets:
+                self._target(t, held, value)
+            if value is not None:
+                self._expr(value, held)
+            return
+        if isinstance(stmt, ast.Delete):
+            for t in stmt.targets:
+                self._target(t, held, None)
+            return
+        # Generic: visit child statements/expressions.
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.stmt):
+                self._stmt(child, held)
+            elif isinstance(child, ast.expr):
+                self._expr(child, held)
+            elif isinstance(child, (ast.excepthandler,)):
+                for s in child.body:
+                    self._stmt(s, held)
+            elif hasattr(child, "body"):
+                pass
+
+    def _lock_name(self, expr: ast.expr) -> str | None:
+        attr = _self_attr(expr)
+        if attr is not None and attr in self.cls.locks:
+            return attr
+        # ``with other.lock`` / ``with other._lock``: name the lock attr so the
+        # order check sees cross-object nesting too.
+        if isinstance(expr, ast.Attribute) and ("lock" in expr.attr or expr.attr == "_mu"):
+            return expr.attr
+        return None
+
+    def _target(self, t: ast.expr, held: frozenset[str], value: ast.expr | None) -> None:
+        attr = _self_attr(t)
+        if attr is not None:
+            if self.in_init:
+                self.cls.init_assigned.add(attr)
+                if value is not None and _is_sync_ctor(value):
+                    self.cls.sync_attrs.add(attr)
+                return
+            self._record(attr, "write", held, t.lineno)
+            return
+        if isinstance(t, ast.Subscript):
+            base = _self_attr(t.value)
+            if base is not None:
+                self._record(base, "write", held, t.lineno)
+            else:
+                self._expr(t.value, held)
+            self._expr(t.slice, held)
+            return
+        if isinstance(t, ast.Attribute):
+            self._expr(t.value, held)
+            return
+        if isinstance(t, (ast.Tuple, ast.List)):
+            for el in t.elts:
+                self._target(el, held, None)
+            return
+
+    def _record(self, attr: str, kind: str, held: frozenset[str], line: int) -> None:
+        if self.in_init or self.locked_helper:
+            return
+        self.cls.accesses.append(_Access(attr, kind, held, self.method, line))
+
+    def _expr(self, expr: ast.expr, held: frozenset[str]) -> None:
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Call):
+                self._call(node, held)
+            elif isinstance(node, ast.Attribute) and isinstance(node.ctx, ast.Load):
+                attr = _self_attr(node)
+                if attr is not None:
+                    self._record(attr, "read", held, node.lineno)
+            elif isinstance(node, (ast.Lambda, ast.FunctionDef)):
+                pass
+
+    def _call(self, call: ast.Call, held: frozenset[str]) -> None:
+        fn = call.func
+        # self.<attr>.<mutator>(...) counts as a write to <attr>.
+        if isinstance(fn, ast.Attribute):
+            base_attr = _self_attr(fn.value)
+            if base_attr is not None and fn.attr in MUTATOR_METHODS:
+                self._record(base_attr, "write", held, call.lineno)
+            # self.<helper>_locked() without a lock held
+            helper = _self_attr(fn)
+            if (helper is not None and helper.endswith("_locked")
+                    and not held and not self.locked_helper and not self.in_init):
+                self.cls.helper_calls.append((helper, held, self.method, call.lineno))
+            if held:
+                self._blocking(call, fn, held)
+
+    def _blocking(self, call: ast.Call, fn: ast.Attribute, held: frozenset[str]) -> None:
+        name = fn.attr
+        base = fn.value
+        desc = None
+        if name == "sleep" and isinstance(base, ast.Name) and base.id in self.time_aliases:
+            desc = f"{base.id}.sleep"
+        elif name in BLOCKING_METHODS:
+            base_attr = _self_attr(base)
+            # Waiting on the lock/condition you hold is normal Condition usage;
+            # acquiring a *different* lock is covered by the order check.
+            if base_attr in self.cls.locks or base_attr in self.cls.sync_attrs and name == "acquire":
+                return
+            if name == "acquire":
+                return  # nested acquire handled by lock-order pass
+            desc = f".{name}"
+        elif name in QUEUE_METHODS:
+            # dict/OrderedDict .get(key[, default]) take positional args;
+            # queue.Queue.get()/put(item) block via keywords only — treat
+            # .get with positional args as a mapping lookup, not a block.
+            if name == "get" and call.args:
+                return
+            for kw in call.keywords:
+                if kw.arg == "block" and isinstance(kw.value, ast.Constant) and kw.value.value is False:
+                    return
+                if kw.arg == "timeout" and isinstance(kw.value, ast.Constant) and kw.value.value == 0:
+                    return
+            desc = f".{name}"
+        if desc is not None:
+            self.cls.blocking.append((desc, desc, held, self.method, call.lineno))
+
+
+def _collect_class(cls_node: ast.ClassDef, time_aliases: set[str]) -> _ClassInfo:
+    info = _ClassInfo(name=cls_node.name)
+    # First sweep: find lock attributes (assigned a Lock/RLock/Condition in any
+    # method, typically __init__).
+    for node in ast.walk(cls_node):
+        if isinstance(node, ast.Assign) and _is_sync_ctor(node.value):
+            ctor = node.value.func
+            ctor_name = ctor.attr if isinstance(ctor, ast.Attribute) else getattr(ctor, "id", "")
+            for t in node.targets:
+                attr = _self_attr(t)
+                if attr is not None:
+                    info.sync_attrs.add(attr)
+                    if ctor_name in {"Lock", "RLock", "Condition"}:
+                        info.locks.add(attr)
+    for item in cls_node.body:
+        if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            walker = _MethodWalker(info, item.name, item.name == "__init__",
+                                   time_aliases)
+            walker.walk(item.body, frozenset())
+    return info
+
+
+def _module_time_aliases(tree: ast.Module) -> set[str]:
+    aliases = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "time":
+                    aliases.add(a.asname or "time")
+    return aliases
+
+
+def check_locks(tree: ast.Module, relpath: str) -> list[Finding]:
+    findings: list[Finding] = []
+    time_aliases = _module_time_aliases(tree)
+    order_edges: list[tuple[str, str, str, str, int]] = []
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        info = _collect_class(node, time_aliases)
+        if not info.locks:
+            continue
+
+        # Guard inference: union of locks held at locked mutation sites.
+        guards: dict[str, set[str]] = {}
+        for acc in info.accesses:
+            if acc.kind == "write" and acc.held:
+                guards.setdefault(acc.attr, set()).update(acc.held)
+        # Drop exempt attrs.
+        for attr in list(guards):
+            if attr in info.sync_attrs:
+                del guards[attr]
+
+        for acc in info.accesses:
+            guard = guards.get(acc.attr)
+            if not guard:
+                continue
+            if acc.held & guard:
+                continue
+            rule = "lock-bare-read" if acc.kind == "read" else "lock-bare-write"
+            lock_desc = "/".join(sorted(guard))
+            findings.append(Finding(
+                rule=rule, path=relpath, line=acc.line,
+                qualname=f"{info.name}.{acc.method}",
+                detail=acc.attr,
+                message=(f"attribute `self.{acc.attr}` is guarded by "
+                         f"`self.{lock_desc}` (mutated under it elsewhere) but "
+                         f"accessed here without holding it"),
+            ))
+
+        for desc, detail, held, method, line in info.blocking:
+            held_desc = "/".join(sorted(held))
+            findings.append(Finding(
+                rule="lock-blocking-call", path=relpath, line=line,
+                qualname=f"{info.name}.{method}", detail=detail,
+                message=(f"blocking call `{desc}` while holding "
+                         f"`self.{held_desc}` — move it outside the lock"),
+            ))
+
+        for helper, _held, method, line in info.helper_calls:
+            findings.append(Finding(
+                rule="lock-helper-unlocked", path=relpath, line=line,
+                qualname=f"{info.name}.{method}", detail=helper,
+                message=(f"`self.{helper}()` follows the *_locked convention "
+                         f"(caller must hold the lock) but no lock is held here"),
+            ))
+
+        for outer, inner, method, line in info.order_edges:
+            order_edges.append((outer, inner, info.name, method, line))
+
+    # Lock-order consistency across the whole module.
+    seen: dict[tuple[str, str], tuple[str, str, int]] = {}
+    for outer, inner, cls, method, line in order_edges:
+        seen.setdefault((outer, inner), (cls, method, line))
+    reported: set[frozenset[str]] = set()
+    for (outer, inner), (cls, method, line) in seen.items():
+        if (inner, outer) in seen:
+            pair = frozenset((outer, inner))
+            if pair in reported:
+                continue
+            reported.add(pair)
+            other = seen[(inner, outer)]
+            findings.append(Finding(
+                rule="lock-order", path=relpath, line=line,
+                qualname=f"{cls}.{method}",
+                detail=f"{outer}<->{inner}",
+                message=(f"locks `{outer}` and `{inner}` are acquired in both "
+                         f"orders (also at {other[0]}.{other[1]} line {other[2]}) "
+                         f"— pick one global order to avoid deadlock"),
+            ))
+    return findings

@@ -1,0 +1,242 @@
+"""JIT-retrace hazard pass.
+
+Rules:
+
+* ``retrace-in-loop`` — ``jax.jit(...)`` / ``pl.pallas_call(...)`` constructed
+  inside a ``for``/``while`` body: every iteration builds a fresh callable and
+  forfeits the compile cache.
+* ``retrace-in-serve`` — ``jax.jit``/``pallas_call`` construction anywhere in
+  ``src/repro/serve/``: per-request paths must call pre-built functions, never
+  build them.
+* ``retrace-self-capture`` — a function handed to ``jax.jit``/``lax.scan``/
+  ``lax.map`` (or decorated with ``@jax.jit``/``@partial(jax.jit, ...)``) reads
+  ``self.<attr>`` data.  Jitted closures must snapshot object state into locals
+  first (the ``ivf.py`` idiom) — otherwise mutating the object silently serves
+  stale constants or retraces.
+* ``retrace-host-sync`` — ``float()``/``int()``/``.item()``/``np.asarray()``
+  applied to a traced value inside a jit/scan body forces a host sync and
+  breaks tracing.
+
+Method calls (``self.method(...)``) and ``@property``-free module access are
+not flagged; only data reads of ``self`` attributes are.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .findings import Finding
+
+JIT_BUILDERS = {"jit", "pallas_call"}
+SCAN_CONSUMERS = {"scan", "map", "fori_loop", "while_loop"}
+HOST_SYNC_CALLS = {"float", "int"}
+HOST_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+HOST_SYNC_NP = {"asarray", "array"}
+
+
+def _call_name(fn: ast.expr) -> str:
+    """Dotted tail of a call target: ``jax.jit`` -> ``jit``."""
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return ""
+
+
+def _np_aliases(tree: ast.Module) -> set[str]:
+    out = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "numpy":
+                    out.add(a.asname or "numpy")
+    return out
+
+
+def _is_jit_builder(call: ast.Call) -> str | None:
+    name = _call_name(call.func)
+    if name in JIT_BUILDERS:
+        return name
+    # functools.partial(jax.jit, ...)
+    if name == "partial" and call.args:
+        inner = _call_name(call.args[0]) if isinstance(call.args[0], ast.Call) else (
+            call.args[0].attr if isinstance(call.args[0], ast.Attribute) else
+            call.args[0].id if isinstance(call.args[0], ast.Name) else "")
+        if inner in JIT_BUILDERS:
+            return inner
+    return None
+
+
+def _jitted_function_names(tree: ast.Module) -> dict[str, ast.AST]:
+    """Map function name -> def node for functions that are jit targets.
+
+    A function is a jit target if it is decorated with ``jit``/``partial(jit)``
+    or passed (by name or inline) to ``jax.jit``/``lax.scan``/``lax.map``.
+    """
+    defs: dict[str, ast.AST] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs[node.name] = node
+
+    targets: dict[str, ast.AST] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                dec_name = _call_name(dec.func) if isinstance(dec, ast.Call) else _call_name(dec)
+                if dec_name in JIT_BUILDERS:
+                    targets[node.name] = node
+                elif isinstance(dec, ast.Call) and _is_jit_builder(dec):
+                    targets[node.name] = node
+        if isinstance(node, ast.Call):
+            name = _call_name(node.func)
+            if name in JIT_BUILDERS or name in SCAN_CONSUMERS:
+                args = node.args if name in SCAN_CONSUMERS else node.args[:1]
+                for arg in args:
+                    if isinstance(arg, ast.Name) and arg.id in defs:
+                        targets[arg.id] = defs[arg.id]
+                    elif isinstance(arg, ast.Lambda):
+                        targets[f"<lambda:{arg.lineno}>"] = arg
+    return targets
+
+
+def _qualname_of(tree: ast.Module, target: ast.AST) -> str:
+    """Best-effort qualname: enclosing class/function chain."""
+    chain: list[str] = []
+
+    def visit(node: ast.AST, stack: list[str]) -> bool:
+        for child in ast.iter_child_nodes(node):
+            new_stack = stack
+            if isinstance(child, (ast.ClassDef, ast.FunctionDef, ast.AsyncFunctionDef)):
+                new_stack = [*stack, child.name]
+                if child is target:
+                    chain.extend(new_stack)
+                    return True
+            if child is target:
+                chain.extend([*stack, getattr(child, "name", "<lambda>")])
+                return True
+            if visit(child, new_stack):
+                return True
+        return False
+
+    visit(tree, [])
+    return ".".join(chain) if chain else getattr(target, "name", "<lambda>")
+
+
+def check_retrace(tree: ast.Module, relpath: str) -> list[Finding]:
+    findings: list[Finding] = []
+    np_aliases = _np_aliases(tree)
+    in_serve = "/serve/" in relpath or relpath.startswith("serve/")
+
+    # --- construction-site rules -------------------------------------------
+    class LoopVisitor(ast.NodeVisitor):
+        def __init__(self) -> None:
+            self.loop_depth = 0
+            self.qual: list[str] = []
+
+        def _enter(self, node, is_loop=False):
+            if is_loop:
+                self.loop_depth += 1
+            self.generic_visit(node)
+            if is_loop:
+                self.loop_depth -= 1
+
+        def visit_For(self, node):
+            self._enter(node, is_loop=True)
+
+        def visit_While(self, node):
+            self._enter(node, is_loop=True)
+
+        def visit_ClassDef(self, node):
+            self.qual.append(node.name)
+            self.generic_visit(node)
+            self.qual.pop()
+
+        def visit_FunctionDef(self, node):
+            self.qual.append(node.name)
+            saved = self.loop_depth
+            self.loop_depth = 0   # a def inside a loop runs later, not per-iter
+            self.generic_visit(node)
+            self.loop_depth = saved
+            self.qual.pop()
+
+        visit_AsyncFunctionDef = visit_FunctionDef
+
+        def visit_Call(self, node):
+            builder = _is_jit_builder(node)
+            if builder is not None:
+                qual = ".".join(self.qual)
+                if self.loop_depth > 0:
+                    findings.append(Finding(
+                        rule="retrace-in-loop", path=relpath, line=node.lineno,
+                        qualname=qual, detail=builder,
+                        message=(f"`{builder}` constructed inside a loop — hoist "
+                                 f"it out so the compile cache is reused"),
+                    ))
+                if in_serve:
+                    findings.append(Finding(
+                        rule="retrace-in-serve", path=relpath, line=node.lineno,
+                        qualname=qual, detail=builder,
+                        message=(f"`{builder}` constructed in serve/ — per-request "
+                                 f"paths must call pre-built functions"),
+                    ))
+            self.generic_visit(node)
+
+    LoopVisitor().visit(tree)
+
+    # --- jit-body rules -----------------------------------------------------
+    for _name, fn_node in _jitted_function_names(tree).items():
+        qual = _qualname_of(tree, fn_node)
+        body = fn_node.body if isinstance(fn_node.body, list) else [fn_node.body]
+        params = set()
+        if isinstance(fn_node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            a = fn_node.args
+            params = {p.arg for p in a.args + a.kwonlyargs + a.posonlyargs}
+        for stmt in body:
+            for node in ast.walk(stmt if isinstance(stmt, ast.AST) else stmt):
+                if (isinstance(node, ast.Attribute) and isinstance(node.ctx, ast.Load)
+                        and isinstance(node.value, ast.Name)
+                        and node.value.id == "self" and "self" not in params):
+                    parent_call = getattr(node, "_rl_in_call_func", False)
+                    if not parent_call:
+                        findings.append(Finding(
+                            rule="retrace-self-capture", path=relpath,
+                            line=node.lineno, qualname=qual, detail=node.attr,
+                            message=(f"jitted function reads `self.{node.attr}` — "
+                                     f"snapshot it into a local before closing "
+                                     f"over it (see ivf.py search-fn builders)"),
+                        ))
+                if isinstance(node, ast.Call):
+                    # mark method-call funcs so self.method(...) is not flagged
+                    if isinstance(node.func, ast.Attribute):
+                        node.func._rl_in_call_func = True  # type: ignore[attr-defined]
+                    cname = _call_name(node.func)
+                    if (isinstance(node.func, ast.Name)
+                            and cname in HOST_SYNC_CALLS and node.args
+                            and not isinstance(node.args[0], ast.Constant)):
+                        findings.append(Finding(
+                            rule="retrace-host-sync", path=relpath,
+                            line=node.lineno, qualname=qual, detail=cname,
+                            message=(f"`{cname}()` inside a jit/scan body forces "
+                                     f"a host sync — keep values traced"),
+                        ))
+                    elif (isinstance(node.func, ast.Attribute)
+                          and node.func.attr in HOST_SYNC_METHODS):
+                        findings.append(Finding(
+                            rule="retrace-host-sync", path=relpath,
+                            line=node.lineno, qualname=qual,
+                            detail=node.func.attr,
+                            message=(f"`.{node.func.attr}()` inside a jit/scan "
+                                     f"body forces a host sync"),
+                        ))
+                    elif (isinstance(node.func, ast.Attribute)
+                          and isinstance(node.func.value, ast.Name)
+                          and node.func.value.id in np_aliases
+                          and node.func.attr in HOST_SYNC_NP):
+                        findings.append(Finding(
+                            rule="retrace-host-sync", path=relpath,
+                            line=node.lineno, qualname=qual,
+                            detail=f"np.{node.func.attr}",
+                            message=(f"`np.{node.func.attr}()` inside a jit/scan "
+                                     f"body materializes on host — use jnp"),
+                        ))
+    return findings

@@ -1,0 +1,276 @@
+"""Runtime sanitizers complementing the static replint passes.
+
+``retrace_guard`` — asserts an *exact* XLA compile count around a code block
+by counting ``/jax/core/compile/backend_compile_duration`` monitoring events.
+The canonical use is "warm up, then assert zero": run the hot path once, then
+prove steady-state requests never retrace::
+
+    search(qs)                          # warm-up compile
+    with retrace_guard(expected=0):
+        for _ in range(32):
+            search(qs)                  # must all hit the jit cache
+
+``LockSanitizer`` — wraps a set of ``threading.Lock``/``RLock`` attributes
+with counting proxies and (while active) patches the blocking primitives
+(``time.sleep``, ``threading.Event.wait``, ``threading.Thread.join``,
+``queue.Queue.get/put``) to record a violation whenever one is entered while
+the calling thread holds a sanitized lock.  It also records lock acquisition
+order and flags pairs taken in both orders.  Used by the service stress tests
+to catch held-across-blocking at runtime — the dynamic complement of the
+static ``lock-blocking-call`` rule.
+
+Only this module touches jax, and only lazily — the static passes and the CLI
+stay pure stdlib.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+
+COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_compile_count = 0
+_listener_installed = False
+_listener_mu = threading.Lock()
+
+
+def _ensure_listener() -> None:
+    """Install the (permanent) compile-event listener once.
+
+    jax.monitoring has no per-listener unregister — ``clear_event_listeners``
+    would nuke listeners we don't own — so one module-level counter is
+    installed on first use and guards diff it.
+    """
+    global _listener_installed
+    with _listener_mu:
+        if _listener_installed:
+            return
+        import jax.monitoring as mon
+
+        def _on_duration(event: str, duration: float, **kw) -> None:
+            global _compile_count
+            if event == COMPILE_EVENT:
+                _compile_count += 1
+
+        mon.register_event_duration_secs_listener(_on_duration)
+        _listener_installed = True
+
+
+def compile_count() -> int:
+    """Monotonic count of backend compiles observed so far."""
+    _ensure_listener()
+    return _compile_count
+
+
+class RetraceError(AssertionError):
+    """The guarded block compiled a different number of programs than
+    declared."""
+
+
+@dataclass
+class CompileTally:
+    """Mutable view handed out by :func:`retrace_guard`."""
+    start: int
+    end: int | None = None
+
+    @property
+    def compiles(self) -> int:
+        current = _compile_count if self.end is None else self.end
+        return current - self.start
+
+
+@contextlib.contextmanager
+def retrace_guard(expected: int = 0, what: str = "guarded block"):
+    """Assert the block performs exactly ``expected`` backend compiles.
+
+    Note the count is process-global: incidental first-use compiles (e.g. a
+    ``jnp.ones`` fill) are charged to the block, which is exactly the
+    property the serving hot path must have — *nothing* compiles once warm.
+    """
+    _ensure_listener()
+    tally = CompileTally(start=_compile_count)
+    try:
+        yield tally
+    finally:
+        tally.end = _compile_count
+    if tally.compiles != expected:
+        raise RetraceError(
+            f"{what}: expected exactly {expected} compile(s), "
+            f"observed {tally.compiles} — a retrace hazard (shape/dtype "
+            f"churn, un-hoisted jit, or mutable capture)")
+
+
+# --- lock sanitizer ---------------------------------------------------------
+
+@dataclass
+class Violation:
+    kind: str            # "blocking-call" | "lock-order"
+    detail: str
+    thread: str
+    held: tuple[str, ...]
+
+    def __str__(self) -> str:
+        return (f"{self.kind}: {self.detail} while holding "
+                f"{list(self.held)} on thread {self.thread}")
+
+
+class _SanitizedLock:
+    """Counting proxy preserving Lock/RLock semantics."""
+
+    def __init__(self, name: str, inner, sanitizer: "LockSanitizer"):
+        self._name = name
+        self._inner = inner
+        self._san = sanitizer
+
+    def acquire(self, *a, **kw):
+        self._san._note_acquire(self._name)
+        got = self._inner.acquire(*a, **kw)
+        if got:
+            self._san._push(self._name)
+        return got
+
+    def release(self):
+        self._san._pop(self._name)
+        return self._inner.release()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+    def locked(self):
+        return self._inner.locked()
+
+    def __repr__(self):
+        return f"SanitizedLock({self._name}, {self._inner!r})"
+
+
+class LockSanitizer:
+    """Runtime lock-discipline monitor (see module docstring).
+
+    ``wrap(obj, "attr", ...)`` replaces lock attributes with sanitized
+    proxies (in place — pass every object sharing the contract).  Entering
+    the context installs the blocking-call detectors; exiting restores them
+    and leaves ``violations`` for the test to assert on.
+    """
+
+    def __init__(self) -> None:
+        self._tls = threading.local()
+        self.violations: list[Violation] = []
+        self._mu = threading.Lock()
+        self._order_edges: dict[tuple[str, str], str] = {}
+        self._patches: list[tuple[object, str, object]] = []
+
+    # -- wiring ------------------------------------------------------------
+    def wrap(self, obj: object, *attrs: str) -> "LockSanitizer":
+        for attr in attrs:
+            inner = getattr(obj, attr)
+            if isinstance(inner, _SanitizedLock):
+                continue
+            label = f"{type(obj).__name__}.{attr}"
+            setattr(obj, attr, _SanitizedLock(label, inner, self))
+        return self
+
+    # -- per-thread held stack ---------------------------------------------
+    def _held(self) -> list[str]:
+        if not hasattr(self._tls, "stack"):
+            self._tls.stack = []
+        return self._tls.stack
+
+    def held_locks(self) -> tuple[str, ...]:
+        # outermost-first, reentrant acquisitions deduplicated
+        out: list[str] = []
+        for name in self._held():
+            if name not in out:
+                out.append(name)
+        return tuple(out)
+
+    def _note_acquire(self, name: str) -> None:
+        held = self.held_locks()
+        for outer in held:
+            if outer == name:        # reentrant RLock acquire
+                continue
+            edge = (outer, name)
+            with self._mu:
+                self._order_edges.setdefault(edge, threading.current_thread().name)
+                conflict = (name, outer) in self._order_edges
+            if conflict:   # record outside _mu (it takes _mu itself)
+                self._record("lock-order",
+                             f"`{outer}` -> `{name}` conflicts with the "
+                             f"observed `{name}` -> `{outer}`", held)
+
+    def _push(self, name: str) -> None:
+        self._held().append(name)
+
+    def _pop(self, name: str) -> None:
+        held = self._held()
+        if held and held[-1] == name:
+            held.pop()
+        elif name in held:           # out-of-order release (legal, rare)
+            held.remove(name)
+
+    def _record(self, kind: str, detail: str, held: tuple[str, ...]) -> None:
+        v = Violation(kind, detail, threading.current_thread().name, held)
+        with self._mu:
+            self.violations.append(v)
+
+    def _check_blocking(self, desc: str) -> None:
+        held = self.held_locks()
+        if held:
+            self._record("blocking-call", desc, held)
+
+    # -- blocking-call detectors -------------------------------------------
+    def _patch(self, owner, attr: str, wrapper_factory) -> None:
+        original = getattr(owner, attr)
+        setattr(owner, attr, wrapper_factory(original))
+        self._patches.append((owner, attr, original))
+
+    def __enter__(self) -> "LockSanitizer":
+        san = self
+
+        def wrap_fn(desc):
+            def factory(original):
+                def wrapper(*a, **kw):
+                    san._check_blocking(desc)
+                    return original(*a, **kw)
+                return wrapper
+            return factory
+
+        def wrap_queue(desc):
+            # Queue.get/put(self, item?, block=True, timeout=None):
+            # block=False / timeout=0 never block — don't flag them.
+            def factory(original):
+                def wrapper(*a, **kw):
+                    blocking = kw.get("block", True) and kw.get("timeout") != 0
+                    if blocking:
+                        san._check_blocking(desc)
+                    return original(*a, **kw)
+                return wrapper
+            return factory
+
+        self._patch(time, "sleep", wrap_fn("time.sleep"))
+        self._patch(threading.Event, "wait", wrap_fn("Event.wait"))
+        self._patch(threading.Thread, "join", wrap_fn("Thread.join"))
+        self._patch(queue.Queue, "get", wrap_queue("Queue.get"))
+        self._patch(queue.Queue, "put", wrap_queue("Queue.put"))
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        for owner, attr, original in reversed(self._patches):
+            setattr(owner, attr, original)
+        self._patches.clear()
+        return False
+
+    def assert_clean(self) -> None:
+        if self.violations:
+            lines = "\n  ".join(str(v) for v in self.violations)
+            raise AssertionError(
+                f"LockSanitizer caught {len(self.violations)} violation(s):"
+                f"\n  {lines}")

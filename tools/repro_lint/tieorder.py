@@ -1,0 +1,142 @@
+"""Tie-order invariant pass.
+
+The repo's ranking contract is strict ``(score desc, id asc)``; every layer
+(PRs 2-8) preserves it bit-for-bit.  The only module allowed to implement raw
+ranking primitives is ``retrieval/topk.py`` — everything else must go through
+``topk_score_then_id`` / ``masked_topk_by_id`` / ``merge_topk_block`` /
+``streaming_masked_topk``, and k-handling through ``resolve_k``.
+
+Rules:
+
+* ``tieorder-raw-rank`` — ``argsort``/``lexsort``/``top_k``/``sort`` call on
+  an expression that *looks score-like* (name contains score/sim/dist/logit)
+  outside the whitelist.  This is the high-confidence error case.
+* ``tieorder-raw-rank-audit`` — the same primitives on other arrays outside
+  the whitelist.  These are only reported with ``--strict-tieorder`` (the CLI
+  default keeps them off because argsort has legitimate non-ranking uses:
+  label bucketing, routing, permutation building).
+
+The whitelist is explicit: ``(path suffix, qualname or None, reason)``.  A
+``None`` qualname whitelists the whole file.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .findings import Finding
+
+RANK_CALLS = {"argsort", "lexsort", "top_k", "approx_max_k", "sort_key_val"}
+SCORE_HINTS = ("score", "sim", "dist", "logit", "prob", "qd", "inner")
+
+# (path-suffix, qualname-prefix or None, reason). Keep this list justified:
+# every entry names a site whose raw primitive is NOT a document ranking, or
+# whose tie order is provably (score desc, id asc) by construction.
+WHITELIST: list[tuple[str, str | None, str]] = [
+    ("retrieval/topk.py", None,
+     "canonical tie-order module: implements the (score desc, id asc) contract"),
+    ("retrieval/ivf.py", None,
+     "centroid routing top_k (probe selection, not doc ranking) and "
+     "np.argsort label bucketing that keeps ids ascending per list"),
+    ("retrieval/segments.py", None,
+     "delta-probe routing top_k and fold bucketing argsort — not doc ranking"),
+    ("retrieval/sharded.py", None,
+     "per-shard lax.top_k over id-ascending scan order (first occurrence wins "
+     "= lowest id) and partition_lists size argsort"),
+    ("retrieval/index.py", "CompressedIndex",
+     "exact-search lax.top_k over id-ascending scan order"),
+    ("retrieval/kmeans.py", None,
+     "kmeans++ second-nearest distances — clustering, not doc ranking"),
+    ("retrieval/rprecision.py", None,
+     "r-precision set membership — order-insensitive metric"),
+    ("kernels/topk_blocks/ref.py", None,
+     "interpret-mode parity oracle for the kernel, checked against topk.py"),
+    ("kernels/topk_blocks/ops.py", None,
+     "stage-2 merge over stage-1 candidates already in (score desc, id asc) "
+     "block order; padded -inf candidates never surface"),
+    ("kernels/ivf_fused/", None,
+     "in-kernel k-round merge implements the contract directly (parity-tested)"),
+    ("models/moe.py", None,
+     "MoE expert-routing top_k — gating, not document ranking"),
+    ("benchmarks/ivf_bench.py", None,
+     "centroid routing top_k for the jnp IVF baseline — probe selection"),
+    ("benchmarks/kernel_bench.py", None,
+     "centroid routing top_k feeding the fused kernel harness"),
+]
+
+
+def _whitelisted(relpath: str, qualname: str) -> str | None:
+    for suffix, qual, reason in WHITELIST:
+        if relpath.endswith(suffix) or (suffix.endswith("/") and suffix.rstrip("/") in relpath):
+            if qual is None or qualname.startswith(qual):
+                return reason
+    return None
+
+
+def _expr_names(node: ast.expr) -> list[str]:
+    out = []
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            out.append(n.id)
+        elif isinstance(n, ast.Attribute):
+            out.append(n.attr)
+    return out
+
+
+def _score_like(call: ast.Call) -> bool:
+    hay = []
+    for arg in call.args:
+        hay.extend(_expr_names(arg))
+    for kw in call.keywords:
+        if kw.value is not None:
+            hay.extend(_expr_names(kw.value))
+    joined = " ".join(hay).lower()
+    return any(h in joined for h in SCORE_HINTS)
+
+
+def check_tieorder(tree: ast.Module, relpath: str,
+                   strict: bool = False) -> list[Finding]:
+    findings: list[Finding] = []
+
+    class V(ast.NodeVisitor):
+        def __init__(self) -> None:
+            self.qual: list[str] = []
+
+        def _scoped(self, node):
+            self.qual.append(node.name)
+            self.generic_visit(node)
+            self.qual.pop()
+
+        visit_ClassDef = _scoped
+        visit_FunctionDef = _scoped
+        visit_AsyncFunctionDef = _scoped
+
+        def visit_Call(self, node):
+            name = node.func.attr if isinstance(node.func, ast.Attribute) else (
+                node.func.id if isinstance(node.func, ast.Name) else "")
+            if name in RANK_CALLS:
+                qual = ".".join(self.qual)
+                reason = _whitelisted(relpath, qual)
+                if reason is None:
+                    if _score_like(node):
+                        findings.append(Finding(
+                            rule="tieorder-raw-rank", path=relpath,
+                            line=node.lineno, qualname=qual, detail=name,
+                            message=(f"raw `{name}` on a score-like array — "
+                                     f"route ranking through "
+                                     f"topk_score_then_id/masked_topk_by_id/"
+                                     f"merge_topk_block (retrieval/topk.py) to "
+                                     f"preserve (score desc, id asc)"),
+                        ))
+                    elif strict:
+                        findings.append(Finding(
+                            rule="tieorder-raw-rank-audit", path=relpath,
+                            line=node.lineno, qualname=qual, detail=name,
+                            message=(f"raw `{name}` outside retrieval/topk.py — "
+                                     f"verify this is not a document ranking, "
+                                     f"then whitelist it with a reason"),
+                        ))
+            self.generic_visit(node)
+
+    V().visit(tree)
+    return findings
