@@ -82,6 +82,9 @@ METRICS = {
     "tiered_qps_full": "higher",
     "tiered_qps_cold": "higher",
     "tiered_cold_ratio": "higher",
+    "sharded_qps": "higher",
+    "sharded_parity": "recall",
+    "sharded_lost_requests": "lower",
 }
 
 
@@ -278,7 +281,30 @@ def measure(n_docs: int, n_requests: int, batch: int, k: int,
     out["tiered_cold_ratio"] = out["tiered_qps_cold"] / \
         max(out["tiered_qps_full"], 1e-9)
 
+    out.update(sharded_row())
     return out
+
+
+def sharded_row() -> dict:
+    """The sharded-serving row: run ``sharded_bench.py --quick`` in a
+    subprocess with forced host devices (``XLA_FLAGS`` must land before
+    jax initialises, which this process is long past) and collect its
+    gate JSON — bit-parity vs single-host across all four scorer
+    backends, sharded throughput, and the zero-lost-requests count."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    with tempfile.TemporaryDirectory() as tmp:
+        gate = os.path.join(tmp, "sharded.json")
+        cmd = [sys.executable, os.path.join(HERE, "sharded_bench.py"),
+               "--quick", "--gate-json", gate]
+        r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                           timeout=900)
+        if r.returncode != 0:
+            raise SystemExit(
+                "sharded_bench subprocess failed "
+                f"(rc={r.returncode}):\n{r.stdout}\n{r.stderr}")
+        with open(gate) as f:
+            return json.load(f)
 
 
 def invariants(measured: dict) -> list[str]:
@@ -318,6 +344,17 @@ def invariants(measured: dict) -> list[str]:
             f"tiered_cold_ratio: {tiered:.2f} < floor "
             f"{TIERED_RATIO_FLOOR} (a 5% hot-tier budget may not cost "
             "more than this much of fully-resident throughput)")
+    if measured["sharded_parity"] != 1.0:
+        failures.append(
+            f"sharded_parity: {measured['sharded_parity']:.3f} != 1.0 "
+            "(sharded serving must match single-host in ids AND score "
+            "bytes on every backend, including mid-traffic "
+            "update/compact)")
+    if measured["sharded_lost_requests"]:
+        failures.append(
+            f"sharded_lost_requests: "
+            f"{measured['sharded_lost_requests']:.0f} != 0 (every "
+            "request admitted against a sharded version must resolve)")
     return failures
 
 

@@ -31,11 +31,11 @@ import numpy as np
 from repro.data import make_dpr_like_kb
 from repro.retrieval import IndexSpec, build_index
 from repro.serve import MicroBatcher, QueryOptions, RetrievalService, \
-    ServeEngine
+    load_engine
 
 
 def run_manual(path, queries, n_requests, batch, max_batch, k):
-    engine = ServeEngine.from_artifact(
+    engine = load_engine(
         path, k=k, batcher=MicroBatcher(max_batch=max_batch))
     lat = []
     t0 = time.perf_counter()

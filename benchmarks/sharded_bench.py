@@ -1,0 +1,240 @@
+"""Sharded serving through the front door: bit-parity vs single-host.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+        PYTHONPATH=src:. python benchmarks/sharded_bench.py --quick
+
+One :class:`RetrievalService` serves the same corpus twice — a
+single-host IVF index and the same spec sharded over every forced host
+device (``ShardSpec(shards=N)``) — and streams identical request waves
+at both.  Parity is the strict serving contract: for every request the
+sharded result must match single-host in ids AND raw score bytes
+(``scores.tobytes()``), not approximately.  The stream then keeps going
+through live ``update()`` (delta segments land on both sides) and
+``compact()`` (the sharded fold re-shards onto the same mesh), and a
+replicated lane (``ShardSpec(shards=N//2, replicas=2)``) checks that
+read scaling preserves the same bytes.
+
+Reported metrics (also written by ``--gate-json`` for the CI gate):
+
+* ``sharded_parity``        — fraction of compared requests bit-identical
+  (the gate requires exactly 1.0),
+* ``sharded_qps``           — query rows/s through the sharded version,
+* ``sharded_lost_requests`` — submitted − served + still-queued (must
+  be 0: hot-swapping shards may never drop an admitted request).
+
+All four scorer backends run through explicit stage pipelines (quantizer
+tails select the real fp16/int8/1-bit scorers); device count is forced
+via ``XLA_FLAGS`` so the lane is CPU-only and CI-stable.
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+# must land before jax initialises: the bench proves sharded serving on
+# forced host devices when no real multi-device platform is attached
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import numpy as np
+
+from repro.retrieval.api import IndexSpec, ShardSpec, build_index
+from repro.serve import MicroBatcher, QueryOptions, RetrievalService
+
+#: explicit stage pipelines — the quantizer tail is what selects the
+#: quantized scorer (a trailing post-transform would silently fall back
+#: to the float decode path, which is *not* bit-stable across shard
+#: shapes; see scorer_for_pipeline)
+BASE = (("CenterNorm", {}), ("PCA", {"dim": 32}))
+TAILS = {
+    "float": (),
+    "fp16": (("FloatCast", {}),),
+    "int8": (("Int8Quantizer", {}),),
+    "onebit": (("OneBitQuantizer", {"offset": 0.5}),),
+}
+
+
+def make_corpus(n_docs: int, d: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    docs = rng.standard_normal((n_docs, d)).astype(np.float32)
+    queries = rng.standard_normal((max(256, 64), d)).astype(np.float32)
+    extra = rng.standard_normal((24, d)).astype(np.float32)
+    return docs, queries, extra
+
+
+def wave(svc, names, queries, n_requests, batch, k):
+    """Submit one request wave to every index in ``names``, wait for all
+    results, and return {name: [(ids, score_bytes), ...]} in stream
+    order.  Waves are joined before the caller mutates anything, so both
+    sides always see the same index state for the same request."""
+    handles = {name: [] for name in names}
+    for r in range(n_requests):
+        off = (r * batch) % (len(queries) - batch)
+        block = queries[off: off + batch]
+        for name in names:
+            handles[name].append(
+                svc.query(block, QueryOptions(index=name, k=k)))
+    out = {}
+    for name in names:
+        rows = []
+        for h in handles[name]:
+            res = h.result(timeout=600)
+            rows.append((np.asarray(res.ids), res.scores.tobytes()))
+        out[name] = rows
+    return out
+
+
+def compare_waves(results, ref: str, other: str):
+    """(n_compared, n_identical) between two indexes' wave results."""
+    same = 0
+    pairs = list(zip(results[ref], results[other]))
+    for (ids_a, bytes_a), (ids_b, bytes_b) in pairs:
+        if np.array_equal(ids_a, ids_b) and bytes_a == bytes_b:
+            same += 1
+    return len(pairs), same
+
+
+def run_backend(backend: str, docs, queries, extra, *, shards, nlist,
+                nprobe, n_requests, batch, k) -> dict:
+    """Serve single-host vs sharded (vs replicated) mutable indexes
+    through one service; stream → update → stream → compact → stream."""
+    spec = IndexSpec(stages=BASE + TAILS[backend], ivf=(nlist, nprobe),
+                     backend="jnp", mutable=True)
+    sample = queries[:128]
+    single = build_index(spec, docs, sample)
+    sharded = build_index(
+        dataclasses.replace(spec, shard=ShardSpec(shards=shards)),
+        docs, sample)
+    names = ["single", "sharded"]
+    svc = RetrievalService(default_k=k,
+                           batcher=MicroBatcher(max_batch=4 * batch))
+    svc.register("single", index=single)
+    svc.register("sharded", index=sharded)
+    if shards >= 2 and shards % 2 == 0:
+        replicated = build_index(
+            dataclasses.replace(
+                spec, shard=ShardSpec(shards=shards // 2, replicas=2)),
+            docs, sample)
+        svc.register("replicated", index=replicated)
+        names.append("replicated")
+
+    compared = identical = 0
+
+    def score(results):
+        nonlocal compared, identical
+        for other in names[1:]:
+            n, same = compare_waves(results, "single", other)
+            compared += n
+            identical += same
+
+    # phase 1: clean stream
+    score(wave(svc, names, queries, n_requests, batch, k))
+    # phase 2: live update lands on every side, stream again
+    for name in names:
+        svc.update(name, add=extra)
+    first_gid = len(docs)
+    for name in names:
+        svc.update(name, delete=range(first_gid, first_gid + len(extra) // 2))
+    score(wave(svc, names, queries, n_requests, batch, k))
+    # phase 3: compact (the sharded fold re-shards onto its mesh), stream
+    for name in names:
+        svc.compact(name)
+    score(wave(svc, names, queries, n_requests, batch, k))
+
+    # throughput: time a sharded-only burst (parity waves above already
+    # paid every jit compile)
+    t0 = time.perf_counter()
+    rows = 0
+    handles = []
+    for r in range(n_requests):
+        off = (r * batch) % (len(queries) - batch)
+        handles.append(svc.query(queries[off: off + batch],
+                                 QueryOptions(index="sharded", k=k)))
+        rows += batch
+    for h in handles:
+        h.result(timeout=600)
+    qps = rows / (time.perf_counter() - t0)
+
+    stats = svc.stats()
+    lost = (stats["requests_submitted"] - stats["requests_served"]
+            - stats["cache_hits"] + stats["queue_depth"])
+    shard_rows = None
+    for row in stats["indexes"]["sharded"]["versions"].values():
+        shard_rows = row.get("shards", shard_rows)
+    svc.close()
+    return {"compared": compared, "identical": identical, "qps": qps,
+            "lost": int(lost), "shards": shard_rows}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="small corpus / few requests (the CI gate lane)")
+    ap.add_argument("--n-docs", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--shards", type=int, default=0,
+                    help="doc shards (default: every forced device)")
+    ap.add_argument("--nlist", type=int, default=0)
+    ap.add_argument("--nprobe", type=int, default=0)
+    ap.add_argument("--gate-json", default=None,
+                    help="write {sharded_parity, sharded_qps, "
+                    "sharded_lost_requests} here for the CI gate")
+    args = ap.parse_args(argv)
+
+    import jax
+    n_dev = jax.device_count()
+    shards = args.shards or n_dev
+    n_docs = args.n_docs or (1003 if args.quick else 20_000)
+    n_requests = args.requests or (6 if args.quick else 40)
+    nlist = args.nlist or (12 if args.quick else 64)
+    nprobe = args.nprobe or (6 if args.quick else 16)
+
+    docs, queries, extra = make_corpus(n_docs, args.dim)
+    print(f"sharded bench: {n_docs} docs x {args.dim} dims over "
+          f"{shards} shards ({n_dev} devices), nlist={nlist} "
+          f"nprobe={nprobe}, {n_requests} requests x {args.batch} "
+          f"per phase\n")
+
+    compared = identical = lost = 0
+    qps_all = []
+    for backend in TAILS:
+        r = run_backend(backend, docs, queries, extra, shards=shards,
+                        nlist=nlist, nprobe=nprobe,
+                        n_requests=n_requests, batch=args.batch, k=args.k)
+        compared += r["compared"]
+        identical += r["identical"]
+        lost += r["lost"]
+        qps_all.append(r["qps"])
+        verdict = "BIT-IDENTICAL" if r["identical"] == r["compared"] \
+            else "DIVERGED"
+        print(f"  {backend:7s} {r['identical']:3d}/{r['compared']:3d} "
+              f"requests bit-identical  {r['qps']:8.0f} q/s  "
+              f"lost={r['lost']}  {verdict}")
+        if backend == "int8" and r["shards"]:
+            docs_per = ", ".join(str(s["n_docs"]) for s in r["shards"])
+            print(f"          shard rollup: n_docs per shard [{docs_per}]")
+
+    parity = identical / compared if compared else 0.0
+    qps = max(qps_all)
+    print(f"\n  sharded_parity={parity:.3f}  sharded_qps={qps:.0f}  "
+          f"sharded_lost_requests={lost}")
+    if args.gate_json:
+        with open(args.gate_json, "w") as f:
+            json.dump({"sharded_parity": parity, "sharded_qps": qps,
+                       "sharded_lost_requests": float(lost)}, f, indent=2)
+            f.write("\n")
+        print(f"  wrote {args.gate_json}")
+    if parity != 1.0 or lost:
+        print("FAIL: sharded serving must be bit-identical to "
+              "single-host with zero lost requests", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

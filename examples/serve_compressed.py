@@ -22,6 +22,13 @@ streamed to a *chunked* (v3) artifact and hot-swapped in with only a 25%
 hot-tier byte budget resident — the encoded inverted lists stay on disk,
 Zipf-skewed open-loop traffic (the PR-7 load generator) keeps the LRU hot
 tier warm, and the per-version ``stats()`` row reports the tier hit rate.
+
+With ``--shards N`` a fourth act shards the refreshed KB over N devices
+(``ShardSpec(shards=N)`` — run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to force host
+devices) and hot-swaps it in: staging places every shard or none, the
+promote is the same atomic pointer flip, results match the single-host
+version bit-for-bit, and the ``stats()`` row grows a per-shard rollup.
 """
 
 import argparse
@@ -33,8 +40,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data import make_dpr_like_kb
-from repro.retrieval import (IndexSpec, build_index, load_index_meta,
-                             save_index)
+from repro.retrieval import (IndexSpec, ShardSpec, build_index,
+                             load_index_meta, save_index)
 from repro.serve import QueryOptions, RetrievalService
 from repro.utils import human_bytes
 
@@ -73,6 +80,43 @@ def serve_tiered(service, idx, tmp, queries):
           f"{human_bytes(tier['bytes_read'])} paged from disk")
 
 
+def serve_sharded(service, spec, docs, sample, queries, n_shards, batch, k):
+    """Act four: the same KB sharded over the device mesh, hot-swapped in
+    behind the same front door — identical results, per-shard rollup."""
+    import jax
+    n_dev = jax.device_count()
+    if n_shards > n_dev:
+        print(f"\nsharded swap skipped: --shards {n_shards} wants more "
+              f"devices than available ({n_dev}) — run under "
+              f"XLA_FLAGS=--xla_force_host_platform_device_count="
+              f"{n_shards}")
+        return
+    print(f"\nsharded swap: rebuilding over ShardSpec(shards={n_shards}) "
+          f"({n_dev} devices attached)")
+    import dataclasses
+    sharded = build_index(
+        dataclasses.replace(spec, shard=ShardSpec(shards=n_shards)),
+        docs, sample)
+    before = service.query(queries[:batch],
+                           QueryOptions(index="kb", k=k)).result(timeout=120)
+    service.stage("kb", index=sharded)   # places every shard, or raises
+    live = service.promote("kb")
+    after = service.query(queries[:batch],
+                          QueryOptions(index="kb", k=k)).result(timeout=120)
+    same_ids = np.array_equal(before.ids, after.ids)
+    same_bits = same_ids and before.scores.tobytes() == after.scores.tobytes()
+    row = service.stats()["indexes"]["kb"]["versions"][live]
+    # quantizer-tail pipelines (--no-post) are bit-identical in score
+    # bytes too; post-CenterNorm specs score on the float decode path,
+    # where ids still match but the last ulp may differ per shard shape
+    verdict = "bit-identical" if same_bits else \
+        "same top-k ids" if same_ids else "DIVERGED"
+    print(f"  promoted v{live}: results vs single-host {verdict}")
+    for s in row.get("shards", []):
+        lists = f", {s['n_lists']} lists" if "n_lists" in s else ""
+        print(f"    shard {s['shard']}: {s['n_docs']} docs{lists}")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--method", default="pca_int8",
@@ -92,6 +136,10 @@ def main(argv=None) -> None:
     ap.add_argument("--ivf-nprobe", type=int, default=0,
                     help="default probe width (0 = nlist/2); every 4th "
                          "request overrides it per-request to nlist")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="fourth act: hot-swap in the KB sharded over "
+                         "this many devices (needs XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     args = ap.parse_args(argv)
 
     dim = 245 if args.method == "pca_onebit" else args.dim
@@ -180,6 +228,10 @@ def main(argv=None) -> None:
 
             if ivf:
                 serve_tiered(service, idx_v2, tmp, queries)
+
+            if args.shards:
+                serve_sharded(service, spec, docs_v2, kb.queries[:512],
+                              queries, args.shards, args.batch, k)
 
 
 if __name__ == "__main__":

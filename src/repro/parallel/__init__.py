@@ -1,10 +1,12 @@
-"""Distribution utilities: logical-axis sharding rules, compressed collectives."""
+"""Distribution utilities: logical-axis sharding rules, compressed collectives,
+and spec-driven mesh placement."""
 
+from repro.parallel.placement import mesh_from_spec, place_shards
 from repro.parallel.sharding import (AxisRules, MULTI_POD_RULES,
                                      SINGLE_POD_RULES, ShardingContext,
                                      logical_to_spec, shard,
                                      shard_constraint, spec_for_shape)
 
 __all__ = ["AxisRules", "MULTI_POD_RULES", "SINGLE_POD_RULES",
-           "ShardingContext", "logical_to_spec", "shard",
-           "shard_constraint", "spec_for_shape"]
+           "ShardingContext", "logical_to_spec", "mesh_from_spec",
+           "place_shards", "shard", "shard_constraint", "spec_for_shape"]

@@ -1,0 +1,107 @@
+"""Placement: one surface that turns a ``ShardSpec`` into a device mesh.
+
+Before this module, placement leaked through the API as a loose ``mesh=``
+kwarg threaded from ``build_index`` / ``load_index`` down to the sharded
+wrappers — the caller had to know how many devices exist, which axis names
+the wrapper expects, and how replicas map onto them.  Now the spec is the
+only way to express placement:
+
+* :func:`mesh_from_spec` builds the mesh a
+  :class:`~repro.retrieval.api.ShardSpec` describes — ``shards`` devices
+  along the doc axis (defaulting to every device the replica count leaves
+  available) times ``replicas`` read-scaling groups along the query axis.
+  Storage is *replicated* over the replica axis (an axis a
+  ``PartitionSpec`` does not name is replicated) and queries are
+  batch-sharded over it, so ``replicas=2`` halves per-device query load
+  without touching the shard layout — the olmax mesh idiom (unnamed axes
+  replicate, named axes partition).
+* :func:`place_shards` is the single choke point every sharded wrapper
+  routes per-shard storage placement through.  It walks the shards one by
+  one so a failed shard placement surfaces as *that shard's* error before
+  any index state is mutated — the serving layer's all-or-none staging
+  contract hangs off this.
+
+``SHARD_PLACEMENT_HOOK`` is the documented test/ops seam: when set, it is
+called as ``hook(shard_id, n_shards)`` before each shard is placed, and
+any exception it raises aborts the whole placement.  Fault-injection tests
+(one shard of a stage fails to load → the stage must roll back whole) and
+operational probes (per-shard placement latency) both hang off it.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+import numpy as np
+
+#: test/ops seam: ``hook(shard_id, n_shards)`` runs before each shard is
+#: placed; an exception aborts the whole placement (see module docstring)
+SHARD_PLACEMENT_HOOK: Optional[Callable[[int, int], None]] = None
+
+
+def available_devices(devices=None) -> list:
+    return list(jax.devices() if devices is None else devices)
+
+
+def mesh_from_spec(spec, devices=None):
+    """Build the mesh a :class:`~repro.retrieval.api.ShardSpec` describes.
+
+    The mesh shape is ``(replicas, shards)`` over ``(query axis, doc
+    axes)``; with ``spec.shards=None`` every device the replica count
+    leaves available goes to the doc axis.  Multi-axis ``doc_axis`` tuples
+    (e.g. ``("pod", "model")``) put the full shard count on the *last*
+    axis and size the leading axes 1 — capacity scaling across pods is a
+    launch-topology concern, not a spec one.
+    """
+    devs = available_devices(devices)
+    replicas = int(getattr(spec, "replicas", 1) or 1)
+    if replicas < 1:
+        raise ValueError(f"replicas must be ≥ 1, got {replicas}")
+    if len(devs) % replicas:
+        raise ValueError(
+            f"replicas={replicas} does not divide the {len(devs)} "
+            "available devices")
+    shards = spec.shards
+    if shards is None:
+        shards = max(1, len(devs) // replicas)
+    shards = int(shards)
+    need = replicas * shards
+    if need > len(devs):
+        raise ValueError(
+            f"ShardSpec wants {shards} shards × {replicas} replicas = "
+            f"{need} devices but only {len(devs)} are available — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count or shrink "
+            "the spec")
+    doc_axes = (spec.doc_axis,) if isinstance(spec.doc_axis, str) \
+        else tuple(spec.doc_axis)
+    q_axis = spec.effective_query_axis
+    axes: list[str] = []
+    shape: list[int] = []
+    if q_axis is not None:
+        axes.append(q_axis)
+        shape.append(replicas)
+    for a in doc_axes[:-1]:
+        axes.append(a)
+        shape.append(1)
+    axes.append(doc_axes[-1])
+    shape.append(shards)
+    dev_grid = np.asarray(devs[:need]).reshape(tuple(shape))
+    return jax.sharding.Mesh(dev_grid, tuple(axes))
+
+
+def place_shards(arrays: Sequence, mesh, specs: Sequence, *,
+                 n_shards: int) -> list:
+    """Place stacked per-shard arrays on the mesh, one hook call per shard.
+
+    ``arrays[i]`` is placed with ``NamedSharding(mesh, specs[i])``.  The
+    hook fires once per *shard* (not per array) first, so an injected
+    shard failure aborts before any device memory is committed — callers
+    treat a raised exception as "nothing was placed".
+    """
+    hook = SHARD_PLACEMENT_HOOK
+    if hook is not None:
+        for sid in range(n_shards):
+            hook(sid, n_shards)
+    return [jax.device_put(a, jax.sharding.NamedSharding(mesh, s))
+            for a, s in zip(arrays, specs)]

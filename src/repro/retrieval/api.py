@@ -34,6 +34,7 @@ import dataclasses
 import hashlib
 import json
 import os
+import warnings
 from typing import Any, Optional, Protocol, Sequence, Tuple, Union, \
     runtime_checkable
 
@@ -109,28 +110,60 @@ class Index(Protocol):
 
 @dataclasses.dataclass(frozen=True)
 class ShardSpec:
-    """Mesh placement for the sharded wrappers.
+    """Placement for the sharded wrappers — the *one* placement surface.
 
     ``doc_axis`` names the mesh axis (or axes) the document storage is
-    row-sharded over; ``query_axis`` optionally batch-shards queries.  The
-    mesh itself is a runtime resource — pass it to :func:`build_index` /
-    :func:`load_index`, not the spec.
+    row-sharded over; ``shards`` is how many devices that axis gets
+    (``None`` = every device the replica count leaves available).
+    ``replicas`` adds read-scaling replica groups: storage is replicated
+    over the query axis while queries batch-shard over it, so ``replicas=2``
+    halves per-device query load at unchanged capacity.  ``query_axis``
+    names that axis (defaults to ``"data"`` whenever ``replicas > 1``).
+
+    The mesh is *derived* from the spec (:meth:`build_mesh`, via
+    :func:`repro.parallel.placement.mesh_from_spec`) — the old pattern of
+    threading a hand-built ``mesh=`` through :func:`build_index` /
+    :func:`load_index` still works but is deprecated.  Old JSON specs
+    (without ``shards``/``replicas``) round-trip unchanged.
     """
 
     doc_axis: Union[str, Tuple[str, ...]] = "model"
     query_axis: Optional[str] = None
+    shards: Optional[int] = None
+    replicas: int = 1
+
+    def __post_init__(self):
+        if self.shards is not None and int(self.shards) < 1:
+            raise ValueError(f"shards must be ≥ 1, got {self.shards}")
+        if int(self.replicas) < 1:
+            raise ValueError(f"replicas must be ≥ 1, got {self.replicas}")
+
+    @property
+    def effective_query_axis(self) -> Optional[str]:
+        """The query/replica mesh axis, or ``None`` for replicated queries."""
+        if self.query_axis is not None:
+            return self.query_axis
+        return "data" if self.replicas > 1 else None
+
+    def build_mesh(self, devices=None):
+        """The mesh this spec describes over the available devices."""
+        from repro.parallel.placement import mesh_from_spec
+        return mesh_from_spec(self, devices=devices)
 
     def to_dict(self) -> dict:
         axis = (list(self.doc_axis) if isinstance(self.doc_axis, tuple)
                 else self.doc_axis)
-        return {"doc_axis": axis, "query_axis": self.query_axis}
+        return {"doc_axis": axis, "query_axis": self.query_axis,
+                "shards": self.shards, "replicas": self.replicas}
 
     @classmethod
     def from_dict(cls, d: dict) -> "ShardSpec":
         axis = d.get("doc_axis", "model")
         if isinstance(axis, list):
             axis = tuple(axis)
-        return cls(doc_axis=axis, query_axis=d.get("query_axis"))
+        return cls(doc_axis=axis, query_axis=d.get("query_axis"),
+                   shards=d.get("shards"),
+                   replicas=int(d.get("replicas", 1)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,13 +181,15 @@ class IndexSpec:
       through the transform registry (``dim``/``pre``/``post`` are ignored).
 
     ``ivf=(nlist, nprobe)`` promotes to approximate search;
-    ``shard=ShardSpec(...)`` wraps the result over a device mesh;
-    ``mutable=True`` wraps the result in a
-    :class:`~repro.retrieval.segments.SegmentedIndex` (live adds through
-    the frozen pipeline, tombstone deletes, drift-monitored compaction —
-    not combinable with ``shard``: compact on one host, then shard the
-    artifact).  Specs are frozen, hashable, and JSON round-trippable
-    (:meth:`to_json` / :meth:`from_json`) — the artifact format embeds them.
+    ``shard=ShardSpec(...)`` wraps the result over the mesh the spec
+    describes (see :meth:`ShardSpec.build_mesh`); ``mutable=True`` wraps
+    the result in a :class:`~repro.retrieval.segments.SegmentedIndex`
+    (live adds through the frozen pipeline, tombstone deletes,
+    drift-monitored compaction).  ``mutable`` and ``shard`` compose: the
+    delta layer rides on the host, the sharded main fans out per shard,
+    and compaction folds + re-shards in one step.  Specs are frozen,
+    hashable, and JSON round-trippable (:meth:`to_json` /
+    :meth:`from_json`) — the artifact format embeds them.
     """
 
     method: Optional[str] = None
@@ -190,10 +225,6 @@ class IndexSpec:
                 raise ValueError(f"ivf=(nlist, nprobe) must be ≥ 1, "
                                  f"got {self.ivf}")
             object.__setattr__(self, "ivf", (int(nlist), int(nprobe)))
-        if self.mutable and self.shard is not None:
-            raise ValueError("mutable=True cannot be combined with shard= "
-                             "(compact on one host, then shard the "
-                             "compacted artifact)")
         if self.sim not in ("ip", "l2", "cos"):
             raise ValueError(f"unknown sim {self.sim!r}")
         if self.backend not in ("auto", "jnp", "pallas"):
@@ -280,6 +311,18 @@ def _thaw(obj: Any):
 # ---------------------------------------------------------------------------
 
 
+def _resolve_mesh(shard: ShardSpec, mesh, where: str):
+    """Spec-derived mesh, honouring (but deprecating) an explicit one."""
+    if mesh is not None:
+        warnings.warn(
+            f"{where}(mesh=...) is deprecated: placement now comes from "
+            "the ShardSpec (shards=/replicas=) and the mesh is derived "
+            "from it — the explicit mesh is still honoured for now",
+            DeprecationWarning, stacklevel=3)
+        return mesh
+    return shard.build_mesh()
+
+
 def build_index(spec: IndexSpec, docs: jax.Array,
                 queries_sample: Optional[jax.Array] = None, *,
                 mesh=None, rng=None) -> Index:
@@ -298,14 +341,15 @@ def build_index(spec: IndexSpec, docs: jax.Array,
     ========================  =======================================
 
     ``queries_sample`` feeds the two-population statistics (center/norm,
-    PCA fit-on choices); ``mesh`` is required iff ``spec.shard`` is set.
+    PCA fit-on choices).  With ``spec.shard`` set the mesh is derived from
+    the spec; passing ``mesh=`` explicitly still works but is deprecated —
+    the spec is the one placement surface.
     """
-    if spec.shard is not None and mesh is None:
-        raise ValueError("spec.shard is set — build_index needs mesh=")
     pipeline = spec.build_pipeline()
 
     if spec.shard is not None:
         shard = spec.shard
+        mesh = _resolve_mesh(shard, mesh, "build_index")
         pipe = pipeline if pipeline is not None else CompressionPipeline([])
         if spec.ivf is not None:
             nlist, nprobe = spec.ivf
@@ -313,12 +357,12 @@ def build_index(spec: IndexSpec, docs: jax.Array,
                 docs, queries_sample, pipe, mesh=mesh, nlist=nlist,
                 nprobe=nprobe, sim=spec.sim, backend=spec.backend,
                 kmeans_iters=spec.kmeans_iters, doc_axis=shard.doc_axis,
-                query_axis=shard.query_axis, rng=rng)
+                query_axis=shard.effective_query_axis, rng=rng)
         else:
             idx = ShardedCompressedIndex.build(
                 docs, queries_sample, pipe, mesh, sim=spec.sim,
                 backend=spec.backend, doc_axis=shard.doc_axis,
-                query_axis=shard.query_axis, rng=rng)
+                query_axis=shard.effective_query_axis, rng=rng)
     elif spec.ivf is not None:
         nlist, nprobe = spec.ivf
         idx = IVFIndex.build(docs, queries_sample, pipeline, nlist=nlist,
@@ -647,15 +691,20 @@ def _rebuild_ivf(meta: dict, data, pipeline: CompressionPipeline,
 
 def load_index(path: str, *, mesh=None, backend: Optional[str] = None,
                expect: Optional[type] = None,
-               resident: Union[str, int] = "auto"):
+               resident: Union[str, int] = "auto",
+               shard: Optional[ShardSpec] = None):
     """Reconstruct an index from a :func:`save_index` artifact.
 
     Cold-start path: no raw corpus, no re-fit, no re-encode — rankings are
-    bit-identical to the index that was saved.  ``mesh`` is required for
-    sharded artifacts (placement is a runtime concern, not an artifact
-    one); ``backend`` optionally overrides the stored scorer backend
-    (e.g. load a TPU-built artifact with ``backend="jnp"`` on a host).
-    ``expect`` asserts the artifact kind (used by the per-class ``load``
+    bit-identical to the index that was saved.  Sharded artifacts derive
+    their mesh from the embedded spec (``mesh=`` is still honoured but
+    deprecated — placement is a :class:`ShardSpec` concern now);
+    ``shard=ShardSpec(...)`` loads a *single-host* artifact (``.npz`` or
+    chunked v3) and wraps it over the mesh the spec describes, so one
+    artifact serves both single-host and sharded deployments.
+    ``backend`` optionally overrides the stored scorer backend (e.g. load
+    a TPU-built artifact with ``backend="jnp"`` on a host).  ``expect``
+    asserts the artifact kind (used by the per-class ``load``
     classmethods).
 
     ``resident`` governs residency for chunked (v3) artifacts:
@@ -671,17 +720,33 @@ def load_index(path: str, *, mesh=None, backend: Optional[str] = None,
       ``AUTO_RESIDENT_BYTES``, else a tier at that budget.
 
     ``.npz`` (v1/v2) artifacts load exactly as before; ``resident`` is
-    ignored for them.
+    ignored for them, and forced to ``"all"`` under ``shard=`` (per-shard
+    storage must be materialised to be placed).
     """
+    if mesh is not None:
+        warnings.warn(
+            "load_index(mesh=...) is deprecated: sharded artifacts derive "
+            "their mesh from the embedded ShardSpec, and single-host "
+            "artifacts shard with shard=ShardSpec(...) — the explicit "
+            "mesh is still honoured for now", DeprecationWarning,
+            stacklevel=2)
     if is_chunked_artifact(path):
-        if mesh is not None:
-            raise ValueError("chunked (v3) artifacts are single-host — "
-                             "load resident='all' and shard explicitly")
-        return _load_index_chunked(path, backend=backend, expect=expect,
-                                   resident=resident)
+        if shard is None and mesh is None:
+            return _load_index_chunked(path, backend=backend,
+                                       expect=expect, resident=resident)
+        # sharding needs resident per-shard rows — materialise, then wrap
+        idx = _load_index_chunked(path, backend=backend, expect=None,
+                                  resident="all")
+        if shard is None:
+            shard = ShardSpec(doc_axis=mesh.axis_names[-1])
+        idx = _shard_loaded(idx, shard, mesh)
+        if expect is not None and not isinstance(idx, expect):
+            raise TypeError(f"{path} loaded as {type(idx).__name__}, "
+                            f"expected {expect.__name__}")
+        return idx
     with np.load(path, allow_pickle=False) as data:
         return _load_index_from(data, path, mesh=mesh, backend=backend,
-                                expect=expect)
+                                expect=expect, shard=shard)
 
 
 def _resolve_resident(resident: Union[str, int],
@@ -779,7 +844,8 @@ def load_index_meta(path: str) -> dict:
     }
 
 
-def _load_index_from(data, path: str, *, mesh, backend, expect):
+def _load_index_from(data, path: str, *, mesh, backend, expect,
+                     shard: Optional[ShardSpec] = None):
     meta = _parse_meta(data, path)
     kind = meta["kind"]
 
@@ -788,16 +854,18 @@ def _load_index_from(data, path: str, *, mesh, backend, expect):
 
     if kind == "SegmentedIndex":
         main = _load_core(meta["main_kind"], meta, data, path, pipeline,
-                          mesh=mesh, backend=backend)
+                          mesh=mesh, backend=backend, shard=shard)
         if meta.get("spec") is not None:
             main.spec = IndexSpec.from_dict(meta["spec"])
         idx = _wrap_segmented(main, meta, data)
     else:
         idx = _load_core(kind, meta, data, path, pipeline, mesh=mesh,
-                         backend=backend)
+                         backend=backend, shard=shard)
 
     if meta.get("spec") is not None:
         idx.spec = IndexSpec.from_dict(meta["spec"])
+    if shard is not None and not _is_sharded(idx):
+        idx = _shard_loaded(idx, shard, mesh)
     if expect is not None and not isinstance(idx, expect):
         raise TypeError(f"{path} holds a {kind}, expected "
                         f"{expect.__name__} — use api.load_index for "
@@ -902,7 +970,8 @@ def _load_index_chunked(path: str, *, backend, expect,
 
 
 def _load_core(kind: str, meta: dict, data, path: str,
-               pipeline: CompressionPipeline, *, mesh, backend):
+               pipeline: CompressionPipeline, *, mesh, backend,
+               shard: Optional[ShardSpec] = None):
     """Reconstruct one core (non-segmented) index from artifact arrays."""
     m = meta["index"]
 
@@ -921,11 +990,12 @@ def _load_core(kind: str, meta: dict, data, path: str,
     elif kind in ("IVFIndex", "IVFFlatIndex"):
         idx = _rebuild_ivf(meta, data, pipeline, backend, kind)
     elif kind == "ShardedCompressedIndex":
+        sh = _artifact_shard(meta, shard)
         if mesh is None:
-            raise ValueError(f"{kind} artifact needs mesh= to load")
+            mesh = sh.build_mesh()
         idx = ShardedCompressedIndex(
             pipeline, mesh, sim=m["sim"], backend=backend or m["backend"],
-            doc_axis=tuple(m["doc_axis"]), query_axis=m.get("query_axis"))
+            doc_axis=sh.doc_axis, query_axis=sh.effective_query_axis)
         idx.load_state_dict({
             "pipeline": _gather_pipeline_sd(
                 data, [n for n, _ in meta["stages"]], meta["stage_fitted"]),
@@ -933,11 +1003,97 @@ def _load_core(kind: str, meta: dict, data, path: str,
             "scorer_extra": m.get("scorer_extra", {}),
             "n_docs": m["n_docs"], "dim": m["dim"]})
     elif kind == "ShardedIVFIndex":
+        sh = _artifact_shard(meta, shard)
         if mesh is None:
-            raise ValueError(f"{kind} artifact needs mesh= to load")
+            mesh = sh.build_mesh()
         ivf = _rebuild_ivf(meta, data, pipeline, backend, "IVFIndex")
-        idx = ShardedIVFIndex(ivf, mesh, doc_axis=tuple(m["doc_axis"]),
-                              query_axis=m.get("query_axis"))
+        idx = ShardedIVFIndex(ivf, mesh, doc_axis=sh.doc_axis,
+                              query_axis=sh.effective_query_axis)
     else:
         raise ValueError(f"{path}: unknown index kind {kind!r}")
     return idx
+
+
+# ---------------------------------------------------------------------------
+# sharding a loaded single-host index
+# ---------------------------------------------------------------------------
+
+
+def _is_sharded(idx) -> bool:
+    if isinstance(idx, (ShardedCompressedIndex, ShardedIVFIndex)):
+        return True
+    return isinstance(idx, SegmentedIndex) and isinstance(
+        idx.main, (ShardedCompressedIndex, ShardedIVFIndex))
+
+
+def _spec_with_shard(spec: Optional[IndexSpec],
+                     shard: ShardSpec) -> Optional[IndexSpec]:
+    if spec is None:
+        return None
+    return dataclasses.replace(spec, shard=shard)
+
+
+def _derived_shard(m: dict) -> ShardSpec:
+    """ShardSpec equivalent to what a pre-spec sharded artifact stored."""
+    axis = m.get("doc_axis", "model")
+    if isinstance(axis, list):
+        axis = tuple(axis)
+    if isinstance(axis, tuple) and len(axis) == 1:
+        axis = axis[0]
+    return ShardSpec(doc_axis=axis, query_axis=m.get("query_axis"))
+
+
+def _artifact_shard(meta: dict, shard: Optional[ShardSpec]) -> ShardSpec:
+    """The placement a sharded artifact should load with: an explicit
+    ``shard=`` wins, then the spec embedded in the artifact, then a spec
+    derived from the stored axis names (old artifacts)."""
+    if shard is not None:
+        return shard
+    sp = meta.get("spec") or {}
+    if sp.get("shard"):
+        return ShardSpec.from_dict(sp["shard"])
+    return _derived_shard(meta["index"])
+
+
+def _shard_loaded(idx, shard: ShardSpec, mesh=None):
+    """Wrap a loaded single-host index over the mesh ``shard`` describes.
+
+    This is the one seam that lets a single-host artifact (``.npz`` or
+    chunked v3, mutable or not) serve sharded: the main fans out over the
+    doc axis, a SegmentedIndex's delta layer stays host-side (deltas are
+    small by the compaction contract), and rankings stay bit-identical to
+    the single-host index.
+    """
+    if mesh is None:
+        mesh = shard.build_mesh()
+    if isinstance(idx, SegmentedIndex):
+        st = idx._state
+        main = _shard_loaded(idx.main, shard, mesh)
+        out = SegmentedIndex(main, spec=_spec_with_shard(idx.spec, shard),
+                             drift_threshold=idx.drift_threshold,
+                             max_delta_fraction=idx.max_delta_fraction)
+        out._restore(main_gids=idx._main_gids, tomb=st.tomb,
+                     next_gid=st.next_gid, segments=st.segments,
+                     drift_sd=idx.drift.state_dict())
+        return out
+    if isinstance(idx, IVFIndex):
+        if idx.store is not None:
+            raise ValueError(
+                "shard= needs a fully resident index — store-backed "
+                "storage cannot be placed; load with resident='all'")
+        out = ShardedIVFIndex(idx, mesh, doc_axis=shard.doc_axis,
+                              query_axis=shard.effective_query_axis)
+    elif isinstance(idx, CompressedIndex):
+        out = ShardedCompressedIndex(
+            idx.pipeline, mesh, sim=idx.sim, backend=idx.backend,
+            doc_axis=shard.doc_axis, query_axis=shard.effective_query_axis)
+        out.scorer.load_extra_state(idx.scorer.extra_state())
+        out._storage_host = idx.storage
+        out._n_docs = len(idx)
+        out._dim = idx._dim
+    else:
+        raise TypeError(
+            f"shard= cannot wrap a {type(idx).__name__} — sharding covers "
+            "CompressedIndex, IVFIndex, and their mutable wrappers")
+    out.spec = _spec_with_shard(idx.spec, shard)
+    return out

@@ -1,8 +1,8 @@
 """Mutable-index subsystem: delta segments + tombstones over a frozen main.
 
 The paper compresses a *static* KB; production knowledge bases churn.
-:class:`SegmentedIndex` makes any single-host index mutable without ever
-re-fitting the compression pipeline:
+:class:`SegmentedIndex` makes any index — single-host or sharded over a
+mesh — mutable without ever re-fitting the compression pipeline:
 
 * **Delta segments** — ``add(docs)`` encodes the new rows through the
   *frozen* fitted pipeline (same float stages, same scorer backend, same
@@ -56,7 +56,13 @@ from repro.retrieval.index import CompressedIndex, DenseIndex
 from repro.retrieval.ivf import IVFFlatIndex, IVFIndex
 from repro.retrieval.kmeans import assign
 from repro.retrieval.scorers import Scorer, apply_float_stages
+from repro.retrieval.sharded import ShardedCompressedIndex, ShardedIVFIndex
 from repro.retrieval.topk import masked_topk_by_id, resolve_k, similarity
+
+#: mains whose storage fans out over a mesh — the delta layer stays
+#: host-side (deltas are small by the compaction contract) and scores
+#: through the same scorer, so the cross-layer merge is bit-comparable
+_SHARDED_MAINS = (ShardedCompressedIndex, ShardedIVFIndex)
 
 
 def fitted_center_mean(pipeline) -> Optional[np.ndarray]:
@@ -195,11 +201,15 @@ class _Snapshot:
 class SegmentedIndex:
     """Delta segments + tombstones layered over an immutable main index.
 
-    ``main`` is any single-host index (:class:`DenseIndex`,
-    :class:`CompressedIndex`, :class:`IVFIndex` / :class:`IVFFlatIndex`)
-    whose pipeline is already fitted; its storage is adopted as the base
-    layer and never touched again.  Sharded mains are rejected — compact
-    first, then shard the compacted artifact.
+    ``main`` is any index whose pipeline is already fitted
+    (:class:`DenseIndex`, :class:`CompressedIndex`, :class:`IVFIndex` /
+    :class:`IVFFlatIndex`, or the sharded wrappers
+    :class:`~repro.retrieval.sharded.ShardedCompressedIndex` /
+    :class:`~repro.retrieval.sharded.ShardedIVFIndex`); its storage is
+    adopted as the base layer and never touched again.  With a sharded
+    main the delta layer stays host-side — deltas are small by the
+    compaction contract — and compaction folds on the host, then
+    re-shards the folded main over the same mesh in one step.
     """
 
     def __init__(self, main, *, spec=None, drift_threshold: float = 0.35,
@@ -207,11 +217,12 @@ class SegmentedIndex:
         if isinstance(main, SegmentedIndex):
             raise TypeError("SegmentedIndex cannot wrap another "
                             "SegmentedIndex")
-        if not isinstance(main, (DenseIndex, CompressedIndex, IVFIndex)):
+        if not isinstance(main, (DenseIndex, CompressedIndex, IVFIndex)
+                          + _SHARDED_MAINS):
             raise TypeError(
-                f"SegmentedIndex needs a single-host main index, got "
-                f"{type(main).__name__} (compact/save on a single host, "
-                "then shard the artifact)")
+                f"SegmentedIndex cannot wrap a {type(main).__name__} — "
+                "mains are Dense/Compressed/IVF indexes or their sharded "
+                "wrappers")
         if len(main) == 0:
             raise ValueError("main index is empty — build it first")
         if getattr(main, "residual", False):
@@ -221,6 +232,10 @@ class SegmentedIndex:
                 "subtraction, so cross-layer scores would not be "
                 "comparable — build the main with residual=False")
         self.main = main
+        self._sharded = isinstance(main, _SHARDED_MAINS)
+        # the single-host core the compaction machinery folds: the wrapped
+        # IVFIndex for a sharded IVF main, the main itself otherwise
+        self._core = main.ivf if isinstance(main, ShardedIVFIndex) else main
         self.spec = getattr(main, "spec", None) if spec is None else spec
         self.sim = main.sim
         self.drift_threshold = float(drift_threshold)
@@ -234,7 +249,7 @@ class SegmentedIndex:
             self.scorer = main.scorer
             pipeline = main.pipeline
         self.drift = DriftMonitor(fitted_center_mean(pipeline))
-        self._is_ivf = isinstance(main, IVFIndex)
+        self._is_ivf = isinstance(main, (IVFIndex, ShardedIVFIndex))
         self._main_version = getattr(main, "_version", None)
         n_main = len(main)
         self._main_gids = np.arange(n_main, dtype=np.int32)
@@ -492,6 +507,35 @@ class SegmentedIndex:
             "needs_compaction": self.needs_compaction(),
         }
 
+    def place(self) -> "SegmentedIndex":
+        """Force the main's mesh placement now (no-op for single-host
+        mains) — the serving layer's all-or-none staging hook."""
+        fn = getattr(self.main, "place", None)
+        if fn is not None:
+            fn()
+        return self
+
+    def shard_stats(self) -> Optional[list]:
+        """Per-shard rollup when the main is sharded (None otherwise):
+        the main's own rollup plus how many live delta rows would fold
+        into each shard's lists (routed label → owning shard)."""
+        fn = getattr(self.main, "shard_stats", None)
+        if fn is None:
+            return None
+        rows = fn()
+        for r in rows:
+            r["n_delta"] = 0
+        st = self._state
+        owner = getattr(self.main, "list_owner", None)
+        if owner is not None and st.segments:
+            labels = np.concatenate([s.labels for s in st.segments])
+            gids = np.concatenate([s.gids for s in st.segments])
+            counts = np.bincount(owner[labels[~st.tomb[gids]]],
+                                 minlength=len(rows))
+            for r in rows:
+                r["n_delta"] = int(counts[r["shard"]])
+        return rows
+
     # -- compaction --------------------------------------------------------
     def _main_storage(self) -> jax.Array:
         if isinstance(self.main, DenseIndex):
@@ -558,7 +602,7 @@ class SegmentedIndex:
     def _make_ivf_like_main(self) -> IVFIndex:
         """Fresh unfitted shell with the main's ctor params + frozen
         scorer state (shared by every IVF compaction flavour)."""
-        main = self.main
+        main = self._core
         if isinstance(main, IVFFlatIndex):
             new_main = IVFFlatIndex(
                 nlist=main._nlist_requested, nprobe=main.nprobe,
@@ -574,9 +618,31 @@ class SegmentedIndex:
         new_main.scorer.load_extra_state(self.scorer.extra_state())
         return new_main
 
+    def _reshard_main(self, new_main):
+        """Wrap a freshly folded single-host main over the old main's mesh
+        — compaction for sharded mains is fold + re-shard in one step."""
+        main = self.main
+        if isinstance(main, ShardedIVFIndex):
+            out = ShardedIVFIndex(new_main, main.mesh,
+                                  doc_axis=main.doc_axes,
+                                  query_axis=main.query_axis)
+        else:
+            out = ShardedCompressedIndex(
+                new_main.pipeline, main.mesh, sim=new_main.sim,
+                backend=main.backend, doc_axis=main.doc_axes,
+                query_axis=main.query_axis)
+            out.scorer.load_extra_state(new_main.scorer.extra_state())
+            out._storage_host = new_main.storage
+            out._n_docs = len(new_main)
+            out._dim = new_main._dim
+        out.spec = getattr(new_main, "spec", None)
+        return out
+
     def _wrap_compacted(self, new_main, st: _Snapshot,
                         gids: np.ndarray) -> "SegmentedIndex":
         new_main.spec = getattr(self.main, "spec", None)
+        if self._sharded:
+            new_main = self._reshard_main(new_main)
         out = SegmentedIndex(new_main, spec=self.spec,
                              drift_threshold=self.drift_threshold,
                              max_delta_fraction=self.max_delta_fraction)
@@ -646,6 +712,12 @@ class SegmentedIndex:
             raise ValueError("cannot compact to an empty index — every doc "
                              "is tombstoned")
         if out_path is not None:
+            if self._sharded:
+                raise TypeError(
+                    "chunked compaction (out_path=) folds on a single "
+                    "host — sharded mains compact in memory and re-shard; "
+                    "save the compacted index and re-load it tiered "
+                    "instead")
             if not self._is_ivf:
                 raise TypeError("chunked compaction (out_path=) lays out "
                                 "IVF inverted lists — "
@@ -675,7 +747,7 @@ class SegmentedIndex:
 
         if isinstance(main, DenseIndex):
             new_main = DenseIndex(storage, sim=main.sim)
-        elif isinstance(main, IVFIndex):
+        elif self._is_ivf:
             new_main = self._make_ivf_like_main()
             x_route = new_main.scorer.decode(storage)
             new_main._install(storage, x_route, rng=rng)

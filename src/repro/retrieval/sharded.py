@@ -36,6 +36,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.pipeline import CompressionPipeline
 from repro.parallel.compat import shard_map
+from repro.parallel.placement import place_shards
 from repro.retrieval.ivf import IVFIndex, probe_and_score
 from repro.retrieval.scorers import (Scorer, apply_float_stages,
                                      scorer_for_pipeline)
@@ -54,6 +55,19 @@ def _axis_spec(axes: tuple[str, ...]):
     if not axes:
         return None
     return axes[0] if len(axes) == 1 else axes
+
+
+def _pad_queries(q: jax.Array, n_query_shards: int
+                 ) -> tuple[jax.Array, int]:
+    """Pad query rows to divide the query (replica) axis; returns the
+    padded block and the true row count so callers trim the outputs.
+    Padded rows score but never surface — the trim drops them whole."""
+    n = int(q.shape[0])
+    pad = (-n) % max(1, n_query_shards)
+    if pad:
+        q = jnp.concatenate(
+            [q, jnp.zeros((pad,) + q.shape[1:], q.dtype)], axis=0)
+    return q, n
 
 
 def make_sharded_scorer_search(mesh: Mesh, scorer: Scorer, *, k: int = 10,
@@ -161,6 +175,10 @@ class ShardedCompressedIndex:
     to the single-host index (see tests/test_sharded_index.py).
     """
 
+    #: sharded storage is always fully resident (Index-protocol surface:
+    #: the serving tier rollup reads ``store`` uniformly)
+    store = None
+
     def __init__(self, pipeline: CompressionPipeline, mesh: Mesh,
                  sim: str = "ip", backend: str = "auto",
                  doc_axis: AxisName = "model",
@@ -200,6 +218,28 @@ class ShardedCompressedIndex:
             n *= self.mesh.shape[a]
         return n
 
+    @property
+    def n_query_shards(self) -> int:
+        n = 1
+        for a in _as_tuple(self.query_axis):
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def storage(self):
+        """Unsharded encoded rows (single-host view for persistence and
+        the mutable wrapper's compaction path)."""
+        return self._storage_host
+
+    def shard_stats(self) -> list[dict]:
+        """Per-shard rollup for ``RetrievalService.stats()``: rows are
+        split evenly over the doc shards (padding rows excluded)."""
+        n, s = self._n_docs, self.n_doc_shards
+        rows_per = (n + (-n) % s) // s if n else 0
+        return [{"shard": i,
+                 "n_docs": int(max(0, min(rows_per, n - i * rows_per)))}
+                for i in range(s)]
+
     def add(self, docs: jax.Array) -> "ShardedCompressedIndex":
         x = apply_float_stages(self.float_stages, docs, "docs")
         self._dim = int(x.shape[-1])
@@ -222,6 +262,14 @@ class ShardedCompressedIndex:
         assert self._storage_host is not None
         return int(self._storage_host.size * self._storage_host.dtype.itemsize)
 
+    def place(self) -> "ShardedCompressedIndex":
+        """Force mesh placement *now* (it is otherwise lazy until the
+        first search): every shard lands on its device or this raises.
+        The serving layer calls this at engine construction so staging a
+        sharded version is all-or-none rather than failing mid-query."""
+        self._placed_storage()
+        return self
+
     # -- search ------------------------------------------------------------
     def _placed_storage(self) -> jax.Array:
         if self._placed is None:
@@ -231,7 +279,9 @@ class ShardedCompressedIndex:
                 enc = jnp.concatenate(
                     [enc, jnp.zeros((pad,) + enc.shape[1:], enc.dtype)],
                     axis=0)
-            self._placed = shard_index(enc, self.mesh, self.doc_axes)
+            spec = P(_axis_spec(self.doc_axes), None)
+            self._placed, = place_shards([enc], self.mesh, [spec],
+                                         n_shards=self.n_doc_shards)
         return self._placed
 
     def encode_queries(self, queries: jax.Array) -> jax.Array:
@@ -244,8 +294,10 @@ class ShardedCompressedIndex:
                 self.mesh, self.scorer, k=k, n_docs=self._n_docs,
                 doc_axis=self.doc_axes, query_axis=self.query_axis)
         q = self.scorer.encode_queries(self.encode_queries(queries))
-        return self._search_fns[k](q, self._placed_storage(),
-                                   self.scorer.params())
+        q, n = _pad_queries(q, self.n_query_shards)
+        vals, ids = self._search_fns[k](q, self._placed_storage(),
+                                        self.scorer.params())
+        return vals[:n], ids[:n]
 
     # -- persistence -------------------------------------------------------
     def state_dict(self) -> dict:
@@ -272,9 +324,12 @@ class ShardedCompressedIndex:
         save_index(self, path)
 
     @classmethod
-    def load(cls, path: str, mesh: Mesh) -> "ShardedCompressedIndex":
+    def load(cls, path: str, mesh: Optional[Mesh] = None, *,
+             shard=None) -> "ShardedCompressedIndex":
+        """Load from an artifact; the mesh derives from the embedded (or
+        passed) ShardSpec — ``mesh=`` is deprecated but still honoured."""
         from repro.retrieval.api import load_index
-        return load_index(path, mesh=mesh, expect=cls)
+        return load_index(path, mesh=mesh, expect=cls, shard=shard)
 
 
 # ---------------------------------------------------------------------------
@@ -326,17 +381,22 @@ def make_sharded_ivf_search(mesh: Mesh, scorer: Scorer, *, sim: str,
 
 def partition_ivf_lists(lists: np.ndarray, storage: np.ndarray,
                         n_shards: int
-                        ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+                        ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                   np.ndarray]:
     """Partition inverted lists over shards, greedily balancing doc counts.
 
     ``lists`` is the (nlist, max_len) global-doc-id matrix (−1 padded);
     ``storage`` the (n_docs, …) encoded rows.  Returns stacked per-shard
-    arrays splittable along axis 0 by ``shard_map``:
+    arrays splittable along axis 0 by ``shard_map``, plus the ownership
+    map:
 
     * ``lists_stacked``   (n_shards·nlist, max_len) — local row ids, −1 for
       pad *and* for lists the shard does not own;
     * ``storage_stacked`` (n_shards·rows_max, …)    — shard-local rows;
-    * ``gids_stacked``    (n_shards·rows_max,)      — global doc ids, −1 pad.
+    * ``gids_stacked``    (n_shards·rows_max,)      — global doc ids, −1 pad;
+    * ``owner``           (nlist,)                  — which shard owns each
+      list (feeds the per-shard stats rollup and the delta-segment
+      placement preview).
     """
     nlist, max_len = lists.shape
     sizes = (lists >= 0).sum(axis=1)
@@ -362,7 +422,7 @@ def partition_ivf_lists(lists: np.ndarray, storage: np.ndarray,
             lists_stacked[s * nlist + c, : len(ids)] = \
                 np.arange(r, r + len(ids), dtype=np.int32)
             r += len(ids)
-    return lists_stacked, storage_stacked, gids_stacked
+    return lists_stacked, storage_stacked, gids_stacked, owner
 
 
 class ShardedIVFIndex:
@@ -375,6 +435,10 @@ class ShardedIVFIndex:
     list assignment are taken as-is, so rankings match the single-host
     index exactly; see tests/test_sharded_ivf.py).
     """
+
+    #: sharded lists are always fully resident (Index-protocol surface:
+    #: the serving tier rollup reads ``store`` uniformly)
+    store = None
 
     def __init__(self, ivf: IVFIndex, mesh: Mesh,
                  doc_axis: AxisName = "model",
@@ -394,17 +458,26 @@ class ShardedIVFIndex:
         self.float_stages = ivf.float_stages
         self.sim = ivf.sim
         self._snapshot_version = ivf._version   # partition frozen at this fit
-        lists_s, storage_s, gids_s = partition_ivf_lists(
+        lists_s, storage_s, gids_s, owner = partition_ivf_lists(
             np.asarray(ivf.lists), np.asarray(ivf.storage),
             self.n_doc_shards)
-        self._lists = shard_index(jnp.asarray(lists_s), mesh, self.doc_axes)
-        self._storage = shard_index(jnp.asarray(storage_s), mesh,
-                                    self.doc_axes)
+        self.list_owner = owner        # (nlist,) → shard, for stats rollup
+        doc_spec = P(_axis_spec(self.doc_axes), None)
         gid_spec = P(_axis_spec(self.doc_axes))
-        self._gids = jax.device_put(jnp.asarray(gids_s),
-                                    NamedSharding(mesh, gid_spec))
+        self._lists, self._storage, self._gids = place_shards(
+            [jnp.asarray(lists_s), jnp.asarray(storage_s),
+             jnp.asarray(gids_s)],
+            mesh, [doc_spec, doc_spec, gid_spec],
+            n_shards=self.n_doc_shards)
         self._search_fns: dict[tuple[int, int], object] = {}
         self.spec = None               # set by api.build_index / api.load_index
+
+    def place(self) -> "ShardedIVFIndex":
+        """Already placed — the constructor put every shard's lists,
+        storage, and gid map on its device (or raised).  Kept so the
+        serving layer can call ``place()`` uniformly on any sharded
+        index at engine construction."""
+        return self
 
     # -- construction -----------------------------------------------------
     @classmethod
@@ -450,6 +523,79 @@ class ShardedIVFIndex:
     def nprobe(self) -> int:
         return self.ivf.nprobe
 
+    # -- Index-protocol surface delegated to the wrapped single-host IVF
+    # (lets SegmentedIndex layer deltas over a sharded main and the serving
+    # stats read one schema) ------------------------------------------------
+    @property
+    def centroids(self):
+        return self.ivf.centroids
+
+    @property
+    def pipeline(self):
+        return self.ivf.pipeline
+
+    @property
+    def storage(self):
+        """Unsharded encoded rows (single-host view for persistence and
+        the mutable wrapper's compaction path)."""
+        return self.ivf.storage
+
+    @property
+    def lists(self):
+        return self.ivf.lists
+
+    @property
+    def backend(self):
+        return self.ivf.backend
+
+    @property
+    def residual(self) -> bool:
+        return False                   # rejected at construction
+
+    @property
+    def _version(self):
+        return self.ivf._version
+
+    @property
+    def _nlist_requested(self):
+        return self.ivf._nlist_requested
+
+    @property
+    def kmeans_iters(self):
+        return self.ivf.kmeans_iters
+
+    @property
+    def kmeans_init(self):
+        return self.ivf.kmeans_init
+
+    @property
+    def balanced(self):
+        return self.ivf.balanced
+
+    def _resolve_nprobe(self, nprobe: Optional[int]) -> int:
+        return self.ivf._resolve_nprobe(nprobe)
+
+    def prefetch(self, queries: jax.Array,
+                 nprobe: Optional[int] = None) -> int:
+        return 0                       # always fully resident
+
+    @property
+    def n_query_shards(self) -> int:
+        n = 1
+        for a in _as_tuple(self.query_axis):
+            n *= self.mesh.shape[a]
+        return n
+
+    def shard_stats(self) -> list[dict]:
+        """Per-shard rollup for ``RetrievalService.stats()``: docs and
+        inverted lists owned by each shard under the greedy partition."""
+        owner = self.list_owner
+        sizes = (np.asarray(self.ivf.lists) >= 0).sum(axis=1)
+        return [{"shard": s,
+                 "n_docs": int(sizes[owner == s].sum()),
+                 "n_lists": int((owner == s).sum())}
+                for s in range(self.n_doc_shards)]
+
     # -- search ------------------------------------------------------------
     def encode_queries(self, queries: jax.Array) -> jax.Array:
         return apply_float_stages(self.float_stages, queries, "queries")
@@ -470,9 +616,11 @@ class ShardedIVFIndex:
                 self.mesh, self.scorer, sim=self.sim, k=k, nprobe=nprobe,
                 doc_axis=self.doc_axes, query_axis=self.query_axis)
         q = self.encode_queries(queries)
-        return self._search_fns[key](q, self.ivf.centroids, self._lists,
-                                     self._storage, self._gids,
-                                     self.scorer.params())
+        q, n = _pad_queries(q, self.n_query_shards)
+        vals, ids = self._search_fns[key](q, self.ivf.centroids, self._lists,
+                                          self._storage, self._gids,
+                                          self.scorer.params())
+        return vals[:n], ids[:n]
 
     # -- persistence -------------------------------------------------------
     def state_dict(self) -> dict:
@@ -492,6 +640,9 @@ class ShardedIVFIndex:
         save_index(self, path)
 
     @classmethod
-    def load(cls, path: str, mesh: Mesh) -> "ShardedIVFIndex":
+    def load(cls, path: str, mesh: Optional[Mesh] = None, *,
+             shard=None) -> "ShardedIVFIndex":
+        """Load from an artifact; the mesh derives from the embedded (or
+        passed) ShardSpec — ``mesh=`` is deprecated but still honoured."""
         from repro.retrieval.api import load_index
-        return load_index(path, mesh=mesh, expect=cls)
+        return load_index(path, mesh=mesh, expect=cls, shard=shard)

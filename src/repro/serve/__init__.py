@@ -32,18 +32,22 @@ from repro.serve.cache import ResultCache
 from repro.serve.engine import ServeEngine, ServeResult
 from repro.serve.limits import RateLimiter, TokenBucket
 from repro.serve.metrics import LatencyStats
-from repro.serve.router import IndexEntry, IndexRegistry, IndexVersion
+from repro.serve.router import (IndexEntry, IndexRegistry, IndexVersion,
+                                load_engine)
 from repro.serve.service import (CanaryFailed, QueryHandle, QueryOptions,
                                  QueueFull, RateLimited, RetrievalService,
                                  ServiceClosed)
 from repro.serve.shadow import ShadowScorer
+from repro.serve.stats import (IndexStats, ServiceStats, ShardStats,
+                               VersionStats)
 
 __all__ = [
     "AdaptiveBatcher", "MicroBatch", "MicroBatcher",
-    "ServeEngine", "ServeResult",
+    "ServeEngine", "ServeResult", "load_engine",
     "LatencyStats", "ShadowScorer",
     "RateLimiter", "TokenBucket", "ResultCache",
     "IndexEntry", "IndexRegistry", "IndexVersion",
     "RetrievalService", "QueryOptions", "QueryHandle",
     "QueueFull", "RateLimited", "CanaryFailed", "ServiceClosed",
+    "ServiceStats", "IndexStats", "VersionStats", "ShardStats",
 ]

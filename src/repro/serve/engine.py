@@ -55,6 +55,12 @@ class ServeEngine:
 
     def __init__(self, index, k: int = 10, batcher: Optional[MicroBatcher] = None,
                  shadow: Optional[ShadowScorer] = None):
+        place = getattr(index, "place", None)
+        if place is not None:
+            # sharded index: force mesh placement before this engine can
+            # become visible to the registry — every shard lands on its
+            # device here or the stage/register aborts whole (all-or-none)
+            place()
         self.index = index
         self.k = k
         self.batcher = batcher if batcher is not None else MicroBatcher()
@@ -85,17 +91,25 @@ class ServeEngine:
                       backend: Optional[str] = None,
                       batcher: Optional[MicroBatcher] = None,
                       shadow: Optional[ShadowScorer] = None) -> "ServeEngine":
-        """Cold-start an engine straight from a saved index artifact.
+        """Deprecated alias for the one cold-start path.
 
-        The production start-up path: the serve process never touches the
-        raw corpus or re-fits anything — it loads the compressed artifact
-        (:func:`repro.retrieval.api.load_index`) and begins serving.
-        ``mesh`` is required for sharded artifacts; ``backend`` optionally
-        overrides the stored scorer backend.
+        Use :func:`repro.serve.router.load_engine` (or register the
+        artifact with :class:`~repro.serve.service.RetrievalService`) —
+        all three doors now route through the same
+        :func:`repro.retrieval.api.load_index` adapter, so this alias
+        only survives for old callers.
         """
-        from repro.retrieval.api import load_index
-        index = load_index(path, mesh=mesh, backend=backend)
-        return cls(index, k=k, batcher=batcher, shadow=shadow)
+        import warnings
+        warnings.warn(
+            "ServeEngine.from_artifact is deprecated: use "
+            "repro.serve.router.load_engine (one loader for every "
+            "cold-start path) or RetrievalService.register(artifact=...)",
+            DeprecationWarning, stacklevel=2)
+        from repro.serve.router import load_engine
+        engine = load_engine(path, mesh=mesh, backend=backend, k=k,
+                             batcher=batcher)
+        engine.shadow = shadow
+        return engine
 
     # -- request side ------------------------------------------------------
     def submit(self, queries, nprobe: Optional[int] = None,

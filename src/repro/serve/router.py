@@ -31,6 +31,25 @@ from repro.serve.engine import ServeEngine
 from repro.serve.metrics import LatencyStats
 
 
+def load_engine(artifact: str, *, mesh=None, shard=None,
+                backend: Optional[str] = None, resident="auto",
+                k: int = 10, batcher: Optional[MicroBatcher] = None
+                ) -> ServeEngine:
+    """The one cold-start adapter: artifact path → running engine.
+
+    Every serve-side load — ``register(artifact=)``, ``stage(artifact=)``,
+    and the deprecated ``ServeEngine.from_artifact`` — routes through
+    :func:`repro.retrieval.api.load_index` here, so placement
+    (``shard=ShardSpec(...)``, or the spec embedded in a sharded
+    artifact), backend override, and chunked-artifact residency behave
+    identically no matter which door the artifact came in through.
+    """
+    from repro.retrieval.api import load_index
+    index = load_index(artifact, mesh=mesh, backend=backend,
+                       resident=resident, shard=shard)
+    return ServeEngine(index, k=k, batcher=batcher)
+
+
 class IndexVersion:
     """One version of a named index: engine core + provenance.
 
@@ -42,7 +61,7 @@ class IndexVersion:
     """
 
     def __init__(self, version: int, *, index=None,
-                 artifact: Optional[str] = None, mesh=None,
+                 artifact: Optional[str] = None, mesh=None, shard=None,
                  backend: Optional[str] = None, k: int = 10,
                  batcher: Optional[MicroBatcher] = None,
                  resident="auto"):
@@ -53,6 +72,7 @@ class IndexVersion:
         self.version = version
         self.artifact = artifact
         self.mesh = mesh
+        self.shard = shard             # ShardSpec: load the artifact sharded
         self.backend = backend
         self.resident = resident       # residency knob for v3 artifacts
         self._k = k
@@ -95,12 +115,10 @@ class IndexVersion:
         """
         with self._load_lock:
             if self._engine is None:
-                from repro.retrieval.api import load_index
-                index = load_index(self.artifact, mesh=self.mesh,
-                                   backend=self.backend,
-                                   resident=self.resident)
-                self._engine = ServeEngine(index, k=self._k,
-                                           batcher=self._batcher)
+                self._engine = load_engine(
+                    self.artifact, mesh=self.mesh, shard=self.shard,
+                    backend=self.backend, resident=self.resident,
+                    k=self._k, batcher=self._batcher)
             return self._engine
 
 

@@ -65,6 +65,8 @@ from repro.serve.limits import RateLimiter
 from repro.serve.metrics import LatencyStats
 from repro.serve.router import IndexEntry, IndexRegistry, IndexVersion
 from repro.serve.shadow import ShadowScorer
+from repro.serve.stats import (IndexStats, ServiceStats, ShardStats,
+                               VersionStats)
 
 
 class QueueFull(RuntimeError):
@@ -259,7 +261,7 @@ class RetrievalService:
     # -- registry ----------------------------------------------------------
     def register(self, name: str, index=None, *,
                  artifact: Optional[str] = None, lazy: bool = False,
-                 mesh=None, backend: Optional[str] = None,
+                 mesh=None, shard=None, backend: Optional[str] = None,
                  k: Optional[int] = None,
                  resident_budget=None) -> int:
         """Register a named index; returns its version number (1).
@@ -269,26 +271,38 @@ class RetrievalService:
         ``save_index`` ``.npz`` path or chunked artifact directory).  With
         ``lazy=True`` the artifact's arrays are not loaded until the first
         query routes to it — only the identity header is read up front.
-        ``mesh`` / ``backend`` forward to
-        :func:`~repro.retrieval.api.load_index`.  ``resident_budget``
+        ``shard`` is a :class:`~repro.retrieval.api.ShardSpec`: the
+        artifact is loaded sharded over a mesh derived from the spec
+        (``mesh`` — deprecated — and ``backend`` also forward to
+        :func:`~repro.retrieval.api.load_index`).  ``resident_budget``
         forwards as ``load_index(..., resident=...)`` for chunked (v3)
         artifacts: ``None`` means ``"auto"``; an int byte budget serves
         the encoded lists from a memory-mapped hot/cold tier; ``"all"``
         forces full materialisation.
+
+        Registration is all-or-none: a failing eager load (bad artifact,
+        placement failure on any shard) leaves the registry untouched.
         """
         with self._lock:
             self._check_open_locked()
+            if name in self._registry:
+                raise ValueError(f"index {name!r} already registered — "
+                                 "use stage()/promote() to ship a new "
+                                 "version")
             entry = IndexEntry(name)
             iv = IndexVersion(entry.allocate(), index=index,
-                              artifact=artifact, mesh=mesh, backend=backend,
+                              artifact=artifact, mesh=mesh, shard=shard,
+                              backend=backend,
                               k=k or self.default_k, batcher=self._batcher,
                               resident=("auto" if resident_budget is None
                                         else resident_budget))
             entry.versions[iv.version] = iv
             entry.live = iv.version
-            self._registry.add(entry)   # raises on duplicate; nothing leaks
         if not lazy:
-            iv.ensure_engine()
+            iv.ensure_engine()          # outside the lock; raises → no entry
+        with self._lock:
+            self._check_open_locked()
+            self._registry.add(entry)   # raises on duplicate; nothing leaks
         return iv.version
 
     def indexes(self) -> list[str]:
@@ -504,21 +518,25 @@ class RetrievalService:
 
     # -- hot swap ----------------------------------------------------------
     def stage(self, name: str, index=None, *, artifact: Optional[str] = None,
-              mesh=None, backend: Optional[str] = None,
+              mesh=None, shard=None, backend: Optional[str] = None,
               k: Optional[int] = None, canary_every: int = 0,
               resident_budget=None) -> int:
         """Load the next version of ``name`` off the serving path.
 
         The artifact load (or in-memory adoption) and engine construction
         happen in the *calling* thread; live traffic keeps draining
-        throughout.  ``canary_every=N`` additionally attaches a
-        :class:`~repro.serve.shadow.ShadowScorer` over the staged index to
-        the live engine: every Nth served batch is re-scored on the staged
-        version and the top-k overlap recorded (see :meth:`canary`,
-        ``promote(min_overlap=...)``).  Staging again replaces a previous
-        staged version.  ``resident_budget`` is the chunked-artifact
-        residency knob (see :meth:`register`).  Returns the new version
-        number.
+        throughout.  Staging is all-or-none: for a sharded load
+        (``shard=ShardSpec(...)`` or a sharded artifact), either every
+        shard places on its device or the whole stage raises with the
+        registry untouched — a partially placed version can never become
+        visible to :meth:`promote`.  ``canary_every=N`` additionally
+        attaches a :class:`~repro.serve.shadow.ShadowScorer` over the
+        staged index to the live engine: every Nth served batch is
+        re-scored on the staged version and the top-k overlap recorded
+        (see :meth:`canary`, ``promote(min_overlap=...)``).  Staging again
+        replaces a previous staged version.  ``resident_budget`` is the
+        chunked-artifact residency knob (see :meth:`register`).  Returns
+        the new version number.
         """
         with self._lock:
             self._check_open_locked()
@@ -526,7 +544,8 @@ class RetrievalService:
             vid = entry.allocate()
             live_iv = entry.live_version()
         iv = IndexVersion(vid, index=index, artifact=artifact, mesh=mesh,
-                          backend=backend, k=k or self.default_k,
+                          shard=shard, backend=backend,
+                          k=k or self.default_k,
                           batcher=self._batcher,
                           resident=("auto" if resident_budget is None
                                     else resident_budget))
@@ -731,17 +750,20 @@ class RetrievalService:
             self._cache.invalidate(name)
 
     # -- observability -----------------------------------------------------
-    def stats(self) -> dict:
-        """Service-level snapshot: per-index version table + rolled-up
-        totals and merged latency percentiles across every engine.
+    def stats_typed(self) -> ServiceStats:
+        """Typed service-level snapshot: per-index version table +
+        rolled-up totals and merged latency percentiles across every
+        engine, as :class:`~repro.serve.stats.ServiceStats`.
 
-        Top-level latency keys (``p50_ms``/``p99_ms``/…) are per-batch
-        device time; ``request_*`` keys are per-request queue-entry →
-        last-batch-done — the number an SLO is written against.
+        ``latency`` holds the per-batch device-time summary;
+        ``request_latency`` the per-request queue-entry → last-batch-done
+        summary — the number an SLO is written against.
         ``queue_depth``/``queue_high_water``/``shed_rate`` are the
         backpressure gauges: depth is rows currently admitted-but-
         unresolved, shed rate is the fraction of arrivals turned away
         (admission bound + rate limit) over the service's lifetime.
+        Versions serving a sharded index additionally carry a per-shard
+        rollup (:class:`~repro.serve.stats.ShardStats`).
         """
         with self._lock:
             snapshot = [(entry.name, entry.live, entry.staged,
@@ -749,7 +771,7 @@ class RetrievalService:
                          dict(entry.versions), dict(entry.retired_totals),
                          entry.retired_latency, entry.retired_request_latency)
                         for entry in self._registry.entries()]
-        indexes: dict[str, dict] = {}
+        indexes: dict[str, IndexStats] = {}
         latencies: list[LatencyStats] = []
         request_latencies: list[LatencyStats] = []
         totals = {"requests_served": 0, "queries_served": 0,
@@ -757,42 +779,45 @@ class RetrievalService:
                   "queries_submitted": 0}
         for (name, live, staged, previous, canary, versions, retired,
              retired_latency, retired_request_latency) in snapshot:
-            table = {}
+            table: dict[int, VersionStats] = {}
             for vid, iv in sorted(versions.items()):
-                row = dict(iv.info)
-                row["loaded"] = iv.loaded
+                vs = VersionStats(info=dict(iv.info), loaded=iv.loaded)
                 if iv.loaded:
-                    row.update(iv.engine.stats())
+                    vs.engine = iv.engine.stats()
                     latencies.append(iv.engine.latency)
                     request_latencies.append(iv.engine.request_latency)
                     for key in totals:
-                        totals[key] += row[key]
-                    if isinstance(iv.engine.index, SegmentedIndex):
+                        totals[key] += vs.engine[key]
+                    idx = iv.engine.index
+                    if isinstance(idx, SegmentedIndex):
                         # the preprocessing-drift monitor lives here:
                         # mutable["drift"]["mean_shift"] vs the pipeline's
                         # fitted centering stats, plus needs_compaction
-                        row["mutable"] = iv.engine.index.mutable_stats()
-                    idx = iv.engine.index
+                        vs.mutable = idx.mutable_stats()
                     main = idx.main if isinstance(idx, SegmentedIndex) \
                         else idx
                     store = getattr(main, "store", None)
                     if store is not None:
                         # hot/cold tier gauges for store-backed (v3
                         # chunked, partially resident) versions
-                        row["tier"] = store.stats()
-                table[vid] = row
+                        vs.tier = store.stats()
+                    shard_fn = getattr(idx, "shard_stats", None)
+                    rows = shard_fn() if shard_fn is not None else None
+                    if rows is not None:    # None: single-host main
+                        vs.shards = [ShardStats.from_dict(r) for r in rows]
+                table[vid] = vs
             for key in totals:              # GC'd versions still count
                 totals[key] += retired[key]
             latencies.append(retired_latency)
             request_latencies.append(retired_request_latency)
-            indexes[name] = {
-                "live": live, "staged": staged, "previous": previous,
-                "canary": (None if canary is None else
-                           {"overlap": canary.mean_overlap,
-                            "batches": len(canary.overlaps)}),
-                "versions": table,
-                "retired": retired,
-            }
+            indexes[name] = IndexStats(
+                live=live, staged=staged, previous=previous,
+                canary=(None if canary is None else
+                        {"overlap": canary.mean_overlap,
+                         "batches": len(canary.overlaps)}),
+                versions=table,
+                retired=retired,
+            )
         with self._admission:
             queue_depth = self._pending_queries
             high_water = self._pending_high_water
@@ -805,24 +830,29 @@ class RetrievalService:
             compactions_run = self.compactions_run
         arrivals = admitted + rejected + rate_limited
         shed = rejected + rate_limited
-        out = {"indexes": indexes,
-               "pending_queries": queue_depth,
-               "queue_depth": queue_depth,
-               "queue_high_water": high_water,
-               "requests_admitted": admitted,
-               "requests_rejected": rejected,
-               "requests_rate_limited": rate_limited,
-               "shed_rate": (shed / arrivals) if arrivals else 0.0,
-               "cache_hits": cache_hits,
-               "updates_applied": updates_applied,
-               "compactions_run": compactions_run,
-               **totals,
-               **LatencyStats.merge(latencies).summary()}
-        out.update({f"request_{key}": val for key, val in
-                    LatencyStats.merge(request_latencies).summary().items()})
-        if self._cache is not None:
-            out["cache"] = self._cache.stats()
         limits = self._limiter.stats()
-        if limits:
-            out["limits"] = limits
-        return out
+        return ServiceStats(
+            indexes=indexes,
+            pending_queries=queue_depth,
+            queue_depth=queue_depth,
+            queue_high_water=high_water,
+            requests_admitted=admitted,
+            requests_rejected=rejected,
+            requests_rate_limited=rate_limited,
+            shed_rate=(shed / arrivals) if arrivals else 0.0,
+            cache_hits=cache_hits,
+            updates_applied=updates_applied,
+            compactions_run=compactions_run,
+            totals=totals,
+            latency=LatencyStats.merge(latencies).summary(),
+            request_latency=LatencyStats.merge(
+                request_latencies).summary(),
+            cache=self._cache.stats() if self._cache is not None else None,
+            limits=limits if limits else None,
+        )
+
+    def stats(self) -> dict:
+        """Plain-dict snapshot — ``stats_typed().to_dict()``, the exact
+        key shape this method has always returned (new in this schema:
+        per-version ``"shards"`` rollup for sharded versions)."""
+        return self.stats_typed().to_dict()

@@ -72,10 +72,19 @@ def test_spec_validation():
                       ("Int8Quantizer", {})), backend="jnp"),
     IndexSpec(method="pca_int8", shard=ShardSpec(doc_axis=("pod", "model"),
                                                  query_axis="data")),
+    IndexSpec(method="pca_int8", shard=ShardSpec(shards=4, replicas=2)),
 ])
 def test_spec_json_roundtrip(spec):
     assert IndexSpec.from_json(spec.to_json()) == spec
     hash(spec)     # frozen specs stay hashable (usable as cache keys)
+
+
+def test_shard_spec_old_json_defaults():
+    # pre-placement-API JSON (no shards/replicas keys) loads with the
+    # new fields defaulted, so old artifacts keep round-tripping
+    old = ShardSpec.from_dict({"doc_axis": "model", "query_axis": None})
+    assert old == ShardSpec()
+    assert old.shards is None and old.replicas == 1
 
 
 def test_spec_stage_list_ignores_dim_knobs(corpus):
@@ -104,11 +113,32 @@ def test_build_index_kinds(corpus):
     assert (idx.nlist, idx.nprobe) == (8, 4)
 
 
-def test_build_index_shard_needs_mesh(corpus):
+def test_build_index_shard_derives_mesh(corpus):
+    # the placement redesign: no mesh= needed — ShardSpec is the whole
+    # placement surface and the mesh is derived from it
     docs, queries = corpus
-    with pytest.raises(ValueError, match="mesh"):
-        build_index(IndexSpec(method="int8", shard=ShardSpec()), docs,
-                    queries)
+    idx = build_index(IndexSpec(method="int8", backend="jnp",
+                                shard=ShardSpec()), docs, queries)
+    assert isinstance(idx, ShardedCompressedIndex)
+    assert idx.mesh.devices.size == jax.device_count()
+
+
+def test_build_index_mesh_kwarg_deprecated(corpus):
+    docs, queries = corpus
+    mesh = jax.make_mesh((jax.device_count(),), ("model",))
+    with pytest.warns(DeprecationWarning, match="mesh"):
+        idx = build_index(IndexSpec(method="int8", backend="jnp",
+                                    shard=ShardSpec()), docs, queries,
+                          mesh=mesh)
+    assert isinstance(idx, ShardedCompressedIndex)
+
+
+def test_shard_spec_replicas_must_divide_devices(corpus):
+    docs, queries = corpus
+    bad = jax.device_count() * 2 + 1
+    with pytest.raises(ValueError, match="replicas"):
+        build_index(IndexSpec(method="int8", backend="jnp",
+                              shard=ShardSpec(replicas=bad)), docs, queries)
 
 
 def test_all_classes_satisfy_protocol(corpus):
@@ -204,30 +234,50 @@ def test_roundtrip_to_ivf_promotion(tmp_path, corpus):
 @pytest.mark.slow
 def test_roundtrip_sharded(tmp_path, corpus):
     docs, queries = corpus
-    mesh = jax.make_mesh((jax.device_count(),), ("model",))
     spec = IndexSpec(method="pca_int8", dim=32, backend="jnp",
                      shard=ShardSpec())
-    idx = build_index(spec, docs, queries, mesh=mesh)
+    idx = build_index(spec, docs, queries)
     before = idx.search(queries, 10)
     path = str(tmp_path / "sharded.npz")
     idx.save(path)
-    with pytest.raises(ValueError, match="mesh"):
-        load_index(path)
-    idx2 = ShardedCompressedIndex.load(path, mesh=mesh)
+    # a bare load_index derives the mesh from the spec saved in the
+    # artifact — no mesh= (or even ShardSpec) required at load time
+    idx2 = load_index(path)
+    assert isinstance(idx2, ShardedCompressedIndex)
     _assert_identical(before, idx2.search(queries, 10))
+    idx3 = ShardedCompressedIndex.load(path)
+    _assert_identical(before, idx3.search(queries, 10))
 
 
 @pytest.mark.slow
 def test_roundtrip_sharded_ivf(tmp_path, corpus):
     docs, queries = corpus
-    mesh = jax.make_mesh((jax.device_count(),), ("model",))
     spec = IndexSpec(method="onebit", backend="jnp", ivf=(16, 8),
                      kmeans_iters=6, shard=ShardSpec())
-    idx = build_index(spec, docs, queries, mesh=mesh)
+    idx = build_index(spec, docs, queries)
     before = idx.search(queries, 10)
     path = str(tmp_path / "sivf.npz")
     idx.save(path)
-    idx2 = ShardedIVFIndex.load(path, mesh=mesh)
+    idx2 = load_index(path)
+    assert isinstance(idx2, ShardedIVFIndex)
+    _assert_identical(before, idx2.search(queries, 10))
+    idx3 = ShardedIVFIndex.load(path)
+    _assert_identical(before, idx3.search(queries, 10))
+
+
+@pytest.mark.slow
+def test_load_index_shard_wraps_single_host_artifact(tmp_path, corpus):
+    # shard= at load time places a *single-host* artifact over the mesh:
+    # the v3-artifact-plus-ShardSpec door into sharded serving
+    docs, queries = corpus
+    spec = IndexSpec(method="int8", backend="jnp", post=False)
+    idx = build_index(spec, docs, queries)
+    before = idx.search(queries, 10)
+    path = str(tmp_path / "single.npz")
+    idx.save(path)
+    idx2 = load_index(path, shard=ShardSpec())
+    assert isinstance(idx2, ShardedCompressedIndex)
+    assert idx2.spec.shard == ShardSpec()
     _assert_identical(before, idx2.search(queries, 10))
 
 
@@ -282,16 +332,22 @@ def test_save_empty_index_errors(tmp_path):
 
 
 def test_engine_cold_start_from_artifact(tmp_path, corpus):
-    from repro.serve import ServeEngine
+    from repro.serve import ServeEngine, load_engine
     docs, queries = corpus
     idx = build_index(IndexSpec(method="int8", backend="jnp"), docs, queries)
     want = np.asarray(idx.search(queries, 5)[1])
     path = str(tmp_path / "engine.npz")
     idx.save(path)
-    engine = ServeEngine.from_artifact(path, k=5)
+    # the one loader: load_engine is the supported cold-start adapter
+    engine = load_engine(path, k=5)
     rid = engine.submit(np.asarray(queries))
     got = engine.drain()[rid].ids
     np.testing.assert_array_equal(got, want)
+    # from_artifact survives as a thin alias, but it warns
+    with pytest.warns(DeprecationWarning, match="from_artifact"):
+        engine2 = ServeEngine.from_artifact(path, k=5)
+    rid = engine2.submit(np.asarray(queries))
+    np.testing.assert_array_equal(engine2.drain()[rid].ids, want)
 
 
 # ---------------------------------------------------------------------------
@@ -300,16 +356,15 @@ def test_engine_cold_start_from_artifact(tmp_path, corpus):
 
 
 def _five_indexes(docs, queries):
-    mesh = jax.make_mesh((jax.device_count(),), ("model",))
     yield build_index(IndexSpec(method="dense"), docs)
     yield build_index(IndexSpec(method="int8", backend="jnp"), docs, queries)
     yield build_index(IndexSpec(method="int8", backend="jnp", ivf=(4, 4),
                                 kmeans_iters=3), docs, queries)
     yield build_index(IndexSpec(method="int8", backend="jnp",
-                                shard=ShardSpec()), docs, queries, mesh=mesh)
+                                shard=ShardSpec()), docs, queries)
     yield build_index(IndexSpec(method="int8", backend="jnp", ivf=(4, 4),
                                 kmeans_iters=3, shard=ShardSpec()),
-                      docs, queries, mesh=mesh)
+                      docs, queries)
 
 
 @pytest.mark.slow

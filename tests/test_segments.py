@@ -320,10 +320,24 @@ def test_segmented_artifact_round_trip(tmp_path, data, spec):
     assert 361 not in set(np.asarray(ci).ravel().tolist())
 
 
-def test_mutable_spec_rejects_sharding():
+def test_mutable_spec_composes_with_sharding(data):
+    # mutable=True × shard= used to be rejected; the placement redesign
+    # makes them compose — a SegmentedIndex over a sharded main, serving
+    # identical results to the same spec unsharded
     from repro.retrieval import ShardSpec
-    with pytest.raises(ValueError, match="mutable"):
-        IndexSpec(method="int8", mutable=True, shard=ShardSpec())
+    spec = IndexSpec(method="int8", backend="jnp", mutable=True,
+                     shard=ShardSpec(shards=1))
+    idx = build_index(spec, data["docs"], data["queries"])
+    assert isinstance(idx, SegmentedIndex)
+    plain = build_index(
+        IndexSpec(method="int8", backend="jnp", mutable=True),
+        data["docs"], data["queries"])
+    idx.add(data["extra"])
+    plain.add(data["extra"])
+    vs, is_ = idx.search(data["queries"], K)
+    vp, ip = plain.search(data["queries"], K)
+    np.testing.assert_array_equal(np.asarray(is_), np.asarray(ip))
+    np.testing.assert_array_equal(np.asarray(vs), np.asarray(vp))
 
 
 def test_topk_merge_helpers_shared():

@@ -1,0 +1,264 @@
+"""RetrievalService over sharded indexes: bit-parity, atomic staging.
+
+Acceptance contract (ISSUE 10): the front door serving a sharded index
+returns results bit-identical to single-host — ids AND raw score bytes —
+on every scorer backend, *including* through a mid-traffic ``update()``
+and ``compact()``; multi-shard staging promotes all shards or none; the
+stats rollup reports per-shard docs/lists/delta.
+
+The parity matrix runs in a subprocess with forced host devices (the
+``XLA_FLAGS`` flag must land before jax initialises, which the pytest
+process is long past); parametrized tests assert on its per-backend
+verdict lines.  The in-process tests cover the pieces that work on any
+device count: shard=1 placement, the all-or-none staging seam
+(``SHARD_PLACEMENT_HOOK``), register atomicity, and the typed stats
+schema.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, SRC)
+
+BACKENDS = ("float", "fp16", "int8", "onebit")
+
+_CHECK_ALL = """
+    import dataclasses
+    import os
+    import tempfile
+
+    import numpy as np
+
+    import repro.parallel.placement as placement
+    from repro.retrieval.api import (IndexSpec, ShardSpec, build_index,
+                                     save_index)
+    from repro.serve import QueryOptions, RetrievalService
+
+    rng = np.random.default_rng(0)
+    docs = np.asarray(rng.standard_normal((515, 64)), np.float32)
+    queries = np.asarray(rng.standard_normal((64, 64)), np.float32)
+    extra = np.asarray(rng.standard_normal((24, 64)), np.float32)
+    BASE = (("CenterNorm", {}), ("PCA", {"dim": 32}))
+    TAILS = {"float": (), "fp16": (("FloatCast", {}),),
+             "int8": (("Int8Quantizer", {}),),
+             "onebit": (("OneBitQuantizer", {"offset": 0.5}),)}
+
+    for name, tail in TAILS.items():
+        spec = IndexSpec(stages=BASE + tail, ivf=(12, 6), backend="jnp",
+                         mutable=True)
+        svc = RetrievalService()
+        svc.register("single", index=build_index(spec, docs, queries[:16]))
+        svc.register("sharded", index=build_index(
+            dataclasses.replace(spec, shard=ShardSpec(shards=4)),
+            docs, queries[:16]))
+        ok = True
+
+        def check():
+            global ok
+            out = {}
+            for ix in ("single", "sharded"):
+                res = svc.query(queries[:12],
+                                QueryOptions(index=ix, k=10)).result(
+                                    timeout=600)
+                out[ix] = (np.asarray(res.ids), res.scores.tobytes())
+            ok &= np.array_equal(out["single"][0], out["sharded"][0])
+            ok &= out["single"][1] == out["sharded"][1]
+
+        check()                                     # clean stream
+        for ix in ("single", "sharded"):            # live delta lands
+            svc.update(ix, add=extra)
+        for ix in ("single", "sharded"):
+            svc.update(ix, delete=range(515, 527))
+        check()
+        for ix in ("single", "sharded"):            # fold + re-shard
+            svc.compact(ix)
+        check()
+        stats = svc.stats()
+        lost = (stats["requests_submitted"] - stats["requests_served"]
+                + stats["queue_depth"])
+        svc.close()
+        print(f"BACKEND {name} parity={ok} lost={lost}")
+
+    # all-or-none staging: shard 2 of 4 fails placement → registry
+    # untouched; the retried stage promotes and serves identically
+    spec = IndexSpec(stages=BASE + (("Int8Quantizer", {}),), ivf=(12, 6),
+                     backend="jnp")
+    idx = build_index(spec, docs, queries[:16])
+    art = os.path.join(tempfile.mkdtemp(), "kb.npz")
+    save_index(idx, art)
+    svc = RetrievalService()
+    svc.register("kb", artifact=art, shard=ShardSpec(shards=4))
+
+    def hook(shard_id, n_shards):
+        if shard_id == 2:
+            raise RuntimeError("injected shard-2 placement failure")
+
+    placement.SHARD_PLACEMENT_HOOK = hook
+    failed = False
+    try:
+        svc.stage("kb", artifact=art, shard=ShardSpec(shards=4))
+    except RuntimeError:
+        failed = True
+    placement.SHARD_PLACEMENT_HOOK = None
+    st = svc.stats()["indexes"]["kb"]
+    clean = (st["staged"] is None and st["live"] == 1
+             and sorted(st["versions"]) == [1])
+    vid = svc.stage("kb", artifact=art, shard=ShardSpec(shards=4))
+    svc.promote("kb")
+    res = svc.query(queries[:8],
+                    QueryOptions(index="kb", k=10)).result(timeout=600)
+    v0, i0 = idx.search(queries[:8], 10)
+    same = (np.array_equal(np.asarray(i0), res.ids)
+            and np.asarray(v0).tobytes() == res.scores.tobytes())
+    rollup = svc.stats()["indexes"]["kb"]["versions"][vid].get("shards")
+    svc.close()
+    print(f"ATOMIC failed={failed} clean={clean} promoted_same={same} "
+          f"shards={len(rollup or [])}")
+"""
+
+
+@pytest.fixture(scope="module")
+def service_parity_output():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(_CHECK_ALL)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sharded_service_bit_parity(service_parity_output, backend):
+    """Sharded serving ≡ single-host in ids and score bytes, through a
+    live update and a compaction, with zero lost requests."""
+    assert f"BACKEND {backend} parity=True lost=0" in service_parity_output
+
+
+@pytest.mark.slow
+def test_multi_shard_promote_all_or_none(service_parity_output):
+    """One failing shard aborts the whole stage (registry untouched); the
+    retried stage promotes and serves the same bytes as the artifact."""
+    assert ("ATOMIC failed=True clean=True promoted_same=True shards=4"
+            in service_parity_output)
+
+
+# ---------------------------------------------------------------------------
+# in-process: placement seam, register atomicity, typed stats
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def corpus():
+    rng = np.random.default_rng(7)
+    docs = rng.standard_normal((200, 32)).astype(np.float32)
+    queries = rng.standard_normal((8, 32)).astype(np.float32)
+    return docs, queries
+
+
+@pytest.fixture()
+def artifact(tmp_path, corpus):
+    from repro.retrieval.api import IndexSpec, build_index, save_index
+    docs, queries = corpus
+    idx = build_index(IndexSpec(method="int8", backend="jnp", post=False),
+                      docs, queries)
+    path = str(tmp_path / "kb.npz")
+    save_index(idx, path)
+    return path, idx
+
+
+def test_register_shard_places_and_rolls_up(artifact, corpus):
+    from repro.retrieval.api import ShardSpec
+    from repro.serve import QueryOptions, RetrievalService
+    path, idx = artifact
+    _, queries = corpus
+    with RetrievalService(start=False) as svc:
+        svc.register("kb", artifact=path, shard=ShardSpec(shards=1))
+        h = svc.query(queries, QueryOptions(index="kb", k=5))
+        svc.drain_once()
+        res = h.result(timeout=30)
+        want_v, want_i = idx.search(queries, 5)
+        np.testing.assert_array_equal(res.ids, np.asarray(want_i))
+        assert res.scores.tobytes() == np.asarray(want_v).tobytes()
+        row = svc.stats()["indexes"]["kb"]["versions"][1]
+        assert [s["n_docs"] for s in row["shards"]] == [len(idx)]
+
+
+def test_register_failure_leaves_registry_clean(tmp_path):
+    from repro.serve import RetrievalService
+    with RetrievalService(start=False) as svc:
+        with pytest.raises(Exception):
+            svc.register("kb", artifact=str(tmp_path / "missing.npz"))
+        assert svc.indexes() == []
+        with pytest.raises(ValueError, match="exactly one"):
+            svc.register("kb")                 # neither index nor artifact
+        assert svc.indexes() == []
+
+
+def test_stage_placement_failure_is_all_or_none(artifact):
+    import repro.parallel.placement as placement
+    from repro.retrieval.api import ShardSpec
+    from repro.serve import RetrievalService
+    path, _ = artifact
+    sh = ShardSpec(shards=1)
+    with RetrievalService(start=False) as svc:
+        svc.register("kb", artifact=path, shard=sh)
+        before = svc.stats()["indexes"]["kb"]
+
+        def hook(shard_id, n_shards):
+            raise RuntimeError("injected placement failure")
+
+        placement.SHARD_PLACEMENT_HOOK = hook
+        try:
+            with pytest.raises(RuntimeError, match="injected"):
+                svc.stage("kb", artifact=path, shard=sh)
+        finally:
+            placement.SHARD_PLACEMENT_HOOK = None
+        after = svc.stats()["indexes"]["kb"]
+        assert after["staged"] is None
+        assert after["live"] == before["live"]
+        assert sorted(after["versions"]) == sorted(before["versions"])
+        # the seam clears → the same stage succeeds and promotes
+        svc.stage("kb", artifact=path, shard=sh)
+        assert svc.promote("kb") == 3          # vid 2 was burned by the abort
+
+
+def test_stats_typed_matches_dict_shape(artifact, corpus):
+    from repro.retrieval.api import ShardSpec
+    from repro.serve import (QueryOptions, RetrievalService, ServiceStats,
+                             ShardStats, VersionStats)
+    path, _ = artifact
+    _, queries = corpus
+    with RetrievalService(start=False) as svc:
+        svc.register("kb", artifact=path, shard=ShardSpec(shards=1))
+        h = svc.query(queries, QueryOptions(index="kb", k=5))
+        svc.drain_once()
+        h.result(timeout=30)
+        typed = svc.stats_typed()
+        assert isinstance(typed, ServiceStats)
+        vs = typed.indexes["kb"].versions[1]
+        assert isinstance(vs, VersionStats)
+        assert all(isinstance(s, ShardStats) for s in vs.shards)
+        # the plain dict is exactly the typed snapshot flattened — same
+        # keys, same values (no traffic can land between the two calls
+        # on a start=False service)
+        assert typed.to_dict() == svc.stats()
+
+
+def test_mesh_kwarg_deprecated_on_load(artifact):
+    import jax
+    from repro.retrieval.api import ShardSpec, load_index
+    from repro.retrieval.sharded import ShardedCompressedIndex
+    path, idx = artifact
+    mesh = jax.make_mesh((jax.device_count(),), ("model",))
+    with pytest.warns(DeprecationWarning, match="mesh"):
+        out = load_index(path, mesh=mesh, shard=ShardSpec())
+    assert isinstance(out, ShardedCompressedIndex)
